@@ -1,0 +1,34 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import csv
+import io
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    """Returns (result, best_us_per_call)."""
+    fn(*args, **kw)  # warmup / compile
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return out, best
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_csv(relpath: str, header: list[str], rows: list[list]):
+    path = RESULTS / relpath
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path

@@ -1,0 +1,58 @@
+"""§Roofline: aggregate the dry-run JSONs into the roofline table.
+
+For each (arch x shape x mesh): the three roofline terms (seconds), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and HBM per device. Reads
+results/dryrun/*.json (produced by scripts/run_dryruns.py); single-pod rows
+form the §Roofline table, multi-pod rows prove the pod axis shards.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import RESULTS, write_csv
+
+DRYRUN = RESULTS / "dryrun"
+
+
+def load_rows(mesh_tag: str = "single"):
+    rows = []
+    for path in sorted(DRYRUN.glob(f"*__{mesh_tag}.json")):
+        d = json.loads(path.read_text())
+        arch, shape = d["arch"], d["shape"]
+        if d["status"] != "ok":
+            rows.append([arch, shape, d.get("mesh", mesh_tag), d["status"]] + [""] * 8)
+            continue
+        r = d["roofline"]
+        rows.append([
+            arch, shape, d["mesh"], "ok",
+            f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+            f"{r['collective_s']:.3e}", r["dominant"],
+            f"{d['useful_flops_ratio']:.3f}",
+            d["memory"]["peak_hbm_gib_per_dev"],
+            f"{d['cost']['flops_per_dev']:.3e}",
+            f"{d['collectives']['bytes']['total']:.3e}",
+        ])
+    return rows
+
+
+HEADER = ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+          "collective_s", "dominant", "useful_flops_ratio", "hbm_gib_per_dev",
+          "flops_per_dev", "coll_bytes_per_dev"]
+
+
+def roofline_table():
+    import time
+    t0 = time.perf_counter()
+    single = load_rows("single")
+    multi = load_rows("multi")
+    write_csv("roofline.csv", HEADER, single + multi)
+    us = (time.perf_counter() - t0) * 1e6
+    ok = [r for r in single if r[3] == "ok"]
+    if not ok:
+        return us, "no dry-run results yet (run scripts/run_dryruns.py)"
+    from collections import Counter
+    dom = Counter(r[7] for r in ok)
+    derived = (f"{len(ok)} single-pod cells ok, {len(multi)} multi rows; "
+               f"dominant terms: " + " ".join(f"{k}={v}" for k, v in dom.items()))
+    return us, derived

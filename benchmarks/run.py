@@ -1,0 +1,44 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (per repo convention).
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--budget small|full]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--budget", default="small", choices=["small", "full"])
+    args = ap.parse_args()
+
+    from .paper_figures import ALL, table3_llm_case_study
+    from .roofline import roofline_table
+
+    benches = dict(ALL)
+    benches["table3_llm_case_study"] = lambda: table3_llm_case_study(args.budget)
+    benches["roofline_table"] = roofline_table
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            us, derived = fn()
+            from .common import emit
+            emit(name, us, derived.replace(",", ";"))
+        except Exception as e:
+            failed.append(name)
+            print(f"{name},nan,FAILED: {e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Batched serving demo: prefill a batch of prompts, then decode step-by-step
+with the KV cache — the serve_step the decode_32k dry-run cells lower.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch yi-6b --decode 32
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.smoke import smoke_config
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode", type=int, default=32)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (default: reduced smoke config)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full_size else smoke_config(args.arch)
+    api = build_model(cfg, remat=False)
+    params = api.init(jax.random.key(0))
+
+    B, P, D = args.batch, args.prompt_len, args.decode
+    prompts = jax.random.randint(jax.random.key(1), (B, P), 2, cfg.vocab_size)
+
+    # --- prefill: teacher-forced forward fills logits; we then replay the
+    # prompt through decode_step to warm the KV cache (prefill-by-decode,
+    # simplest cache-consistent path for a demo) ---
+    prefill = jax.jit(make_prefill_step(api))
+    serve = jax.jit(make_serve_step(api))
+
+    t0 = time.time()
+    last_logits = prefill(params, {"tokens": prompts})
+    last_logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    cache = api.init_cache(B, P + D)
+    for i in range(P):
+        _, cache = serve(params, cache, {"tokens": prompts[:, i : i + 1]},
+                         jnp.asarray(i, jnp.int32))
+
+    # --- batched greedy decode ---
+    tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    t0 = time.time()
+    for i in range(D):
+        logits, cache = serve(params, cache, {"tokens": tok},
+                              jnp.asarray(P + i, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.concatenate(generated, axis=1)
+    print(f"arch={cfg.name} ({'full' if args.full_size else 'smoke'} config)")
+    print(f"prefill: {B} x {P} tokens in {t_prefill*1e3:.1f} ms "
+          f"({B*P/t_prefill:.0f} tok/s)")
+    print(f"decode : {B} x {D} tokens in {t_decode*1e3:.1f} ms "
+          f"({B*D/t_decode:.0f} tok/s)")
+    print("sample generations (token ids):")
+    for b in range(min(B, 3)):
+        print(f"  req{b}: {list(map(int, gen[b, :12]))} ...")
+
+
+if __name__ == "__main__":
+    main()

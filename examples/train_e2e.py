@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""End-to-end training driver: a ~125M-parameter llama-family model trained
+for a few hundred steps on the deterministic synthetic pipeline, through the
+fault-tolerant controller (periodic async checkpoints, straggler monitor,
+resume-on-restart).
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+    # kill it mid-run and re-run the same command: it resumes and the loss
+    # curve continues exactly where it left off.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import adamw
+from repro.runtime import TrainController
+
+
+def model_100m():
+    """~125M params: yi-6b family scaled down."""
+    return dataclasses.replace(
+        get_config("yi-6b"), n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=8192)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_e2e")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    api = build_model(cfg, remat=False)
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree.leaves(jax.eval_shape(
+                       lambda: api.init(jax.random.key(0)))))
+    print(f"model: {cfg.name}-100m, {n_params/1e6:.1f}M params, "
+          f"batch {args.batch} x seq {args.seq}")
+
+    train_step, opt_init = make_train_step(api, optimizer=adamw(lr=1e-3))
+    ds = SyntheticLMDataset(cfg, batch=args.batch, seq=args.seq, seed=0)
+    ctrl = TrainController(
+        train_step=jax.jit(train_step, donate_argnums=(0, 1)),
+        init_params=lambda: api.init(jax.random.key(0)),
+        opt_init=opt_init,
+        dataset=ds,
+        ckpt_dir=args.ckpt_dir,
+        checkpoint_every=args.ckpt_every,
+    )
+
+    t0 = time.time()
+    res = ctrl.run(total_steps=args.steps)
+    dt = time.time() - t0
+    done = args.steps - (res.resumed_from or 0)
+    print(f"\ntrained {done} steps in {dt:.1f}s "
+          f"({done * args.batch * args.seq / dt:.0f} tok/s)"
+          + (f", resumed from step {res.resumed_from}" if res.resumed_from else ""))
+    k = max(len(res.losses) // 10, 1)
+    for i in range(0, len(res.losses), k):
+        print(f"  step {(res.resumed_from or 0) + i:4d}  loss {res.losses[i]:.4f}")
+    print(f"  step {args.steps:4d}  loss {res.losses[-1]:.4f}")
+    if res.straggler_events:
+        print(f"straggler events: {res.straggler_events}")
+    assert res.losses[-1] < res.losses[0], "loss must decrease"
+    print("OK: loss decreased; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

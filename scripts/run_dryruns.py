@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Drive the full dry-run sweep: every (arch x shape) cell on single-pod and
+multi-pod meshes, one subprocess per cell-mesh (fresh device state), with
+bounded parallelism. Skips cells whose JSON already exists unless --force.
+
+    PYTHONPATH=src python scripts/run_dryruns.py --jobs 3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor, as_completed
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+from repro.configs import ASSIGNED, SHAPES, cell_applicable  # noqa: E402
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "results" / "dryrun"
+
+
+def run_one(arch: str, shape: str, mesh: str, timeout: int) -> dict:
+    tag = {"single": "single", "multi": "multi"}[mesh]
+    path = OUT / f"{arch}__{shape}__{tag}.json"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", str(OUT)]
+    t0 = time.time()
+    try:
+        proc = subprocess.run(
+            cmd, cwd=ROOT, capture_output=True, text=True, timeout=timeout,
+            env={**__import__("os").environ, "PYTHONPATH": str(ROOT / "src")})
+        ok = proc.returncode == 0 and path.exists()
+        err = "" if ok else (proc.stderr.strip().splitlines()[-1:] or ["?"])[0][:300]
+    except subprocess.TimeoutExpired:
+        ok, err = False, f"timeout({timeout}s)"
+    return {"arch": arch, "shape": shape, "mesh": mesh, "ok": ok,
+            "err": err, "wall_s": round(time.time() - t0, 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only-arch", default=None)
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    for arch in ASSIGNED:
+        if args.only_arch and arch != args.only_arch:
+            continue
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                tag = mesh
+                path = OUT / f"{arch}__{shape}__{tag}.json"
+                if path.exists() and not args.force:
+                    try:
+                        if json.loads(path.read_text()).get("status", "").startswith(
+                                ("ok", "skipped")):
+                            continue
+                    except Exception:
+                        pass
+                cells.append((arch, shape, mesh))
+
+    print(f"{len(cells)} cell-mesh runs queued, {args.jobs} workers")
+    results = []
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        futs = {ex.submit(run_one, a, s, m, args.timeout): (a, s, m)
+                for a, s, m in cells}
+        for fut in as_completed(futs):
+            r = fut.result()
+            mark = "OK " if r["ok"] else "FAIL"
+            print(f"[{mark}] {r['arch']} x {r['shape']} x {r['mesh']} "
+                  f"({r['wall_s']}s) {r['err']}", flush=True)
+            results.append(r)
+
+    fails = [r for r in results if not r["ok"]]
+    print(f"\n{len(results) - len(fails)}/{len(results)} succeeded")
+    for r in fails:
+        print(f"  FAIL {r['arch']} x {r['shape']} x {r['mesh']}: {r['err']}")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+"""AccelCIM reproduction: CIM dataflow DSE + multi-pod JAX LM framework."""
+__version__ = "1.0.0"
+
+from . import configs, core
+
+__all__ = ["configs", "core", "__version__"]

@@ -1,0 +1,6 @@
+"""Checkpointing: sync/async save, elastic restore."""
+from .checkpoint import (AsyncCheckpointer, latest_step, load_checkpoint,
+                         restore_to_shardings, save_checkpoint)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "load_checkpoint",
+           "restore_to_shardings", "save_checkpoint"]

@@ -1,0 +1,156 @@
+"""Checkpointing with elastic restore.
+
+Checkpoints store LOGICAL arrays (gathered to host, one .npy per leaf plus
+a manifest), never physical shardings — so a checkpoint written from a
+16x16 mesh restores onto 2x16x16, 8x8, or a single CPU device: the restore
+path re-applies whatever sharding rules the *new* mesh dictates
+(`restore_to_shardings`). This is the elastic-rescale primitive.
+
+AsyncCheckpointer snapshots to host (device_get) synchronously — the only
+part that must block the step loop — then writes in a background thread,
+keeping checkpoint stalls to the copy time.
+
+Format: <dir>/step_<N>/manifest.json + arrays.npz  (atomic via tmp+rename).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten(tree: Any):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                        for k in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any,
+                    extra: dict | None = None) -> Path:
+    directory = Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat = _flatten(tree)
+    arrays, meta = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        # store raw bytes: ml_dtypes (bfloat16, fp8) do not survive npz
+        arrays[k] = np.frombuffer(a.tobytes(), dtype=np.uint8)
+        meta[k] = {"dtype": a.dtype.name, "shape": list(a.shape)}
+    np.savez(tmp / "arrays.npz", **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "keys": list(arrays.keys()),
+        "meta": meta,
+        "treedef": str(treedef),
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str | Path) -> int | None:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in directory.glob("step_*"))
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(directory: str | Path, like: Any, step: int | None = None):
+    """Restore into the structure of `like` (host numpy leaves).
+    Returns (step, tree, extra)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = directory / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    arrays = np.load(d / "arrays.npz")
+    flat_like = _flatten(like)
+    assert set(flat_like) == set(manifest["keys"]), (
+        "checkpoint/model structure mismatch:"
+        f" extra={set(manifest['keys']) - set(flat_like)}"
+        f" missing={set(flat_like) - set(manifest['keys'])}")
+    restored_flat = {}
+    for k in flat_like:
+        m = manifest["meta"][k]
+        restored_flat[k] = np.frombuffer(
+            arrays[k].tobytes(), dtype=_np_dtype(m["dtype"])
+        ).reshape(m["shape"])
+    leaves_order = [restored_flat[k] for k in _flatten(like).keys()]
+    treedef = jax.tree_util.tree_structure(like)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves_order)
+    return step, tree, manifest.get("extra", {})
+
+
+def restore_to_shardings(tree: Any, shardings: Any):
+    """Elastic restore: place host arrays onto a (possibly different) mesh."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously, write in the background."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_error: Exception | None = None
+
+    def save(self, step: int, tree: Any, extra: dict | None = None):
+        self.wait()
+        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            try:
+                save_checkpoint(self.directory, step, snapshot, extra)
+                self._gc()
+            except Exception as e:  # pragma: no cover - surfaced via last_error
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.directory.glob("step_*"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:08d}", ignore_errors=True)

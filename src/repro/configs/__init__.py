@@ -1,0 +1,66 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+10 assigned architectures + the paper's own case-study models.
+"""
+from __future__ import annotations
+
+from .base import ArchConfig, HybridConfig, MLAConfig, MoEConfig, SSMConfig
+from .deepseek_v3_671b import CONFIG as DEEPSEEK_V3_671B
+from .gemma2_27b import CONFIG as GEMMA2_27B
+from .mamba2_780m import CONFIG as MAMBA2_780M
+from .moonshot_v1_16b_a3b import CONFIG as MOONSHOT_V1_16B_A3B
+from .paper_models import GPT3_175B, LLAMA3_8B, LLAMA3_70B, PAPER_MODELS, QWEN3_0_6B
+from .qwen2_0_5b import CONFIG as QWEN2_0_5B
+from .qwen2_vl_7b import CONFIG as QWEN2_VL_7B
+from .recurrentgemma_2b import CONFIG as RECURRENTGEMMA_2B
+from .stablelm_1_6b import CONFIG as STABLELM_1_6B
+from .whisper_large_v3 import CONFIG as WHISPER_LARGE_V3
+from .yi_6b import CONFIG as YI_6B
+
+ASSIGNED: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        DEEPSEEK_V3_671B,
+        MOONSHOT_V1_16B_A3B,
+        GEMMA2_27B,
+        YI_6B,
+        QWEN2_0_5B,
+        STABLELM_1_6B,
+        QWEN2_VL_7B,
+        WHISPER_LARGE_V3,
+        MAMBA2_780M,
+        RECURRENTGEMMA_2B,
+    )
+}
+
+REGISTRY: dict[str, ArchConfig] = {**ASSIGNED, **PAPER_MODELS}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch '{name}'; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+# ---------------------------------------------------------------------------
+# Assigned input-shape cells (10 archs x 4 shapes = 40 cells)
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def cell_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """long_500k requires sub-quadratic attention (DESIGN.md §3)."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return False, "skipped(full-attention)"
+    return True, "ok"
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ASSIGNED for s in SHAPES]

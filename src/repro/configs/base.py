@@ -1,0 +1,185 @@
+"""Architecture configuration schema.
+
+One ArchConfig instance fully describes a model: enough structure for
+(a) `repro.models` to build the JAX module, (b) `repro.core.workload` to
+enumerate its GEMM workload for the CIM DSE, and (c) `repro.launch` to
+derive input specs and shardings. Every assigned architecture gets one file
+in this package; `registry()` maps --arch ids to configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal, Optional
+
+AttnKind = Literal["gqa", "mla", "local_global", "none", "rglru_hybrid", "encdec"]
+Family = Literal["dense", "moe", "vlm", "audio", "ssm", "hybrid"]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0            # routed experts
+    top_k: int = 0
+    d_ff_expert: int = 0          # per-expert intermediate size
+    n_shared_experts: int = 0
+    first_k_dense: int = 0        # leading dense layers (DeepSeek-style)
+    dense_d_ff: int = 0           # d_ff of those dense layers
+    router_scale: float = 1.0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    lru_width: int = 2560
+    window: int = 2048
+    pattern: tuple = ("rec", "rec", "attn")  # RecurrentGemma 1:2 attn:rec
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0
+    attn: AttnKind = "gqa"
+    # attention details
+    qkv_bias: bool = False
+    sliding_window: int = 0           # >0: local layers use this window
+    local_global_alternate: bool = False
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    rope_theta: float = 10000.0
+    partial_rotary: float = 1.0       # fraction of head_dim rotated
+    mrope: bool = False               # multimodal rotary (Qwen2-VL)
+    # extras
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    n_mtp: int = 0                    # multi-token-prediction heads (DSv3)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    max_decoder_len: int = 448        # whisper decoder cap
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    act: str = "silu"
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ------------------------------------------------------------------
+    @property
+    def is_attention_free(self) -> bool:
+        return self.attn == "none"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode cost is sub-quadratic in context (SSM / hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+    def scaled(self, **over) -> "ArchConfig":
+        """Reduced config of the same family (smoke tests)."""
+        return dataclasses.replace(self, **over)
+
+    def param_count(self) -> int:
+        """Matmul + embedding parameter count (analytic; validated against
+        instantiated smoke models in tests)."""
+        d = self.d_model
+        total = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * d  # lm head
+        layers = self.n_layers + (self.n_enc_layers if self.enc_dec else 0)
+        for li in range(self.n_layers):
+            total += self._attn_params(li) + self._mlp_params(li)
+        if self.enc_dec:
+            for li in range(self.n_enc_layers):
+                total += self._attn_params(li) + self._mlp_params(li)
+                total += self._attn_params(li)  # cross-attention in decoder
+        if self.n_mtp:
+            total += self.n_mtp * (self._attn_params(self.n_layers - 1)
+                                   + self._mlp_params(self.n_layers - 1) + 2 * d * d)
+        _ = layers
+        return total
+
+    def _attn_params(self, li: int) -> int:
+        d, hd = self.d_model, self.head_dim
+        if self.attn == "none":
+            s = self.ssm
+            din = s.d_inner(d)
+            return d * (2 * din + 2 * s.n_groups * s.d_state + s.n_heads(d)) + din * d
+        if self.attn == "rglru_hybrid":
+            h = self.hybrid
+            if h.pattern[li % len(h.pattern)] == "rec":
+                return d * h.lru_width * 2 + h.lru_width * d
+            q = d * self.n_heads * hd
+            kv = 2 * d * self.n_kv_heads * hd
+            return q + kv + self.n_heads * hd * d
+        if self.attn == "mla":
+            m = self.mla
+            qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+            p = d * m.q_lora_rank + m.q_lora_rank * self.n_heads * qk_hd
+            p += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            p += m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+            p += self.n_heads * m.v_head_dim * d
+            return p
+        q = d * self.n_heads * hd
+        kv = 2 * d * self.n_kv_heads * hd
+        return q + kv + self.n_heads * hd * d
+
+    def _mlp_params(self, li: int) -> int:
+        d = self.d_model
+        if self.attn == "none":
+            return 0
+        if self.moe is not None:
+            if li < self.moe.first_k_dense:
+                return 3 * d * self.moe.dense_d_ff
+            p = d * self.moe.n_experts  # router
+            p += self.moe.n_experts * 3 * d * self.moe.d_ff_expert
+            p += self.moe.n_shared_experts * 3 * d * self.moe.d_ff_expert
+            return p
+        gated = 3 if self.act in ("silu", "geglu", "swiglu") else 2
+        return gated * d * self.d_ff
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE: routed top-k only)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        total = self.param_count()
+        for li in range(self.n_layers):
+            if li >= self.moe.first_k_dense:
+                inactive = (self.moe.n_experts - self.moe.top_k) * 3 * d * self.moe.d_ff_expert
+                total -= inactive
+        return total

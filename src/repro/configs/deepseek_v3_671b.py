@@ -1,0 +1,21 @@
+"""DeepSeek-V3 671B — MoE, MLA attention, MTP. [arXiv:2412.19437; hf]"""
+from .base import ArchConfig, MLAConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=2048,                # MoE expert intermediate size (assigned spec)
+    vocab_size=129280,
+    attn="mla",
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=256, top_k=8, d_ff_expert=2048,
+                  n_shared_experts=1, first_k_dense=3, dense_d_ff=18432),
+    n_mtp=1,
+    rope_theta=10000.0,
+)

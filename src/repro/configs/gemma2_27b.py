@@ -1,0 +1,22 @@
+"""Gemma-2 27B — local+global alternating attention, logit softcap. [arXiv:2408.00118]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma2-27b",
+    family="dense",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256000,
+    attn="local_global",
+    local_global_alternate=True,
+    sliding_window=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    tie_embeddings=True,
+    act="geglu",
+    rope_theta=10000.0,
+)

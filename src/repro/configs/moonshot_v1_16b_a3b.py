@@ -1,0 +1,18 @@
+"""Moonlight-16B-A3B (Kimi/Moonshot) — MoE 64e top-6. [hf:moonshotai/Moonlight-16B-A3B]"""
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,                # expert intermediate size (assigned spec)
+    vocab_size=163840,
+    attn="gqa",
+    moe=MoEConfig(n_experts=64, top_k=6, d_ff_expert=1408,
+                  n_shared_experts=2, first_k_dense=1, dense_d_ff=11264),
+    rope_theta=50000.0,
+)

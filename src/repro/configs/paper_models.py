@@ -1,0 +1,24 @@
+"""The paper's own case-study models (Section 4.2/4.4, Table 3)."""
+from .base import ArchConfig
+
+QWEN3_0_6B = ArchConfig(
+    name="qwen3-0.6b", family="dense", n_layers=28, d_model=1024,
+    n_heads=16, n_kv_heads=8, head_dim=128, d_ff=3072, vocab_size=151936,
+    attn="gqa", tie_embeddings=True, rope_theta=1000000.0,
+)
+LLAMA3_8B = ArchConfig(
+    name="llama3-8b", family="dense", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14336, vocab_size=128256,
+    attn="gqa", rope_theta=500000.0,
+)
+LLAMA3_70B = ArchConfig(
+    name="llama3-70b", family="dense", n_layers=80, d_model=8192,
+    n_heads=64, n_kv_heads=8, head_dim=128, d_ff=28672, vocab_size=128256,
+    attn="gqa", rope_theta=500000.0,
+)
+GPT3_175B = ArchConfig(
+    name="gpt3-175b", family="dense", n_layers=96, d_model=12288,
+    n_heads=96, n_kv_heads=96, head_dim=128, d_ff=49152, vocab_size=50257,
+    attn="gqa", act="gelu", rope_theta=0.0,
+)
+PAPER_MODELS = {m.name: m for m in (QWEN3_0_6B, LLAMA3_8B, LLAMA3_70B, GPT3_175B)}

@@ -1,0 +1,19 @@
+"""Qwen2-VL-7B backbone — M-RoPE; vision frontend is a stub (input_specs
+ships precomputed patch embeddings). [arXiv:2409.12191]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    attn="gqa",
+    qkv_bias=True,
+    mrope=True,
+    rope_theta=1000000.0,
+)

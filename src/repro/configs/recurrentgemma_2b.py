@@ -1,0 +1,18 @@
+"""RecurrentGemma-2B — RG-LRU + local attention, 1 attn : 2 recurrent. [arXiv:2402.19427]"""
+from .base import ArchConfig, HybridConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    attn="rglru_hybrid",
+    hybrid=HybridConfig(lru_width=2560, window=2048, pattern=("rec", "rec", "attn"), conv_width=4),
+    act="geglu",
+    tie_embeddings=True,
+)

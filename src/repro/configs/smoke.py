@@ -1,0 +1,79 @@
+"""Reduced same-family configs for CPU smoke tests and examples.
+
+Each keeps the structural features of its full-size counterpart (MoE
+routing, MLA, local/global alternation, SSD, RG-LRU pattern, enc-dec) at
+laptop scale. The FULL configs are exercised only via the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import get_config
+from .base import ArchConfig, HybridConfig, MLAConfig, MoEConfig, SSMConfig
+
+_SMOKE_OVERRIDES: dict[str, dict] = {
+    "deepseek-v3-671b": dict(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=32, vocab_size=256,
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16),
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32,
+                      n_shared_experts=1, first_k_dense=1, dense_d_ff=64),
+        n_mtp=1,
+    ),
+    "moonshot-v1-16b-a3b": dict(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=32, vocab_size=256,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32,
+                      n_shared_experts=2, first_k_dense=1, dense_d_ff=64),
+    ),
+    "gemma2-27b": dict(
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, sliding_window=32,
+    ),
+    "yi-6b": dict(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+    ),
+    "qwen2-0.5b": dict(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+    ),
+    "stablelm-1.6b": dict(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256,
+    ),
+    "qwen2-vl-7b": dict(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+    ),
+    "whisper-large-v3": dict(
+        n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=256, max_decoder_len=32,
+    ),
+    "mamba2-780m": dict(
+        n_layers=2, d_model=64, vocab_size=256,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16,
+                      n_groups=1, chunk=16),
+    ),
+    "recurrentgemma-2b": dict(
+        n_layers=5, d_model=64, n_heads=2, n_kv_heads=1, head_dim=32,
+        d_ff=128, vocab_size=256,
+        hybrid=HybridConfig(lru_width=64, window=16,
+                            pattern=("rec", "rec", "attn"), conv_width=4),
+    ),
+    # paper case-study models
+    "qwen3-0.6b": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                       head_dim=16, d_ff=128, vocab_size=256),
+    "llama3-8b": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      head_dim=16, d_ff=128, vocab_size=256),
+}
+
+
+def smoke_config(name: str) -> ArchConfig:
+    cfg = get_config(name)
+    over = _SMOKE_OVERRIDES.get(name)
+    if over is None:
+        over = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                    head_dim=16, d_ff=128, vocab_size=256)
+    return dataclasses.replace(cfg, **over)

@@ -1,0 +1,18 @@
+"""StableLM-2 1.6B. [hf:stabilityai/stablelm-2-1_6b; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=5632,
+    vocab_size=100352,
+    attn="gqa",
+    qkv_bias=True,
+    partial_rotary=0.25,
+    rope_theta=10000.0,
+)

@@ -1,0 +1,21 @@
+"""Whisper-large-v3 — encoder-decoder; conv frontend is a stub (input_specs
+ships precomputed frame embeddings). [arXiv:2212.04356; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,              # decoder layers
+    n_enc_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    attn="encdec",
+    enc_dec=True,
+    max_decoder_len=448,
+    act="gelu",
+    rope_theta=0.0,           # learned/sinusoidal positions; no rope
+)

@@ -1,0 +1,181 @@
+"""Gaussian-process Bayesian optimization in pure JAX.
+
+The paper drives its exploration with OpenBox [14]; offline we implement the
+same role ourselves: a GP surrogate (RBF-ARD kernel, Cholesky solves) with
+expected-improvement acquisition over the normalized design-space encoding,
+plus ParEGO-style random Chebyshev scalarization for the multi-objective
+Pareto sweeps. A jitted random-search baseline is kept as the control.
+
+Design points are encoded as vectors of log2-scaled grid coordinates so that
+the multiplicative parameter grids (AL, PC, TL, ...) become uniform.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import design_space as ds
+from .design_space import DesignPoint
+
+# Encoding: continuous unit-cube vector -> snapped grid design point.
+_ENC_FIELDS = ("AL", "LSL", "PC", "PL", "OL", "BR", "BC", "TL", "dataflow", "interconnect")
+_GRIDS = {
+    "AL": ds.AL_CHOICES, "LSL": ds.LSL_CHOICES, "PC": ds.PC_CHOICES,
+    "PL": ds.PL_CHOICES, "OL": ds.OL_CHOICES, "BR": ds.BR_CHOICES,
+    "BC": ds.BC_CHOICES, "TL": ds.TL_CHOICES,
+    "dataflow": ds.DATAFLOW_CHOICES, "interconnect": ds.INTERCONNECT_CHOICES,
+}
+DIM = len(_ENC_FIELDS)
+
+
+def decode(u: jnp.ndarray, fixed: dict | None = None) -> DesignPoint:
+    """Map unit-cube vectors (n, DIM) onto grid design points."""
+    fixed = fixed or {}
+    cols = {}
+    for i, name in enumerate(_ENC_FIELDS):
+        grid = jnp.asarray(_GRIDS[name], dtype=jnp.float32)
+        if name in fixed:
+            cols[name] = jnp.full(u.shape[:-1], float(fixed[name]), jnp.float32)
+        else:
+            idx = jnp.clip((u[..., i] * len(_GRIDS[name])).astype(jnp.int32), 0, len(_GRIDS[name]) - 1)
+            cols[name] = grid[idx]
+    return DesignPoint(**cols)
+
+
+def encode(p: DesignPoint) -> jnp.ndarray:
+    cols = []
+    for name in _ENC_FIELDS:
+        grid = np.asarray(_GRIDS[name], dtype=np.float32)
+        v = np.asarray(getattr(p, name), dtype=np.float32)
+        idx = np.argmin(np.abs(v[..., None] - grid[None, :]), axis=-1)
+        cols.append((idx + 0.5) / len(grid))
+    return jnp.asarray(np.stack(cols, axis=-1))
+
+
+# ----------------------------------------------------------------------------
+# GP surrogate
+# ----------------------------------------------------------------------------
+
+class GP(NamedTuple):
+    x: jnp.ndarray       # (n, d) train inputs
+    chol: jnp.ndarray    # cholesky of K + noise
+    alpha: jnp.ndarray   # K^-1 y
+    y_mean: jnp.ndarray
+    y_std: jnp.ndarray
+    lengthscale: jnp.ndarray
+
+
+def _k(x1, x2, ls):
+    d = (x1[:, None, :] - x2[None, :, :]) / ls
+    return jnp.exp(-0.5 * jnp.sum(d * d, axis=-1))
+
+
+def gp_fit(x: jnp.ndarray, y: jnp.ndarray, noise: float = 1e-4) -> GP:
+    y_mean, y_std = jnp.mean(y), jnp.std(y) + 1e-9
+    yn = (y - y_mean) / y_std
+    # median-heuristic ARD lengthscale
+    med = jnp.median(jnp.abs(x[:, None, :] - x[None, :, :]), axis=(0, 1)) + 1e-3
+    ls = med * jnp.sqrt(float(x.shape[-1]))
+    K = _k(x, x, ls) + noise * jnp.eye(x.shape[0])
+    chol = jnp.linalg.cholesky(K)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), yn)
+    return GP(x, chol, alpha, y_mean, y_std, ls)
+
+
+def gp_predict(gp: GP, xq: jnp.ndarray):
+    kq = _k(xq, gp.x, gp.lengthscale)
+    mu = kq @ gp.alpha
+    v = jax.scipy.linalg.solve_triangular(gp.chol, kq.T, lower=True)
+    var = jnp.clip(1.0 - jnp.sum(v * v, axis=0), 1e-12, None)
+    return mu * gp.y_std + gp.y_mean, jnp.sqrt(var) * gp.y_std
+
+
+def expected_improvement(gp: GP, xq: jnp.ndarray, best: jnp.ndarray) -> jnp.ndarray:
+    mu, sigma = gp_predict(gp, xq)
+    z = (best - mu) / sigma
+    cdf = 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
+    pdf = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+    return (best - mu) * cdf + sigma * pdf
+
+
+# ----------------------------------------------------------------------------
+# Optimizers
+# ----------------------------------------------------------------------------
+
+def bayes_minimize(
+    key: jax.Array,
+    objective: Callable[[DesignPoint], jnp.ndarray],
+    n_init: int = 64,
+    n_iters: int = 24,
+    acq_batch: int = 4,
+    pool: int = 2048,
+    fixed: dict | None = None,
+):
+    """Minimize a scalar objective over the design space with GP-EI.
+
+    `objective` must be a pure, vmappable function DesignPoint -> scalar
+    (lower is better; return jnp.inf / huge for invalid points).
+    Returns (best_point, best_value, history_x, history_y).
+    """
+    fixed = fixed or {}
+    obj_batch = jax.jit(lambda u: objective(decode(u, fixed)))
+
+    k0, key = jax.random.split(key)
+    x = jax.random.uniform(k0, (n_init, DIM))
+    y = obj_batch(x)
+
+    for _ in range(n_iters):
+        kq, key = jax.random.split(key)
+        finite = jnp.isfinite(y)
+        ylog = jnp.where(finite, jnp.log(jnp.maximum(y, 1e-30)),
+                         jnp.max(jnp.where(finite, jnp.log(jnp.maximum(y, 1e-30)), -jnp.inf)) + 2.0)
+        gp = gp_fit(x, ylog)
+        cand = jax.random.uniform(kq, (pool, DIM))
+        ei = expected_improvement(gp, cand, jnp.min(ylog))
+        pick = jnp.argsort(-ei)[:acq_batch]
+        xb = cand[pick]
+        yb = obj_batch(xb)
+        x = jnp.concatenate([x, xb])
+        y = jnp.concatenate([y, yb])
+
+    i = int(jnp.argmin(y))
+    return decode(x[i : i + 1], fixed), y[i], x, y
+
+
+def random_minimize(key, objective, n: int = 4096, fixed: dict | None = None):
+    """Jitted random-search control with the same encoding."""
+    fixed = fixed or {}
+    u = jax.random.uniform(key, (n, DIM))
+    y = jax.jit(lambda u: objective(decode(u, fixed)))(u)
+    i = int(jnp.argmin(y))
+    return decode(u[i : i + 1], fixed), y[i], u, y
+
+
+def parego_pareto(
+    key: jax.Array,
+    objectives: Callable[[DesignPoint], jnp.ndarray],  # point -> (k,) minimized
+    n_weights: int = 16,
+    fixed: dict | None = None,
+    **bo_kw,
+):
+    """Multi-objective search: repeat GP-EI on random Chebyshev
+    scalarizations (ParEGO), pool all evaluations, return them for Pareto
+    extraction by the caller."""
+    all_u, all_f = [], []
+    for i in range(n_weights):
+        kw, key = jax.random.split(key)
+        w = jax.random.dirichlet(kw, jnp.ones(2))
+
+        def scalar(p):
+            f = objectives(p)
+            fl = jnp.log(jnp.maximum(f, 1e-30))
+            return jnp.max(w * fl, axis=-1) + 0.05 * jnp.sum(w * fl, axis=-1)
+
+        _, _, x, _ = bayes_minimize(kw, scalar, fixed=fixed, **bo_kw)
+        all_u.append(x)
+        all_f.append(jax.jit(lambda u: objectives(decode(u, fixed)))(x))
+    return jnp.concatenate(all_u), jnp.concatenate(all_f)

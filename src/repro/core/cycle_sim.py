@@ -1,0 +1,164 @@
+"""Cycle-accurate event simulator for the macro-array dataflows.
+
+This is the fidelity oracle for the closed forms in ``dataflow.py`` — the
+same role the paper's in-house cycle-accurate simulator plays. It simulates
+the macros of one array column as explicit state machines with weight-I/O
+bus contention, reduction-tree synchronization, systolic staggering, and
+per-row weight readiness, at event granularity (numpy; not perf-critical).
+
+Array columns are timing-identical (they process disjoint N-chunks on
+replicated schedules), so a single column of BR macros captures the exact
+round structure; BC scales only the busy/throughput accounting.
+
+Rules per variant (derivation in dataflow.py):
+
+  WS-Broadcast: all macros start a round synchronously (column reduction
+      tree). After computing weight row j for T_c, the column's single
+      weight bus rewrites row j of each macro serially (T_s each). NOL: a
+      macro is busy during its rewrite and the next sync waits for the whole
+      wave -> round = T_c + BR*T_s. OL: the wave hides under the next row's
+      compute -> round = max(T_c, BR*T_s).
+  WS-Systolic: activations enter row r staggered by r*T_s; each macro
+      rewrites its own just-used row immediately. NOL round = T_c + T_s,
+      OL round = max(T_c, T_s).
+  OS-Broadcast: one weight row per round is broadcast (T_s) to all BR
+      macros of the column. NOL round = T_c + T_s; OL prefetches the next
+      row during compute -> round = max(T_c, T_s).
+  OS-Systolic: the weight row hops macro-to-macro. NOL: receive (T_s) +
+      forward (T_s) + compute (T_c) serialize -> round = T_c + 2*T_s.
+      OL: both hops hide under compute -> round = max(T_c, T_s).
+
+``simulate`` returns the end-to-end cycles for n_passes block passes of LSL
+rounds each plus the measured steady-state per-pass cost; tests assert the
+per-pass cost equals the closed form exactly and totals match within
+fill/drain slack.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .design_space import BROADCAST, OS, SYSTOLIC, WS, DesignPoint
+from .dataflow import t_c as _t_c, t_s as _t_s
+
+
+@dataclass
+class SimResult:
+    total_cycles: float
+    per_pass_steady: float
+    compute_busy: float  # sum of compute-busy cycles across the BR x BC array
+
+
+def simulate(p: DesignPoint, n_passes: int) -> SimResult:
+    BR, BC, LSL = int(p.BR), int(p.BC), int(p.LSL)
+    tc, ts = float(_t_c(p)), float(_t_s(p))
+    df, ic, ol = int(p.dataflow), int(p.interconnect), bool(int(p.OL))
+    a = _run(BR, LSL, tc, ts, df, ic, ol, n_passes)
+    b = _run(BR, LSL, tc, ts, df, ic, ol, n_passes + 1)
+    return SimResult(
+        total_cycles=a,
+        per_pass_steady=b - a,
+        compute_busy=n_passes * LSL * tc * BR * BC,
+    )
+
+
+def _run(BR, LSL, tc, ts, df, ic, ol, n_passes) -> float:
+    rounds = n_passes * LSL
+    avail = np.zeros(BR)              # macro busy-until
+    wready = np.zeros((BR, LSL))      # weight slot ready time (per macro)
+    bus_free = 0.0                    # column weight bus / buffer port
+    end = 0.0
+
+    if df == WS and ic == BROADCAST:
+        for j in range(rounds):
+            s = j % LSL
+            start = max(avail.max(), wready[:, s].max())
+            cend = start + tc
+            avail[:] = cend
+            t = max(bus_free, cend)
+            for r in range(BR):
+                uend = t + ts
+                wready[r, s] = uend
+                if not ol:
+                    avail[r] = uend
+                t = uend
+            bus_free = t
+            end = max(end, cend, bus_free)
+
+    elif df == WS and ic == SYSTOLIC:
+        first = np.array([r * ts for r in range(BR)])  # activation stagger
+        port_free = np.zeros(BR)  # each macro's weight-I/O port is serial
+        for j in range(rounds):
+            s = j % LSL
+            for r in range(BR):
+                start = max(avail[r], wready[r, s], first[r] if j == 0 else 0.0)
+                cend = start + tc
+                ustart = max(cend, port_free[r])
+                uend = ustart + ts         # rewrite own row (own link segment)
+                port_free[r] = uend
+                wready[r, s] = uend
+                avail[r] = cend if ol else uend
+                end = max(end, uend)
+
+    elif df == OS and ic == BROADCAST:
+        # wready indexed by round parity slot: row j's weights broadcast once
+        nxt = ts  # first row's broadcast completes at ts
+        bus_free = ts
+        for j in range(rounds):
+            cstart = max(avail.max(), nxt)
+            cend = cstart + tc
+            avail[:] = cend
+            if ol:
+                bstart = max(bus_free, cstart)       # prefetch during compute
+                nxt = bstart + ts
+            else:
+                bstart = max(bus_free, cend)         # port busy blocks macros
+                nxt = bstart + ts
+                avail[:] = nxt                        # macros take part in I/O
+            bus_free = nxt
+            end = max(end, cend, nxt)
+
+    else:  # OS-Systolic
+        if ol:
+            # Dedicated in/out links pipeline one weight row per T_s hop;
+            # transfers hide under compute. arrive(j, r) = when row j is
+            # fully written into macro r.
+            arrive_prev = np.array([(r + 1) * ts for r in range(BR)])  # row 0
+            cend_prev = np.zeros(BR)
+            for j in range(rounds):
+                if j == 0:
+                    arrive = arrive_prev
+                else:
+                    arrive = np.zeros(BR)
+                    up = arrive_prev[0] + ts  # buffer pushes next row
+                    for r in range(BR):
+                        # link (r-1 -> r) free after it moved row j-1
+                        arrive[r] = max(up, arrive_prev[r] + ts)
+                        up = arrive[r] + ts
+                cstart = np.maximum(cend_prev, arrive)
+                cend = cstart + tc
+                end = max(end, float(cend.max()))
+                cend_prev, arrive_prev = cend, arrive
+        else:
+            # Compute-first, single shared I/O port: per row a macro
+            # receives (T_s), computes (T_c), then serves its downstream
+            # neighbor's receive (T_s) -> steady round = T_c + 2*T_s.
+            free = np.zeros(BR)   # macro busy with compute OR a transfer
+            have = np.zeros(BR)   # when macro got the current row
+            buf_free = 0.0
+            for j in range(rounds):
+                for r in range(BR):
+                    src_free = buf_free if r == 0 else free[r - 1]
+                    src_have = 0.0 if r == 0 else have[r - 1]
+                    xs = max(src_have, src_free, free[r])
+                    xe = xs + ts
+                    if r == 0:
+                        buf_free = xe
+                    else:
+                        free[r - 1] = xe
+                    have[r] = xe
+                    cend = xe + tc
+                    free[r] = cend
+                    end = max(end, cend)
+    return end

@@ -1,0 +1,191 @@
+"""Array-level dataflow timing model — the paper's Section 3.2, closed form.
+
+Implements all 8 dataflow variants (WS/OS x Broadcast/Systolic x OL/NOL) as
+pure jnp functions of a DesignPoint and a GEMM (M, K, N), so a vmap over a
+batch of design points evaluates the whole candidate population in one jitted
+call. A cycle-accurate event simulator (``cycle_sim.py``) validates these
+closed forms.
+
+Macro-level primitives (paper eq. 1-2):
+    T_c = TL * IBW/2             cycles to run one weight row against one
+                                 activation block of TL columns
+    T_s = kappa * PC * WBW       cycles to rewrite one weight row
+
+Block-level (paper eq. 3-4):  T_nol = LSL*(T_s+T_c),  T_ol = LSL*max(T_s,T_c)
+
+Array organizations (derived from the paper's Section 3.2 prose):
+
+  WS (weight stationary): array rows split K (AL per row), array cols split N
+  (PC*LSL per col); every macro holds a distinct weight tile; partial sums
+  reduce across the BR rows (column reduction tree for Broadcast, neighbor
+  psum chain for Systolic). Weights stream: each weight row is replaced right
+  after its T_c of use (the large-model regime the paper targets).
+    - Broadcast: one weight-I/O bus per column -> the BR macros of a column
+      update *serially*; with no overlap everyone else idles (paper:
+      "the others in the column are idle").           round = T_c + BR*T_s
+      With OL, next-row compute hides the update wave: round = max(T_c, BR*T_s)
+    - Systolic: activations staggered by T_s across rows, so each macro can
+      always run compute or its own update:            round = T_c + T_s
+      With OL:                                         round = max(T_c, T_s)
+
+  OS (output stationary): array rows split M (TL per row), array cols split N
+  (PC per col); outputs accumulate in-macro across K (AL per round,
+  ceil(K/AL) rounds); all BR macros of a column share the same weight rows.
+    - Broadcast: the shared row is broadcast down the column once:
+                                                       round = T_c + T_s
+      With OL:                                         round = max(T_c, T_s)
+    - Systolic: the row is passed neighbor to neighbor; without overlap a
+      macro serializes receive + forward + compute (the paper's "limited
+      reuse and lower utilization"):                   round = T_c + 2*T_s
+      With OL both passes hide under compute:          round = max(T_c, T_s)
+
+Fill/drain: systolic staggering adds (BR-1) stagger steps per tile pass and
+PL pipeline-fill cycles per block; both are modeled (and are what the cycle
+simulator checks beyond steady state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .design_space import (BROADCAST, IBW, KAPPA, OS, SYSTOLIC, WBW, WS,
+                           DesignPoint)
+
+
+class Gemm(NamedTuple):
+    M: float  # activation columns (tokens)
+    K: float  # reduction dim
+    N: float  # output channels
+    count: float = 1.0  # how many identical GEMMs (e.g. per layer x layers)
+
+    @property
+    def macs(self):
+        return self.M * self.K * self.N * self.count
+
+
+class DataflowTiming(NamedTuple):
+    total_cycles: jnp.ndarray      # end-to-end cycles for the GEMM
+    ideal_cycles: jnp.ndarray      # 100%-utilization lower bound
+    utilization: jnp.ndarray       # ideal / total
+    compute_cycles: jnp.ndarray    # cycles macros spend computing
+    weight_bits: jnp.ndarray       # weight traffic into the array (bits)
+    act_bits: jnp.ndarray          # activation traffic into the array (bits)
+    rounds: jnp.ndarray            # number of (row-compute + update) rounds
+
+
+def t_c(p: DesignPoint) -> jnp.ndarray:
+    return p.TL * (IBW / 2)
+
+
+def t_s(p: DesignPoint) -> jnp.ndarray:
+    return KAPPA * p.PC * WBW
+
+
+def block_cycles_macro(p: DesignPoint) -> jnp.ndarray:
+    """Paper eq. 3-4: cycles for one weight-block x activation-block multiply
+    at macro level."""
+    tc, ts = t_c(p), t_s(p)
+    return jnp.where(p.OL > 0.5, p.LSL * jnp.maximum(tc, ts), p.LSL * (tc + ts))
+
+
+def _round_cycles(p: DesignPoint) -> jnp.ndarray:
+    """Steady-state cycles of one (compute one weight row + make its update
+    happen) round, per the 8-variant table above."""
+    tc, ts = t_c(p), t_s(p)
+    ws_b = jnp.where(p.OL > 0.5, jnp.maximum(tc, p.BR * ts), tc + p.BR * ts)
+    ws_s = jnp.where(p.OL > 0.5, jnp.maximum(tc, ts), tc + ts)
+    os_b = jnp.where(p.OL > 0.5, jnp.maximum(tc, ts), tc + ts)
+    # BR=1 has no downstream neighbor: the forward hop disappears.
+    fwd = jnp.where(p.BR > 1.5, 2.0, 1.0)
+    os_s = jnp.where(p.OL > 0.5, jnp.maximum(tc, ts), tc + fwd * ts)
+    ws = jnp.where(p.interconnect == BROADCAST, ws_b, ws_s)
+    os = jnp.where(p.interconnect == BROADCAST, os_b, os_s)
+    return jnp.where(p.dataflow == WS, ws, os)
+
+
+def _fill_cycles(p: DesignPoint) -> jnp.ndarray:
+    """Per-tile-pass pipeline fill: systolic stagger (BR-1)*T_s plus PL
+    pipeline stages."""
+    stagger = jnp.where(p.interconnect == SYSTOLIC, (p.BR - 1.0) * t_s(p), 0.0)
+    return stagger + p.PL
+
+
+def array_macs_per_cycle(p: DesignPoint) -> jnp.ndarray:
+    return p.BR * p.BC * p.PC * p.AL / (IBW / 2)
+
+
+def gemm_timing(p: DesignPoint, g: Gemm) -> DataflowTiming:
+    """End-to-end cycle count of GEMM (M,K,N) on the array described by p.
+
+    All tile counts are ceilings — edge-tile waste shows up as utilization
+    loss exactly as it would on silicon.
+    """
+    tc = t_c(p)
+    round_c = _round_cycles(p)
+    fill = _fill_cycles(p)
+
+    # ---- WS mapping: rows->K (AL each), cols->N (PC*LSL each), M->TL blocks.
+    ws_nk = jnp.ceil(g.K / (p.BR * p.AL))
+    ws_nn = jnp.ceil(g.N / (p.BC * p.PC * p.LSL))
+    ws_nm = jnp.ceil(g.M / p.TL)
+    ws_tiles = ws_nk * ws_nn * ws_nm
+    ws_rounds = ws_tiles * p.LSL
+    ws_total = ws_rounds * round_c + ws_nk * ws_nn * ws_nm * fill
+    # traffic: weights restream per activation block (streaming regime);
+    # activations restream per N tile.
+    ws_wbits = ws_nm * jnp.minimum(ws_nk * p.BR * p.AL, g.K) * \
+        jnp.minimum(ws_nn * p.BC * p.PC * p.LSL, g.N) * WBW
+    ws_abits = ws_nn * g.M * g.K * IBW
+
+    # ---- OS mapping: rows->M (TL each), cols->N (PC each), K temporal (AL).
+    os_nm = jnp.ceil(g.M / (p.BR * p.TL))
+    os_nn = jnp.ceil(g.N / (p.BC * p.PC))
+    os_kr = jnp.ceil(g.K / p.AL)
+    os_rounds = os_nm * os_nn * os_kr
+    os_total = os_rounds * round_c + os_nm * os_nn * fill
+    # traffic: weights restream per M tile (column-shared: one copy per col);
+    # activations restream per N tile (row-distinct blocks).
+    os_wbits = os_nm * jnp.minimum(os_kr * p.AL, g.K) * \
+        jnp.minimum(os_nn * p.BC * p.PC, g.N) * WBW
+    os_abits = os_nn * g.M * g.K * IBW
+
+    is_ws = p.dataflow == WS
+    rounds = jnp.where(is_ws, ws_rounds, os_rounds)
+    total = jnp.where(is_ws, ws_total, os_total) * g.count
+    compute = rounds * tc * g.count
+    wbits = jnp.where(is_ws, ws_wbits, os_wbits) * g.count
+    abits = jnp.where(is_ws, ws_abits, os_abits) * g.count
+
+    ideal = g.macs / array_macs_per_cycle(p)
+    return DataflowTiming(
+        total_cycles=total,
+        ideal_cycles=ideal,
+        utilization=ideal / jnp.maximum(total, 1.0),
+        compute_cycles=compute,
+        weight_bits=wbits,
+        act_bits=abits,
+        rounds=rounds * g.count,
+    )
+
+
+def workload_timing(p: DesignPoint, gemms: list[Gemm]) -> DataflowTiming:
+    """Sum a list of GEMMs (a model's layer workload) on one design point."""
+    parts = [gemm_timing(p, g) for g in gemms]
+    tot = sum(t.total_cycles for t in parts)
+    ideal = sum(t.ideal_cycles for t in parts)
+    return DataflowTiming(
+        total_cycles=tot,
+        ideal_cycles=ideal,
+        utilization=ideal / jnp.maximum(tot, 1.0),
+        compute_cycles=sum(t.compute_cycles for t in parts),
+        weight_bits=sum(t.weight_bits for t in parts),
+        act_bits=sum(t.act_bits for t in parts),
+        rounds=sum(t.rounds for t in parts),
+    )
+
+
+def overlap_speedup_bound(p: DesignPoint) -> jnp.ndarray:
+    """Paper eq. 5: 1 - max(Ts,Tc)/(Ts+Tc) <= 0.5."""
+    tc, ts = t_c(p), t_s(p)
+    return 1.0 - jnp.maximum(tc, ts) / (tc + ts)

@@ -1,0 +1,168 @@
+"""AccelCIM dataflow design space (paper Table 2).
+
+A *design point* fixes the CIM macro microarchitecture, the macro-array
+organization, and the schedule tile length TL. Points are represented as a
+NamedTuple of (scalar or batched) jnp arrays so every model in
+``repro.core`` vmaps/jits over batches of thousands of candidates — the DSE
+inner loop is itself a JAX program.
+
+Encoding of categorical axes:
+  dataflow:      0 = WS (weight stationary), 1 = OS (output stationary)
+  interconnect:  0 = Broadcast,              1 = Systolic
+  OL:            0 = no compute-I/O overlap, 1 = overlap supported
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Iterable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WS, OS = 0, 1
+BROADCAST, SYSTOLIC = 0, 1
+
+# Candidate grids — paper Table 2 (TL grid from Table 3 usage, DESIGN.md §6).
+AL_CHOICES = (8, 16, 32, 64, 128, 256)
+LSL_CHOICES = (2, 4, 8, 16, 32, 64)
+PC_CHOICES = (2, 4, 8, 16, 32, 64, 128, 256)
+PL_CHOICES = (0, 1, 2, 3, 4, 5)
+OL_CHOICES = (0, 1)
+BR_CHOICES = tuple(range(1, 65))
+BC_CHOICES = tuple(range(1, 65))
+DATAFLOW_CHOICES = (WS, OS)
+INTERCONNECT_CHOICES = (BROADCAST, SYSTOLIC)
+TL_CHOICES = (8, 16, 32, 64, 128, 256, 512)
+
+WBW = 8  # weight bitwidth (paper: fixed 8)
+IBW = 8  # input bitwidth (paper: fixed 8)
+KAPPA = 1.0  # intrinsic weight-write speed (cycles per WBW-bit write step)
+
+
+class DesignPoint(NamedTuple):
+    """One (or a batch of) dataflow design point(s)."""
+
+    AL: jnp.ndarray  # accumulation length (weight cols / K-chunk per macro)
+    LSL: jnp.ndarray  # local storage length (weight rows per bank)
+    PC: jnp.ndarray  # parallel channels (banks)
+    PL: jnp.ndarray  # pipeline level
+    OL: jnp.ndarray  # compute-I/O overlap support
+    BR: jnp.ndarray  # array rows
+    BC: jnp.ndarray  # array cols
+    TL: jnp.ndarray  # activation tile length (schedule)
+    dataflow: jnp.ndarray  # WS / OS
+    interconnect: jnp.ndarray  # BROADCAST / SYSTOLIC
+
+    @property
+    def batch_shape(self):
+        return jnp.shape(self.AL)
+
+    def astuple_int(self):
+        """(LSL, AL, PC, PL, BC, BR, TL) in the paper's Table 3 order."""
+        return tuple(
+            int(x) for x in (self.LSL, self.AL, self.PC, self.PL, self.BC, self.BR, self.TL)
+        )
+
+
+def make_point(
+    AL=64, LSL=2, PC=32, PL=3, OL=0, BR=2, BC=4, TL=64, dataflow=WS, interconnect=SYSTOLIC
+) -> DesignPoint:
+    f = lambda v: jnp.asarray(v, dtype=jnp.float32)
+    return DesignPoint(
+        f(AL), f(LSL), f(PC), f(PL), f(OL), f(BR), f(BC), f(TL), f(dataflow), f(interconnect)
+    )
+
+
+def stack_points(points: Iterable[DesignPoint]) -> DesignPoint:
+    pts = list(points)
+    return DesignPoint(*[jnp.stack([jnp.asarray(getattr(p, fld)) for p in pts]) for fld in DesignPoint._fields])
+
+
+def point_rows(p: DesignPoint) -> list[DesignPoint]:
+    n = int(np.prod(p.batch_shape)) if p.batch_shape else 1
+    flat = jax.tree.map(lambda x: jnp.reshape(x, (-1,)), p)
+    return [jax.tree.map(lambda x: x[i], flat) for i in range(n)]
+
+
+# ----------------------------------------------------------------------------
+# Validity
+# ----------------------------------------------------------------------------
+
+def is_valid(p: DesignPoint) -> jnp.ndarray:
+    """Structural validity of a design point (vectorized, differentiable-safe).
+
+    Rules:
+      * all parameters within their candidate ranges;
+      * macro compute capacity bounded by the macro compiler's 4-TOPS-class
+        limit (paper §4.3: PC*AL*WBW <= 512K bitwise multipliers per macro
+        is the compiler max, i.e. PC*AL <= 65536);
+      * LSL >= 2 (ping-pong weight row needed by the streaming schedule).
+    """
+    ok = jnp.ones(jnp.shape(p.AL), dtype=bool)
+    ok &= (p.AL >= min(AL_CHOICES)) & (p.AL <= max(AL_CHOICES))
+    ok &= (p.LSL >= 2) & (p.LSL <= max(LSL_CHOICES))
+    ok &= (p.PC >= min(PC_CHOICES)) & (p.PC <= max(PC_CHOICES))
+    ok &= (p.PL >= 0) & (p.PL <= max(PL_CHOICES))
+    ok &= (p.BR >= 1) & (p.BR <= 64) & (p.BC >= 1) & (p.BC <= 64)
+    ok &= (p.TL >= min(TL_CHOICES)) & (p.TL <= max(TL_CHOICES))
+    ok &= p.PC * p.AL <= 65536
+    return ok
+
+
+# ----------------------------------------------------------------------------
+# Sampling / enumeration
+# ----------------------------------------------------------------------------
+
+_GRIDS = {
+    "AL": AL_CHOICES,
+    "LSL": LSL_CHOICES,
+    "PC": PC_CHOICES,
+    "PL": PL_CHOICES,
+    "OL": OL_CHOICES,
+    "BR": BR_CHOICES,
+    "BC": BC_CHOICES,
+    "TL": TL_CHOICES,
+    "dataflow": DATAFLOW_CHOICES,
+    "interconnect": INTERCONNECT_CHOICES,
+}
+
+
+def sample_random(key: jax.Array, n: int, **fixed) -> DesignPoint:
+    """Sample n design points uniformly from the candidate grids.
+
+    ``fixed`` pins axes (e.g. dataflow=WS, interconnect=SYSTOLIC) for the
+    per-dataflow Pareto sweeps of Fig. 8.
+    """
+    keys = jax.random.split(key, len(_GRIDS))
+    vals = {}
+    for k, (name, grid) in zip(keys, _GRIDS.items()):
+        if name in fixed:
+            vals[name] = jnp.full((n,), float(fixed[name]), dtype=jnp.float32)
+        else:
+            g = jnp.asarray(grid, dtype=jnp.float32)
+            idx = jax.random.randint(k, (n,), 0, len(grid))
+            vals[name] = g[idx]
+    return DesignPoint(**vals)
+
+
+def enumerate_grid(**fixed) -> DesignPoint:
+    """Exhaustively enumerate the space with some axes pinned.
+
+    Axes not pinned iterate over their full candidate grid; BR/BC default to
+    a coarse subgrid to keep enumeration tractable for benchmarks.
+    """
+    coarse = dict(_GRIDS)
+    coarse["BR"] = (1, 2, 4, 8, 12, 16, 24, 32, 48, 64)
+    coarse["BC"] = (1, 2, 4, 8, 12, 16, 24, 32, 48, 64)
+    axes = []
+    names = list(coarse.keys())
+    for name in names:
+        if name in fixed:
+            v = fixed[name]
+            axes.append(v if isinstance(v, (tuple, list)) else (v,))
+        else:
+            axes.append(coarse[name])
+    rows = np.array(list(itertools.product(*axes)), dtype=np.float32)
+    vals = {name: jnp.asarray(rows[:, i]) for i, name in enumerate(names)}
+    return DesignPoint(**vals)

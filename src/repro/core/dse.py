@@ -1,0 +1,116 @@
+"""DSE orchestration: population evaluation, Pareto sweeps, BO search.
+
+This is AccelCIM's outer loop. Everything vectorizes: a population of design
+points is a DesignPoint of batched arrays; `evaluate_population` jits one
+closed-form evaluation over the whole population at once.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import bayesopt, design_space as ds
+from .dataflow import Gemm
+from .design_space import DesignPoint
+from .mapper import constrained_objective, evaluate_model
+from .pareto import pareto_front, pareto_mask
+from .ppa import evaluate_peak, evaluate_workload
+
+
+@dataclass
+class DataflowName:
+    dataflow: int
+    interconnect: int
+    ol: int
+
+    @property
+    def label(self) -> str:
+        df = "WS" if self.dataflow == ds.WS else "OS"
+        ic = "Broadcast" if self.interconnect == ds.BROADCAST else "Systolic"
+        ol = "OL" if self.ol else "NOL"
+        return f"{df}-{ic}-{ol}"
+
+
+ALL_DATAFLOWS = [
+    DataflowName(df, ic, ol)
+    for df in (ds.WS, ds.OS)
+    for ic in (ds.BROADCAST, ds.SYSTOLIC)
+    for ol in (0, 1)
+]
+
+
+def evaluate_population(pop: DesignPoint, gemms: Sequence[Gemm] | None):
+    """Jitted closed-form evaluation of a whole population.
+
+    gemms=None -> peak-throughput mode (paper §4.1 'absence of a specific
+    application')."""
+    if gemms is None:
+        fn = jax.jit(evaluate_peak)
+        return fn(pop)
+    fn = jax.jit(partial(evaluate_workload, gemms=list(gemms)))
+    return fn(pop)
+
+
+def dataflow_pareto_sweep(
+    key: jax.Array,
+    gemms: Sequence[Gemm],
+    n_samples: int = 8192,
+    objectives: tuple[str, str] = ("latency_s", "area_mm2"),
+    dataflows: Sequence[DataflowName] = tuple(ALL_DATAFLOWS),
+):
+    """Fig. 8 machinery: per-dataflow random-population Pareto fronts over
+    (performance, area) and (performance, power)."""
+    out = {}
+    for dfn in dataflows:
+        key, k = jax.random.split(key)
+        pop = ds.sample_random(
+            k, n_samples, dataflow=dfn.dataflow, interconnect=dfn.interconnect, OL=dfn.ol
+        )
+        valid = np.asarray(ds.is_valid(pop))
+        ppa = evaluate_population(pop, gemms)
+        objs = np.stack(
+            [np.asarray(getattr(ppa, o)) for o in objectives], axis=-1
+        )
+        objs = np.where(valid[:, None], objs, np.inf)
+        front, pts = pareto_front(objs, np.stack([np.asarray(f) for f in pop], axis=-1))
+        out[dfn.label] = dict(front=front, points=pts)
+    return out
+
+
+def optimize_for_model(
+    key: jax.Array,
+    cfg: ArchConfig,
+    n_cores: int,
+    batch: int,
+    seq: int,
+    peak_tops_cap: float = 20.0,
+    mode: str = "prefill",
+    method: str = "bayes",
+    fixed: dict | None = None,
+    **search_kw,
+):
+    """Table 3 machinery: find the best (dataflow, macro, array, TL) for an
+    LLM inference task under the compute-capacity cap."""
+    obj = partial(
+        constrained_objective, cfg=cfg, n_cores=n_cores, batch=batch, seq=seq,
+        peak_tops_cap=peak_tops_cap, mode=mode,
+    )
+    if method == "bayes":
+        # hybrid: broad jitted random screen seeds/backstops the GP-EI loop
+        # (the 10-D mixed grid is multimodal; EI alone stalls on tiny budgets)
+        kb, kr = jax.random.split(key)
+        best_b, val_b, x, y = bayesopt.bayes_minimize(kb, obj, fixed=fixed, **search_kw)
+        best_r, val_r, xr, yr = bayesopt.random_minimize(kr, obj, n=16384, fixed=fixed)
+        best = best_b if float(val_b) <= float(val_r) else best_r
+        x, y = jnp.concatenate([x, xr]), jnp.concatenate([y, yr])
+    else:
+        best, val, x, y = bayesopt.random_minimize(key, obj, fixed=fixed, **search_kw)
+    best = jax.tree.map(lambda v: jnp.reshape(jnp.asarray(v), ()), best)
+    qor = evaluate_model(best, cfg, n_cores=n_cores, batch=batch, seq=seq, mode=mode)
+    return best, qor, (x, y)

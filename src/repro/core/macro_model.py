@@ -1,0 +1,193 @@
+"""CIM macro timing / power / area model.
+
+The paper evaluates macros with SPICE + post-layout (Cadence) flows driven
+by an open-source CIM compiler. That flow is unavailable offline, so this
+module is a *parametric 28 nm model calibrated to the paper's published
+trends and anchors* (DESIGN.md §6):
+
+  Fig. 2  — frequency falls and energy efficiency rises with macro compute
+            capacity;
+  Fig. 3  — enabling compute-I/O overlap (OL) degrades macro energy/area
+            efficiency by ~25-35 %;
+  Fig. 11 — 512 K bitwise multipliers is the compiler's max capacity and the
+            iso-budget used for macro selection (a 4-TOPS macro has
+            PC*AL = 8192 -> 64 K multipliers, so 8 such macros = 2x4 array,
+            matching Fig. 12's setup);
+  Table 3 — end-to-end cores land at ~1-3 mm^2 and ~0.8-2 W.
+
+All functions are pure jnp on DesignPoint fields and vmap/jit cleanly.
+
+Macro structure recap (paper Fig. 4): PC banks, each storing LSL weight
+rows x AL weight cols at WBW bits, sliced 2-bit-wise into WBW/2 subarrays;
+peripheral bitwise multipliers + subarray/bank adder trees, pipelined into
+PL+1 stages. Per IBW/2 cycles the macro emits PC dot products of length AL.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .design_space import DesignPoint, IBW, WBW
+
+# ---------------------------------------------------------------------------
+# Calibration constants (28 nm). One table, used everywhere.
+# ---------------------------------------------------------------------------
+
+class _Constants(NamedTuple):
+    # --- timing (seconds) ---
+    t_sram: float = 450e-12        # SRAM read stage (decode + bitline)
+    t_mult: float = 180e-12        # 2b x 2b bitwise multiplier
+    t_add: float = 120e-12         # one adder-tree stage
+    t_reg: float = 60e-12          # pipeline register setup + clk->q
+    t_wire0: float = 20e-12        # input-broadcast wire delay @ PC*AL = 512
+    # --- energy (joules) ---
+    e_bmac: float = 5e-15          # one 2b x 2b multiply (16 per 8x8 MAC)
+    e_tree: float = 2.5e-15        # adder tree energy per bmac equivalent
+    e_ctrl_cyc: float = 2.0e-12    # macro control/clock energy per cycle
+    e_wl_row: float = 0.6e-12      # wordline activation per row-cycle
+    e_write_bit: float = 30e-15    # weight write energy per bit
+    e_io_bit: float = 45e-15       # I/O bus energy per transferred bit
+    p_leak_cell: float = 1.5e-9    # leakage per bitcell (W)
+    p_leak_gate: float = 4.0e-9    # leakage per logic "bmac unit" (W)
+    # --- area (m^2) ---
+    a_cell: float = 0.20e-12       # CIM 6T bitcell + compute-adjacency
+    a_bmac: float = 3.2e-12        # bitwise multiplier unit
+    a_tree: float = 2.2e-12        # adder-tree share per bmac unit
+    a_pipe_reg: float = 0.9e-12    # pipeline register bank per bmac, per level
+    a_ctrl0: float = 900e-12       # fixed control/decoder area per macro
+    a_io: float = 2200e-12         # I/O interface block per macro
+    # --- compute-I/O overlap (OL) overheads (Fig. 3: 25-35 %) ---
+    ol_energy_base: float = 0.25   # dyn-energy multiplier = 1 + base + slope*log2(PC)
+    ol_energy_slope: float = 0.016
+    ol_area_base: float = 0.08     # area multiplier = 1 + base + slope*log2(PC)
+    ol_area_slope: float = 0.014
+
+
+C = _Constants()
+
+PEAK_OPS_PER_MAC = 2.0  # multiply + add
+
+
+def n_bitwise_multipliers(p: DesignPoint) -> jnp.ndarray:
+    """Bitwise (2b x 2b) multipliers in the macro: one per stored weight bit
+    position across the AL columns of every bank, i.e. PC * AL * WBW."""
+    return p.PC * p.AL * WBW
+
+
+def storage_bits(p: DesignPoint) -> jnp.ndarray:
+    return p.PC * p.LSL * p.AL * WBW
+
+
+def macs_per_cycle(p: DesignPoint) -> jnp.ndarray:
+    """PC dot products of length AL every IBW/2 cycles."""
+    return p.PC * p.AL / (IBW / 2)
+
+
+# ---------------------------------------------------------------------------
+# Timing
+# ---------------------------------------------------------------------------
+
+def adder_tree_depth(p: DesignPoint) -> jnp.ndarray:
+    """log2(AL) channel-reduce stages + 2 subarray-combine stages + 1
+    bit-serial shift-accumulate stage."""
+    return jnp.log2(p.AL) + 3.0
+
+
+def clock_period(p: DesignPoint) -> jnp.ndarray:
+    """Cycle time after pipelining the multiplier + adder tree into PL+1
+    stages. The SRAM access stage and a size-dependent input-broadcast wire
+    delay floor the period (Fig. 2: big macros are slower)."""
+    logic = C.t_mult + adder_tree_depth(p) * C.t_add
+    stage = logic / (p.PL + 1.0)
+    t_wire = C.t_wire0 * jnp.sqrt(p.PC * p.AL / 512.0)
+    return jnp.maximum(C.t_sram + t_wire, stage) + C.t_reg
+
+
+def frequency(p: DesignPoint) -> jnp.ndarray:
+    return 1.0 / clock_period(p)
+
+
+def peak_tops(p: DesignPoint) -> jnp.ndarray:
+    """Theoretical peak throughput of ONE macro in OPS/s."""
+    return macs_per_cycle(p) * PEAK_OPS_PER_MAC * frequency(p)
+
+
+# ---------------------------------------------------------------------------
+# Energy / power
+# ---------------------------------------------------------------------------
+
+def _ol_energy_mult(p: DesignPoint) -> jnp.ndarray:
+    return 1.0 + p.OL * (C.ol_energy_base + C.ol_energy_slope * jnp.log2(p.PC))
+
+
+def _ol_area_mult(p: DesignPoint) -> jnp.ndarray:
+    return 1.0 + p.OL * (C.ol_area_base + C.ol_area_slope * jnp.log2(p.PC))
+
+
+def energy_per_mac(p: DesignPoint) -> jnp.ndarray:
+    """Dynamic energy per 8x8 MAC, including the amortized per-cycle control
+    and wordline energy (Fig. 2: big macros amortize better -> higher
+    TOPS/W) and the input-broadcast wire energy (grows with macro size)."""
+    compute = (C.e_bmac + C.e_tree) * (WBW / 2) * (IBW / 2)  # 16 bmac ops
+    bcast = 10e-15 * (1.0 + 0.15 * jnp.log2(jnp.maximum(p.PC * p.AL / 512.0, 1.0)))
+    per_cycle = C.e_ctrl_cyc + C.e_wl_row * p.PC
+    amortized = per_cycle * (IBW / 2) / (p.PC * p.AL)
+    return (compute + bcast + amortized) * _ol_energy_mult(p)
+
+
+def write_energy_per_row(p: DesignPoint) -> jnp.ndarray:
+    """Energy to rewrite one weight row (PC banks x AL cols x WBW bits)."""
+    bits = p.PC * p.AL * WBW
+    return bits * (C.e_write_bit + C.e_io_bit) * _ol_energy_mult(p)
+
+
+def leakage_power(p: DesignPoint) -> jnp.ndarray:
+    return storage_bits(p) * C.p_leak_cell + n_bitwise_multipliers(p) * C.p_leak_gate
+
+
+def compute_power(p: DesignPoint) -> jnp.ndarray:
+    """Dynamic power while the macro is computing at full rate."""
+    return energy_per_mac(p) * macs_per_cycle(p) * frequency(p)
+
+
+def tops_per_watt(p: DesignPoint) -> jnp.ndarray:
+    """Macro-level energy efficiency at full utilization (Fig. 2 metric)."""
+    p_total = compute_power(p) + leakage_power(p)
+    return peak_tops(p) / p_total
+
+
+# ---------------------------------------------------------------------------
+# Area
+# ---------------------------------------------------------------------------
+
+def macro_area(p: DesignPoint) -> jnp.ndarray:
+    """Macro area in m^2: bitcells + multipliers + adder trees + pipeline
+    registers + control + I/O, with the OL area penalty (extra bitlines /
+    wordline drivers for simultaneous access)."""
+    cells = storage_bits(p) * C.a_cell
+    nm = n_bitwise_multipliers(p)
+    logic = nm * (C.a_bmac + C.a_tree) + nm * C.a_pipe_reg * p.PL
+    fixed = C.a_ctrl0 + C.a_io
+    return (cells + logic + fixed) * _ol_area_mult(p)
+
+
+def tops_per_mm2(p: DesignPoint) -> jnp.ndarray:
+    """Macro-level area efficiency (Fig. 2/3 companion metric)."""
+    return peak_tops(p) / (macro_area(p) * 1e6)  # OPS/s per mm^2 -> T/mm^2 handled by caller
+
+
+# ---------------------------------------------------------------------------
+# Convenience summary
+# ---------------------------------------------------------------------------
+
+def macro_summary(p: DesignPoint) -> dict:
+    return {
+        "n_multipliers": n_bitwise_multipliers(p),
+        "storage_bits": storage_bits(p),
+        "frequency_hz": frequency(p),
+        "peak_tops": peak_tops(p) / 1e12,
+        "tops_per_watt": tops_per_watt(p) / 1e12,
+        "area_mm2": macro_area(p) * 1e6,
+        "energy_per_mac_j": energy_per_mac(p),
+    }

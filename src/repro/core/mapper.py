@@ -1,0 +1,76 @@
+"""Model -> multi-core CIM engine mapping and the paper's QoR objective.
+
+Table 3 maps each LLM onto `#CIM Core` cores; we follow the paper: cores
+split the token dimension (M) of every GEMM evenly (data-parallel prefill),
+each core runs the same dataflow design, and the engine's latency is the
+per-core latency. Power and area scale by core count; the scalarized QoR is
+latency^2 * power * area (per core, as Table 3 reports per-core power/area).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .dataflow import Gemm
+from .design_space import DesignPoint
+from .ppa import ArrayPPA, evaluate_workload, qor_objective
+from .workload import dedupe_gemms, model_gemms
+
+
+class EngineQoR(NamedTuple):
+    latency_s: jnp.ndarray
+    power_w: jnp.ndarray       # per-core (Table 3 convention)
+    area_mm2: jnp.ndarray      # per-core
+    objective: jnp.ndarray     # latency^2 * power * area
+    utilization: jnp.ndarray
+    eff_tops: jnp.ndarray      # engine-level effective throughput
+    peak_tops: jnp.ndarray     # per-core peak
+
+
+def split_gemms_across_cores(gemms: list[Gemm], n_cores: int) -> list[Gemm]:
+    return [Gemm(max(g.M / n_cores, 1.0), g.K, g.N, g.count) for g in gemms]
+
+
+def evaluate_model(
+    p: DesignPoint,
+    cfg: ArchConfig,
+    n_cores: int = 1,
+    batch: int = 8,
+    seq: int = 1024,
+    mode: str = "prefill",
+    include_attention: bool = False,
+) -> EngineQoR:
+    gemms = dedupe_gemms(model_gemms(cfg, mode=mode, batch=batch, seq=seq,
+                                     include_attention=include_attention))
+    per_core = split_gemms_across_cores(gemms, n_cores)
+    ppa: ArrayPPA = evaluate_workload(p, per_core)
+    return EngineQoR(
+        latency_s=ppa.latency_s,
+        power_w=ppa.power_w,
+        area_mm2=ppa.area_mm2,
+        objective=qor_objective(ppa),
+        utilization=ppa.utilization,
+        eff_tops=ppa.eff_tops * n_cores,
+        peak_tops=ppa.peak_tops,
+    )
+
+
+def constrained_objective(
+    p: DesignPoint,
+    cfg: ArchConfig,
+    n_cores: int,
+    batch: int,
+    seq: int,
+    peak_tops_cap: float = 20.0,
+    mode: str = "prefill",
+) -> jnp.ndarray:
+    """The paper's §4.4 search objective: latency^2*power*area subject to a
+    per-core aggregate compute-capacity upper bound (20 TOPS) and validity.
+    Invalid / over-cap points get +inf (vectorization-safe)."""
+    from .design_space import is_valid
+
+    q = evaluate_model(p, cfg, n_cores=n_cores, batch=batch, seq=seq, mode=mode)
+    ok = is_valid(p) & (q.peak_tops <= peak_tops_cap)
+    return jnp.where(ok, q.objective, jnp.inf)

@@ -1,0 +1,44 @@
+"""Vectorized Pareto-front extraction (all objectives minimized)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pareto_mask(objectives: jnp.ndarray) -> jnp.ndarray:
+    """objectives: (n, d) array, all minimized. Returns (n,) bool mask of
+    non-dominated points. O(n^2) vectorized — fine for DSE populations.
+
+    A point i is dominated if some j is <= on every objective and < on at
+    least one.
+    """
+    obj = jnp.asarray(objectives)
+    le = jnp.all(obj[None, :, :] <= obj[:, None, :], axis=-1)   # j dominates-or-equals i
+    lt = jnp.any(obj[None, :, :] < obj[:, None, :], axis=-1)    # j strictly better somewhere
+    dominated = jnp.any(le & lt, axis=1)
+    return ~dominated
+
+
+def pareto_front(objectives: np.ndarray, *extras) -> tuple:
+    """Return the (sorted-by-first-objective) Pareto subset of objectives and
+    any aligned extra arrays."""
+    mask = np.asarray(pareto_mask(jnp.asarray(objectives)))
+    obj = np.asarray(objectives)[mask]
+    order = np.argsort(obj[:, 0])
+    out = [obj[order]]
+    for e in extras:
+        out.append(np.asarray(e)[mask][order])
+    return tuple(out)
+
+
+def hypervolume_2d(front: np.ndarray, ref: np.ndarray) -> float:
+    """2-D hypervolume (both minimized) w.r.t. reference point ref."""
+    f = np.asarray(front, dtype=np.float64)
+    f = f[np.argsort(f[:, 0])]
+    hv, prev_y = 0.0, float(ref[1])
+    for x, y in f:
+        if x >= ref[0] or y >= ref[1]:
+            continue
+        hv += (ref[0] - x) * max(0.0, prev_y - y)
+        prev_y = min(prev_y, y)
+    return hv

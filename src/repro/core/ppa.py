@@ -1,0 +1,145 @@
+"""Array-level PPA composition: macros + integration overhead.
+
+Models the paper's Section 3.3/4.3 post-layout findings as calibrated
+parametric overheads (DESIGN.md §6):
+
+  Fig. 10(a): power overhead of non-macro components stays < 20 % for every
+              dataflow, mildly higher for broadcast (global wire switching)
+              and for OL designs (more simultaneous access buffering).
+  Fig. 10(b): AREA overhead diverges — broadcast interconnect needs global
+              routing whose cost grows super-linearly with macro count,
+              while systolic stays near-flat (local neighbor links).
+
+The evaluator returns the end-to-end QoRs the paper optimizes:
+performance (peak & effective throughput, latency), power, area.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from . import macro_model as mm
+from .design_space import BROADCAST, SYSTOLIC, DesignPoint, WBW
+from .dataflow import DataflowTiming, Gemm, gemm_timing, workload_timing
+
+
+class ArrayPPA(NamedTuple):
+    peak_tops: jnp.ndarray        # array peak throughput (TOPS)
+    frequency_hz: jnp.ndarray
+    area_mm2: jnp.ndarray
+    power_w: jnp.ndarray          # workload-average power (needs timing)
+    latency_s: jnp.ndarray        # end-to-end workload latency
+    energy_j: jnp.ndarray
+    utilization: jnp.ndarray
+    eff_tops: jnp.ndarray         # effective throughput on the workload
+    tops_per_watt: jnp.ndarray
+    tops_per_mm2: jnp.ndarray
+
+
+def n_macros(p: DesignPoint) -> jnp.ndarray:
+    return p.BR * p.BC
+
+
+def array_area_overhead_frac(p: DesignPoint) -> jnp.ndarray:
+    """Non-macro area fraction vs. interconnect (Fig. 10b calibration:
+    systolic ~6-12 % flat-ish; broadcast grows ~ sqrt(n_macros), reaching
+    ~45 % at 64 macros)."""
+    n = n_macros(p)
+    sys_frac = 0.06 + 0.008 * jnp.log2(jnp.maximum(n, 1.0))
+    bc_frac = 0.10 + 0.055 * jnp.sqrt(jnp.maximum(n, 1.0) - 1.0)
+    return jnp.where(p.interconnect == BROADCAST, bc_frac, sys_frac)
+
+
+def array_power_overhead_frac(p: DesignPoint) -> jnp.ndarray:
+    """Non-macro power fraction (Fig. 10a: < 20 % everywhere)."""
+    n = n_macros(p)
+    base = jnp.where(p.interconnect == BROADCAST, 0.10, 0.06)
+    growth = 0.012 * jnp.log2(jnp.maximum(n, 1.0))
+    ol_extra = 0.02 * p.OL
+    return jnp.minimum(base + growth + ol_extra, 0.20)
+
+
+def array_area_mm2(p: DesignPoint) -> jnp.ndarray:
+    macro = mm.macro_area(p) * n_macros(p)
+    return macro * (1.0 + array_area_overhead_frac(p)) * 1e6
+
+
+def array_peak_tops(p: DesignPoint) -> jnp.ndarray:
+    return mm.peak_tops(p) * n_macros(p) / 1e12
+
+
+def _act_delivery_energy_per_bit(p: DesignPoint) -> jnp.ndarray:
+    """Broadcast drives global wires spanning the array (cost grows with BR);
+    systolic hops are neighbor-local."""
+    wire = jnp.where(
+        p.interconnect == BROADCAST,
+        1.0 + 0.25 * jnp.sqrt(n_macros(p)),
+        1.6,  # one register + short wire per hop, ~constant
+    )
+    return 15e-15 * wire
+
+
+def evaluate_workload(p: DesignPoint, gemms: list[Gemm]) -> ArrayPPA:
+    """End-to-end QoRs of design point p running a GEMM workload.
+
+    Power integrates (as the paper does from simulation traces):
+      compute dynamic energy      = E/MAC * #MACs
+      weight-update energy        = write energy * streamed weight bits
+      activation delivery energy  = wire energy * streamed act bits
+      leakage                     = P_leak * latency
+    """
+    timing: DataflowTiming = workload_timing(p, gemms)
+    f = mm.frequency(p)
+    latency = timing.total_cycles / f
+
+    total_macs = sum(g.macs for g in gemms)
+    e_compute = mm.energy_per_mac(p) * total_macs
+    e_weights = timing.weight_bits * (mm.C.e_write_bit + mm.C.e_io_bit) \
+        * mm._ol_energy_mult(p)
+    e_acts = timing.act_bits * _act_delivery_energy_per_bit(p)
+    e_leak = mm.leakage_power(p) * n_macros(p) * latency
+    e_dyn = e_compute + e_weights + e_acts
+    e_total = (e_dyn * (1.0 + array_power_overhead_frac(p))) + e_leak
+
+    power = e_total / jnp.maximum(latency, 1e-12)
+    area = array_area_mm2(p)
+    peak = array_peak_tops(p)
+    eff = 2.0 * total_macs / jnp.maximum(latency, 1e-12) / 1e12
+
+    return ArrayPPA(
+        peak_tops=peak,
+        frequency_hz=f,
+        area_mm2=area,
+        power_w=power,
+        latency_s=latency,
+        energy_j=e_total,
+        utilization=timing.utilization,
+        eff_tops=eff,
+        tops_per_watt=eff / jnp.maximum(power, 1e-12),
+        tops_per_mm2=eff / jnp.maximum(area, 1e-12),
+    )
+
+
+def evaluate_peak(p: DesignPoint) -> ArrayPPA:
+    """QoRs without a specific application (paper §4.1: peak throughput as
+    the performance metric; power at full-rate compute)."""
+    f = mm.frequency(p)
+    peak = array_peak_tops(p)
+    p_dyn = mm.compute_power(p) * n_macros(p)
+    p_leak = mm.leakage_power(p) * n_macros(p)
+    power = p_dyn * (1.0 + array_power_overhead_frac(p)) + p_leak
+    area = array_area_mm2(p)
+    one = jnp.ones_like(f)
+    return ArrayPPA(
+        peak_tops=peak, frequency_hz=f, area_mm2=area, power_w=power,
+        latency_s=jnp.zeros_like(f), energy_j=jnp.zeros_like(f),
+        utilization=one, eff_tops=peak,
+        tops_per_watt=peak / jnp.maximum(power, 1e-12),
+        tops_per_mm2=peak / jnp.maximum(area, 1e-12),
+    )
+
+
+def qor_objective(ppa: ArrayPPA) -> jnp.ndarray:
+    """The paper's Table 3 scalarization: latency^2 * power * area."""
+    return ppa.latency_s**2 * ppa.power_w * ppa.area_mm2

@@ -1,0 +1,173 @@
+"""GEMM workload extraction — the bridge from the LM substrate to the DSE.
+
+The CIM macro computes GEMV/GEMM streams (paper §3.1), so the unit of work
+the DSE consumes is a list of (M, K, N, count) GEMMs. This module walks an
+ArchConfig and emits the exact projection/MLP/MoE/lm-head GEMMs for a given
+execution mode:
+
+  prefill: M = batch * seq tokens hit every weight matrix once
+  decode : M = batch (one new token per request)
+  train  : forward GEMMs + 2x backward (dL/dX and dL/dW GEMM counts)
+
+Attention score/value batched matmuls are activation x activation products;
+SRAM CIM stores one operand in the bitcell array, so the paper's case study
+scopes them out ("focusing on Q/K/V projection operations"). We follow that
+default and expose include_attention=True to map them as streamed-weight
+GEMMs for sensitivity studies.
+
+MoE experts: with balanced top-k routing over E experts, each expert sees
+M * top_k / E tokens; emitted as `count=E` GEMMs of that M (the CIM array
+processes experts back to back with weight streaming between them — exactly
+the regime AccelCIM models).
+"""
+from __future__ import annotations
+
+from ..configs.base import ArchConfig
+from .dataflow import Gemm
+
+
+def _attn_gemms(cfg: ArchConfig, M: float, li: int) -> list[Gemm]:
+    d, hd = cfg.d_model, cfg.head_dim
+    if cfg.attn == "none":
+        s = cfg.ssm
+        din = s.d_inner(d)
+        proj = 2 * din + 2 * s.n_groups * s.d_state + s.n_heads(d)
+        return [Gemm(M, d, proj), Gemm(M, din, d)]
+    if cfg.attn == "rglru_hybrid":
+        h = cfg.hybrid
+        if h.pattern[li % len(h.pattern)] == "rec":
+            return [Gemm(M, d, 2 * h.lru_width), Gemm(M, h.lru_width, d)]
+        return [
+            Gemm(M, d, cfg.n_heads * hd),
+            Gemm(M, d, 2 * cfg.n_kv_heads * hd),
+            Gemm(M, cfg.n_heads * hd, d),
+        ]
+    if cfg.attn == "mla":
+        m = cfg.mla
+        qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return [
+            Gemm(M, d, m.q_lora_rank),
+            Gemm(M, m.q_lora_rank, cfg.n_heads * qk_hd),
+            Gemm(M, d, m.kv_lora_rank + m.qk_rope_head_dim),
+            Gemm(M, m.kv_lora_rank, cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)),
+            Gemm(M, cfg.n_heads * m.v_head_dim, d),
+        ]
+    # gqa / local_global / encdec self-attention
+    return [
+        Gemm(M, d, cfg.n_heads * hd),
+        Gemm(M, d, 2 * cfg.n_kv_heads * hd),
+        Gemm(M, cfg.n_heads * hd, d),
+    ]
+
+
+def _mlp_gemms(cfg: ArchConfig, M: float, li: int) -> list[Gemm]:
+    d = cfg.d_model
+    if cfg.attn == "none":
+        return []  # mamba2 block has no separate MLP
+    if cfg.moe is not None:
+        mo = cfg.moe
+        if li < mo.first_k_dense:
+            return [Gemm(M, d, mo.dense_d_ff, count=2), Gemm(M, mo.dense_d_ff, d)]
+        out = [Gemm(M, d, mo.n_experts)]  # router
+        m_e = max(M * mo.top_k / mo.n_experts, 1.0)
+        out += [
+            Gemm(m_e, d, mo.d_ff_expert, count=2 * mo.n_experts),
+            Gemm(m_e, mo.d_ff_expert, d, count=mo.n_experts),
+        ]
+        if mo.n_shared_experts:
+            dff = mo.n_shared_experts * mo.d_ff_expert
+            out += [Gemm(M, d, dff, count=2), Gemm(M, dff, d)]
+        return out
+    gated = cfg.act in ("silu", "geglu", "swiglu")
+    return [Gemm(M, d, cfg.d_ff, count=2 if gated else 1), Gemm(M, cfg.d_ff, d)]
+
+
+def _attention_score_gemms(cfg: ArchConfig, batch: float, q_len: float, kv_len: float, li: int) -> list[Gemm]:
+    if cfg.attn in ("none",):
+        return []
+    if cfg.attn == "rglru_hybrid" and cfg.hybrid.pattern[li % len(cfg.hybrid.pattern)] == "rec":
+        return []
+    hd = cfg.head_dim
+    kv = kv_len
+    if cfg.attn == "local_global" and li % 2 == 0:
+        kv = min(kv_len, cfg.sliding_window)
+    if cfg.attn == "rglru_hybrid":
+        kv = min(kv_len, cfg.hybrid.window)
+    return [
+        Gemm(q_len, hd, kv, count=batch * cfg.n_heads),     # QK^T
+        Gemm(q_len, kv, hd, count=batch * cfg.n_heads),     # AV
+    ]
+
+
+def model_gemms(
+    cfg: ArchConfig,
+    mode: str = "prefill",
+    batch: int = 8,
+    seq: int = 1024,
+    include_attention: bool = False,
+    include_lm_head: bool = True,
+) -> list[Gemm]:
+    """Enumerate the model's GEMM workload for one forward pass."""
+    assert mode in ("prefill", "decode", "train")
+    M = float(batch * seq) if mode in ("prefill", "train") else float(batch)
+    gemms: list[Gemm] = []
+
+    if cfg.enc_dec:
+        m_enc = float(batch * seq)
+        dec_len = min(seq, cfg.max_decoder_len)
+        m_dec = float(batch * dec_len) if mode in ("prefill", "train") else float(batch)
+        for li in range(cfg.n_enc_layers):
+            gemms += _attn_gemms(cfg, m_enc, li) + _mlp_gemms(cfg, m_enc, li)
+        for li in range(cfg.n_layers):
+            gemms += _attn_gemms(cfg, m_dec, li)      # self
+            gemms += _attn_gemms(cfg, m_dec, li)      # cross (same projections)
+            gemms += _mlp_gemms(cfg, m_dec, li)
+        if include_lm_head:
+            gemms.append(Gemm(m_dec, cfg.d_model, cfg.vocab_size))
+    else:
+        for li in range(cfg.n_layers):
+            gemms += _attn_gemms(cfg, M, li) + _mlp_gemms(cfg, M, li)
+            if include_attention:
+                q_len = float(seq) if mode in ("prefill", "train") else 1.0
+                gemms += _attention_score_gemms(cfg, float(batch), q_len, float(seq), li)
+        if include_lm_head:
+            gemms.append(Gemm(M, cfg.d_model, cfg.vocab_size))
+
+    if mode == "train":
+        # backward: dX GEMM + dW GEMM per forward GEMM -> 3x MAC volume
+        gemms = [Gemm(g.M, g.K, g.N, g.count * 3.0) for g in gemms]
+    return gemms
+
+
+def qkv_projection_gemm(cfg: ArchConfig, batch: int, seq: int) -> Gemm:
+    """The paper's Section 4.2 focus: the fused Q/K/V projection GEMM.
+    LLaMA-3-8B @ batch 8, seq 1024 -> M, N, K = 8192, 4096(+kv), 4096."""
+    M = float(batch * seq)
+    n = cfg.n_heads * cfg.head_dim  # the paper quotes N = 4096 (Q only)
+    return Gemm(M, float(cfg.d_model), float(n))
+
+
+def dedupe_gemms(gemms: list[Gemm]) -> list[Gemm]:
+    """Merge identical (M, K, N) GEMMs by summing counts — repeated layers
+    collapse to a handful of closed-form evaluations (big jit-time win)."""
+    acc: dict[tuple, float] = {}
+    for g in gemms:
+        key = (float(g.M), float(g.K), float(g.N))
+        acc[key] = acc.get(key, 0.0) + float(g.count)
+    return [Gemm(m, k, n, c) for (m, k, n), c in sorted(acc.items())]
+
+
+def total_macs(gemms: list[Gemm]) -> float:
+    return float(sum(g.macs for g in gemms))
+
+
+def model_flops(cfg: ArchConfig, mode: str, batch: int, seq: int) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N_active*tokens for
+    inference — the §Roofline MODEL_FLOPS convention."""
+    tokens = batch * seq
+    n = cfg.active_param_count()
+    if mode == "train":
+        return 6.0 * n * tokens
+    if mode == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * batch  # decode: one token per request

@@ -1,0 +1,4 @@
+"""Data pipeline."""
+from .pipeline import DataState, SyntheticLMDataset, make_batch_iterator
+
+__all__ = ["DataState", "SyntheticLMDataset", "make_batch_iterator"]

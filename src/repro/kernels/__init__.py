@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot spots, validated in interpret mode.
+
+  cim_gemm        — the paper's W8A8 CIM GEMM primitive (WS/OS grid orders,
+                    bit-serial emulation mode)
+  flash_attention — online-softmax attention for the 32k-prefill cells
+  ssd_scan        — Mamba-2 SSD chunk stage for the long-context cells
+
+ops.py carries the jit'd public wrappers; ref.py the pure-jnp oracles.
+"""
+from . import cim_gemm, flash_attention, ops, ref, ssd_scan
+from .ops import cim_matmul, mha_flash, quantize_a8, quantize_w8, ssd_forward
+
+__all__ = ["cim_gemm", "flash_attention", "ops", "ref", "ssd_scan",
+           "cim_matmul", "mha_flash", "quantize_a8", "quantize_w8", "ssd_forward"]

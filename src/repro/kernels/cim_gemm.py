@@ -1,0 +1,136 @@
+"""CIM-GEMM Pallas kernel: the paper's W8A8 compute primitive on TPU.
+
+Hardware adaptation (DESIGN.md §2): AccelCIM's macro streams 2-bit input
+slices against 2-bit weight slices stored in SRAM subarrays (Fig. 4 steps
+①-⑤), reducing through pipelined adder trees. On TPU the MXU consumes int8
+natively, so the *production* path is a tiled int8 matmul with int32
+accumulation and an f32 dequant epilogue (ops.py). The *bit_serial* path
+reproduces the macro arithmetic literally — (WBW/2 x IBW/2) = 16 partial
+matmuls of signed 2-bit planes, shift-accumulated exactly like the
+subarray/bank adder trees — and tests prove it bit-identical to the direct
+path, validating that the CIM dataflow computes the same GEMM the model
+expects.
+
+Paper-concept mapping inside the kernel:
+  * OS dataflow   -> grid (m, n, k): the int32 accumulator tile stays
+                     resident in VMEM scratch while K-blocks stream through
+                     (output stationary).
+  * WS dataflow   -> grid (n, k, m): the (bk x bn) weight block stays
+                     resident while M-blocks stream through it; partial
+                     sums round-trip through the output (the array-level
+                     reduction-to-core-buffer cost the paper models).
+  * compute-I/O overlap -> Pallas's implicit double-buffered HBM->VMEM
+                     pipeline: the next weight block loads while the MXU
+                     consumes the current one (OL=True in paper terms).
+  * macro (PC x AL) -> the (bn x bk) VMEM block: bn plays PC (parallel
+                     output channels), bk plays AL (accumulation length).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _plane(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Signed 2-bit plane p of an int8 value (int32 math): planes 0-2 are
+    unsigned base-4 digits; plane 3 keeps the two's-complement sign."""
+    xi = x.astype(jnp.int32)
+    shifted = jax.lax.shift_right_arithmetic(xi, 2 * p)
+    if p == 3:
+        return shifted  # in [-2, 1]
+    return jnp.bitwise_and(shifted, 3)  # in [0, 3]
+
+
+def _partial_product(x, w, bit_serial: bool) -> jnp.ndarray:
+    """(bm, bk) x (bk, bn) -> (bm, bn) int32."""
+    if not bit_serial:
+        return jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    acc = None
+    for ip in range(4):          # input bit-slice broadcast (paper step ①)
+        xs = _plane(x, ip)
+        for wp in range(4):      # weight bit-slice subarray (step ③)
+            ws = _plane(w, wp)
+            part = jax.lax.dot_general(
+                xs, ws, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)       # steps ④-⑤ adders
+            part = part << (2 * (ip + wp))
+            acc = part if acc is None else acc + part
+    return acc
+
+
+def _os_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, bit_serial: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _partial_product(x_ref[...], w_ref[...], bit_serial)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(jnp.float32)
+
+
+def _ws_kernel(x_ref, w_ref, o_ref, *, bit_serial: bool):
+    part = _partial_product(x_ref[...], w_ref[...], bit_serial).astype(jnp.float32)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _first():
+        o_ref[...] = part
+
+    @pl.when(pl.program_id(1) > 0)
+    def _rest():
+        o_ref[...] += part
+
+
+def cim_gemm_int32(
+    x_q: jnp.ndarray,            # (M, K) int8
+    w_q: jnp.ndarray,            # (K, N) int8
+    *,
+    bm: int = 128,
+    bn: int = 128,               # "PC": parallel output channels per block
+    bk: int = 128,               # "AL": accumulation length per block
+    dataflow: str = "os",        # ws | os grid order
+    bit_serial: bool = False,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Integer GEMM accumulated in int32, returned as f32 (pre-dequant).
+    Shapes must be multiples of the block sizes (ops.py pads)."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_m, n_n, n_k = M // bm, N // bn, K // bk
+
+    if dataflow == "os":
+        kernel = functools.partial(_os_kernel, n_k=n_k, bit_serial=bit_serial)
+        return pl.pallas_call(
+            kernel,
+            grid=(n_m, n_n, n_k),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+                pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+            out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+            interpret=interpret,
+        )(x_q, w_q)
+
+    assert dataflow == "ws", dataflow
+    kernel = functools.partial(_ws_kernel, bit_serial=bit_serial)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_n, n_k, n_m),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda n, k, m: (m, k)),
+            pl.BlockSpec((bk, bn), lambda n, k, m: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda n, k, m: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x_q, w_q)

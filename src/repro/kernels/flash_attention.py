@@ -1,0 +1,108 @@
+"""Flash attention (forward) Pallas kernel — online softmax over KV blocks.
+
+Grid: (batch*kv_heads*q_groups, n_q_blocks, n_kv_blocks); the last axis is
+sequential on TPU, carrying the running (max, denom, acc) in VMEM scratch.
+Causal masking is block-skipped via the index map (blocks entirely above
+the diagonal still execute but contribute zero — simple and correct; the
+§Perf iteration notes the skip optimization). Supports attention logit
+softcap (Gemma-2) and sliding windows.
+
+Used by the 32k prefill cells on real TPUs; the jnp `_blocked_attend`
+(models/attention.py) is the oracle it is validated against in interpret
+mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0**30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_kv: int, bq: int, bkv: int, scale: float, cap: float,
+                  window: int, causal: bool, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0].astype(jnp.float32)              # (bkv, d)
+    v = v_ref[0].astype(jnp.float32)              # (bkv, dv)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = k_pos < kv_len  # padded KV rows never receive probability mass
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,              # (BH, S_q, d)   batch*heads flattened
+    k: jnp.ndarray,              # (BH, S_kv, d)
+    v: jnp.ndarray,              # (BH, S_kv, dv)
+    *,
+    scale: float,
+    causal: bool = True,
+    cap: float = 0.0,
+    window: int = 0,
+    bq: int = 128,
+    bkv: int = 128,
+    kv_len: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    BH, Sq, d = q.shape
+    _, Skv, dv = v.shape
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, Skv, bq, bkv)
+    n_q, n_kv = Sq // bq, Skv // bkv
+
+    kernel = functools.partial(
+        _flash_kernel, n_kv=n_kv, bq=bq, bkv=bkv, scale=scale, cap=cap,
+        window=window, causal=causal, kv_len=kv_len if kv_len is not None else Skv)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bkv, dv), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denom
+            pltpu.VMEM((bq, dv), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

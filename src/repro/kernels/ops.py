@@ -1,0 +1,140 @@
+"""Jit'd public wrappers around the Pallas kernels (padding, dequant, vmap).
+
+`interpret` defaults to True because this container is CPU-only; on a real
+TPU deployment the launcher flips it to False and the same call sites lower
+to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .cim_gemm import cim_gemm_int32
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_chunk
+
+
+def _pad_to(x, m, axis):
+    r = (-x.shape[axis]) % m
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, r)
+    return jnp.pad(x, pad)
+
+
+def quantize_w8(w: jnp.ndarray):
+    """Per-output-channel symmetric int8 weight quantization.
+    w: (K, N) -> (w_q int8, scale (N,) f32)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    w_q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]), -127, 127)
+    return w_q.astype(jnp.int8), scale
+
+
+def quantize_a8(x: jnp.ndarray):
+    """Per-token symmetric int8 activation quantization. x: (M, K)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return x_q.astype(jnp.int8), scale
+
+
+@partial(jax.jit, static_argnames=("dataflow", "bit_serial", "bm", "bn", "bk",
+                                   "interpret", "out_dtype"))
+def cim_matmul(
+    x: jnp.ndarray,             # (M, K) activations (any float dtype)
+    w_q: jnp.ndarray,           # (K, N) int8
+    w_scale: jnp.ndarray,       # (N,) f32
+    *,
+    dataflow: str = "os",
+    bit_serial: bool = False,
+    bm: int = 128, bn: int = 128, bk: int = 128,
+    interpret: bool = True,
+    out_dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """W8A8 matmul through the CIM-GEMM kernel with dequant epilogue."""
+    M, K = x.shape
+    N = w_q.shape[1]
+    x_q, x_scale = quantize_a8(x)
+    x_q = _pad_to(_pad_to(x_q, bm, 0), bk, 1)
+    w_p = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
+    acc = cim_gemm_int32(x_q, w_p, bm=bm, bn=bn, bk=bk, dataflow=dataflow,
+                         bit_serial=bit_serial, interpret=interpret)
+    acc = acc[:M, :N]
+    return (acc * x_scale * w_scale[None, :]).astype(out_dtype)
+
+
+@partial(jax.jit, static_argnames=("causal", "cap", "window", "bq", "bkv", "interpret"))
+def mha_flash(
+    q: jnp.ndarray,             # (B, S, H, D)
+    k: jnp.ndarray,             # (B, S, Hkv, D)
+    v: jnp.ndarray,             # (B, S, Hkv, Dv)
+    *,
+    causal: bool = True,
+    cap: float = 0.0,
+    window: int = 0,
+    bq: int = 128, bkv: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """GQA-aware flash attention: kv heads repeated to q heads, flattened to
+    (B*H, S, D) for the kernel."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    scale = float(1.0 / (D ** 0.5))
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = kf.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vf = vf.transpose(0, 2, 1, 3).reshape(B * H, -1, vf.shape[-1])
+    qp = _pad_to(qf, bq, 1)
+    kp = _pad_to(kf, bkv, 1)
+    vp = _pad_to(vf, bkv, 1)
+    o = flash_attention(qp, kp, vp, scale=scale, causal=causal, cap=cap,
+                        window=window, bq=bq, bkv=bkv, kv_len=kf.shape[1],
+                        interpret=interpret)
+    o = o[:, :Sq]
+    return o.reshape(B, H, Sq, -1).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_forward(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = True):
+    """Full SSD forward using the Pallas chunk kernel + jnp inter-chunk scan.
+    Shapes as models.ssm.ssd_chunked. Returns (y, final_state)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0
+    nc = S // chunk
+    rep = H // G
+
+    xc = x.reshape(Bsz * nc, chunk, H, P)
+    dtc = dt.reshape(Bsz * nc, chunk, H)
+    Bc = jnp.repeat(Bm.reshape(Bsz * nc, chunk, G, N), rep, axis=2)
+    Cc = jnp.repeat(Cm.reshape(Bsz * nc, chunk, G, N), rep, axis=2)
+    a = dtc * A[None, None, :]
+
+    y_intra, states = ssd_chunk(xc, dtc, a, Bc, Cc, interpret=interpret)
+    y_intra = y_intra.reshape(Bsz, nc, chunk, H, P)
+    states = states.reshape(Bsz, nc, H, P, N)
+
+    a_cum = jnp.cumsum(a.reshape(Bsz, nc, chunk, H), axis=2)
+    chunk_decay = jnp.exp(a_cum[:, :, -1])                       # (B,nc,H)
+
+    def step(carry, inp):
+        st, dec = inp
+        return carry * dec[..., None, None] + st, carry
+
+    s0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    final, entering = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    entering = entering.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,P,N)
+
+    decay_from_start = jnp.exp(a_cum)                            # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                         Cc.reshape(Bsz, nc, chunk, H, N).astype(jnp.float32),
+                         decay_from_start, entering)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, final

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cim_gemm_ref(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
+    """int8 x int8 -> int32 GEMM, as f32."""
+    return jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32)).astype(jnp.float32)
+
+
+def w8a8_matmul_ref(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
+                    out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Dynamic per-token activation quant + per-channel weight dequant."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    x_scale = jnp.maximum(amax, 1e-6) / 127.0
+    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / x_scale), -127, 127).astype(jnp.int8)
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32)).astype(jnp.float32)
+    return (acc * x_scale * w_scale[None, :]).astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, *, scale, causal=True, cap=0.0, window=0):
+    """(BH, Sq, d) x (BH, Skv, d) -> (BH, Sq, dv), f32 softmax."""
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    Sq, Skv = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, -2.0**30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkv->bqv", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_chunk_ref(x, dt, a, Bm, Cm):
+    """Oracle for kernels.ssd_scan.ssd_chunk. Shapes as the kernel."""
+    BC, Q, H, P = x.shape
+    cs = jnp.cumsum(a, axis=1)                                    # (BC,Q,H)
+    seg = cs[:, :, None, :] - cs[:, None, :, :]                   # (BC,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+    L = jnp.exp(jnp.where(tri, seg, -jnp.inf))
+    s = jnp.einsum("bqhn,bkhn->bqkh", Cm.astype(jnp.float32), Bm.astype(jnp.float32))
+    y = jnp.einsum("bqkh,bqkh,bkh,bkhp->bqhp", s, L, dt.astype(jnp.float32),
+                   x.astype(jnp.float32))
+    decay_end = jnp.exp(cs[:, -1:, :] - cs)                       # (BC,Q,H)
+    st = jnp.einsum("bqh,bqh,bqhp,bqhn->bhpn", dt.astype(jnp.float32), decay_end,
+                    x.astype(jnp.float32), Bm.astype(jnp.float32))
+    return y, st

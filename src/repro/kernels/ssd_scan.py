@@ -1,0 +1,83 @@
+"""Mamba-2 SSD chunk kernel: the intra-chunk quadratic stage in Pallas.
+
+Per (batch*chunk, head) grid cell, computes the SSD chunk primitives
+(arXiv:2405.21060 §6) for one chunk of Q timesteps:
+
+    y_intra = ((C B^T) ⊙ L) (dt ⊙ x)        intra-chunk output
+    state   = (decay_to_end ⊙ dt ⊙ x)^T B    chunk-final state contribution
+    y_inter hook: caller combines `state` across chunks with the (cheap)
+    inter-chunk lax.scan and adds C @ entering_state * decay_from_start.
+
+The matmul-heavy pieces (QxQ score, QxP output, PxN state) live in the
+kernel; the O(nc) recurrence stays in jnp where it belongs. Oracle:
+ref.ssd_chunk_ref == models.ssm internals.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0**30
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, *, Q: int):
+    # blocks: x (1,Q,1,P) dt (1,Q,1) a (1,Q,1) b/c (1,Q,1,N)
+    x = x_ref[0, :, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)      # (Q,)
+    a = a_ref[0, :, 0].astype(jnp.float32)        # (Q,) log-decay per step
+    Bm = b_ref[0, :, 0].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0, :, 0].astype(jnp.float32)       # (Q, N)
+
+    cs = jnp.cumsum(a)                            # (Q,)
+    seg = cs[:, None] - cs[None, :]               # (Q, Q) decay j->i
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.exp(jnp.where(jj <= ii, seg, NEG_INF))
+
+    s = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (Q, Q)
+    xdt = x * dt[:, None]
+    y = jax.lax.dot_general(s * L, xdt, (((1,), (0,)), ((), ())))  # (Q, P)
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    decay_end = jnp.exp(cs[-1] - cs)              # (Q,)
+    st = jax.lax.dot_general(xdt * decay_end[:, None], Bm,
+                             (((0,), (0,)), ((), ())))          # (P, N)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+
+
+def ssd_chunk(
+    x: jnp.ndarray,      # (BC, Q, H, P)   batch*chunks flattened
+    dt: jnp.ndarray,     # (BC, Q, H)
+    a: jnp.ndarray,      # (BC, Q, H)      log-decay dt*A
+    Bm: jnp.ndarray,     # (BC, Q, H, N)
+    Cm: jnp.ndarray,     # (BC, Q, H, N)
+    *,
+    interpret: bool = True,
+):
+    """Returns (y_intra (BC,Q,H,P) f32, states (BC,H,P,N) f32)."""
+    BC, Q, H, P = x.shape
+    N = Bm.shape[-1]
+    kernel = functools.partial(_ssd_chunk_kernel, Q=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=(BC, H),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, Q, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h: (b, 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BC, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((BC, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a, Bm, Cm)

@@ -1,0 +1,8 @@
+"""Launcher: production meshes, sharding rules, step builders, dry-run."""
+from .mesh import dp_axes, make_host_mesh, make_production_mesh
+from .sharding import batch_specs, cache_specs, param_specs
+from .steps import make_prefill_step, make_serve_step, make_train_step
+
+__all__ = ["dp_axes", "make_host_mesh", "make_production_mesh", "batch_specs",
+           "cache_specs", "param_specs", "make_prefill_step", "make_serve_step",
+           "make_train_step"]

@@ -1,0 +1,92 @@
+"""Broadcast vs systolic operand movement at mesh scale (DESIGN.md §2).
+
+The paper's array-level finding — systolic neighbor links beat global
+broadcast wiring — has an exact distributed analogue on the TPU `model`
+axis:
+
+  broadcast_matmul: all-gather the column-sharded weight (global operand
+      delivery, XLA's default for an unsharded-K matmul), then one local
+      matmul. Link cost: every device receives the full weight each step;
+      no compute/comm overlap within the op.
+
+  ring_matmul ("systolic"): keep activations K-sharded; each of the n steps
+      multiplies the resident activation shard against the current weight
+      shard and `ppermute`s the partial to the neighbor — compute overlaps
+      the permute exactly like macros overlap neighbor weight passes. Per
+      step only 1/n of the output moves per link.
+
+Both compute X @ W for X (M, K) row-replicated / K-sharded and W (K, N)
+K-sharded. Used by the §Perf iterations and validated for numerics in
+tests/test_collective_matmul.py on a host mesh.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def broadcast_matmul(x: jnp.ndarray, w: jnp.ndarray, mesh, axis: str = "model"):
+    """All-gather-based: W arrives whole, one big local matmul."""
+
+    def inner(xs, ws):
+        wf = jax.lax.all_gather(ws, axis, axis=0, tiled=True)  # (K, N)
+        return xs @ wf
+
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(None, None), P(axis, None)),
+        out_specs=P(None, None), check_vma=False,
+    )(x, w)
+
+
+def ring_matmul(x: jnp.ndarray, w: jnp.ndarray, mesh, axis: str = "model"):
+    """Systolic: hand-rolled ring reduce-scatter + ring all-gather of the
+    partial products via `collective_permute` — each of the 2(n-1) steps
+    moves one (M, N/n) chunk to the neighbor while the next chunk's add is
+    free to overlap, the literal systolic schedule. Total bytes/device
+    2*(n-1)/n * M*N vs the broadcast path's per-device (K*N) weight gather
+    plus no overlap window.
+    """
+    N = w.shape[1]
+
+    def inner(xs, ws):
+        n = jax.lax.axis_size(axis)
+        me = jax.lax.axis_index(axis)
+        part = xs @ ws                                  # (M, K/n)@(K/n, N)
+        M = part.shape[0]
+        chunks = part.reshape(M, n, N // n)             # chunk along N
+        perm = [(i, (i + 1) % n) for i in range(n)]
+
+        def chunk_at(c):
+            return jax.lax.dynamic_slice_in_dim(
+                chunks, c, 1, axis=1)[:, 0, :]          # (M, N/n)
+
+        # --- ring reduce-scatter: the partial for chunk c=(d+1-t) visits
+        # device d at step t; after n-1 steps device d owns sum-chunk (d+2).
+        nn = chunks.shape[1]
+        acc = chunk_at((me + 1) % nn)
+        for t in range(1, nn):
+            acc = jax.lax.ppermute(acc, axis, perm)
+            acc = acc + chunk_at((me + 1 - t) % nn)
+        own = (me + 2) % nn
+
+        # --- ring all-gather: rotate owned chunks to rebuild (M, N)
+        out = jnp.zeros((M, nn, N // nn), acc.dtype)
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, acc[:, None, :], own, axis=1)
+        cur = acc
+        for t in range(1, nn):
+            cur = jax.lax.ppermute(cur, axis, perm)
+            src = (me - t + 2) % nn                      # whose chunk arrived
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, cur[:, None, :], src, axis=1)
+        return out.reshape(M, N)
+
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None)),
+        out_specs=P(None, None), check_vma=False,
+    )(x, w)

@@ -1,0 +1,162 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per architecture.
+
+Scheme (DESIGN.md §4): Megatron-style tensor parallelism over `model` +
+FSDP parameter sharding over the data-parallel axes `dp = ('pod','data')`:
+
+  column-parallel weights (d, f):   P(dp, 'model')     qkv/up/gate/in_proj
+  row-parallel weights (f, d):      P('model', dp)     o/down/out_proj
+  expert weights (E, d, f):         P('model', dp, _)  EP: experts on model
+  embed (V, d) / lm_head (d, V):    vocab on 'model', other dim FSDP
+  norms / small vectors:            replicated
+
+Rules are name-based over the parameter tree paths; stacked layer dims
+(leading L from scan stacks) are detected by ndim and skipped with None.
+GSPMD handles non-divisible shards by padding, so the same rules serve
+every architecture.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .mesh import dp_axes
+
+# name -> (spec builder given dp tuple), written for the UNSTACKED shape
+_COL2D = {"wq", "wk", "wv", "up", "gate", "wq_b", "wkv_b", "in_proj", "wx",
+          "wy", "wa", "wi", "proj", "lm_head"}
+_ROW2D = {"wo", "down", "out_proj"}
+_REP1D = {"scale", "bias", "A_log", "D", "dt_bias", "lambda", "conv_b",
+          "bq", "bk", "bv"}
+
+
+def _rule_for(path_names: list[str], ndim_base: int, dp) -> P | None:
+    name = path_names[-1]
+    parents = set(path_names[:-1])
+    if name in _REP1D:
+        return P(*([None] * ndim_base))
+    if name == "embed":
+        return P("model", dp)
+    if name == "dec_pos":
+        return P(None, dp)
+    if name == "conv_w":
+        return P(None, "model")
+    if name == "router":
+        return P(dp, None)
+    if (name in ("gate", "up", "down") and ndim_base == 3
+            and len(path_names) >= 2 and path_names[-2] == "moe"):
+        # MoE expert banks (E, d, f) / (E, f, d): experts over model (EP)
+        return P("model", dp, None)
+    if name in _COL2D and ndim_base == 2:
+        return P(dp, "model")
+    if name in _ROW2D and ndim_base == 2:
+        return P("model", dp)
+    return None  # no specific rule at this base ndim — caller tries stacked
+
+
+def _fit(spec: P, leaf, mesh) -> P:
+    """Drop spec axes whose mesh extent does not divide the dim size —
+    jit in_shardings require exact divisibility (unlike constraint hints)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        extent = int(np.prod([sizes[a] for a in axes]))
+        out.append(entry if leaf.shape[dim] % extent == 0 else None)
+    return P(*out)
+
+
+def param_specs(abstract_params: Any, mesh) -> Any:
+    """PartitionSpec tree matching an (abstract) parameter tree."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        names = [str(n) for n in names]
+        # try base ndim = leaf.ndim, then leaf.ndim - 1 (stacked layer dim)
+        for extra in (0, 1):
+            nd = leaf.ndim - extra
+            if nd < 0:
+                continue
+            r = _rule_for(names, nd, dp)
+            if r is not None and len(r) == nd:
+                return _fit(P(*([None] * extra + list(r))), leaf, mesh)
+        # default: FSDP-shard the largest dim of any big unmatched tensor
+        if leaf.ndim >= 2 and int(np.prod(leaf.shape)) >= 1 << 20:
+            big = int(np.argmax(leaf.shape))
+            ax = [None] * leaf.ndim
+            ax[big] = dp
+            return _fit(P(*ax), leaf, mesh)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+
+def batch_specs(abstract_batch: Any, mesh) -> Any:
+    dp = dp_axes(mesh)
+    dpt = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "positions":                        # (3, S) mrope grid
+            return P(*([None] * leaf.ndim))
+        # batch-leading tensors shard B over dp
+        return _fit(P(*([dpt] + [None] * (leaf.ndim - 1))), leaf, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_batch)
+
+
+def cache_specs(abstract_cache: Any, mesh) -> Any:
+    """Decode caches: batch dim over dp, head/width dims over model."""
+    dp = dp_axes(mesh)
+    dpt = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "name", str(k)))) for k in path]
+        nd = leaf.ndim
+        name = names[-1]
+        fit = lambda sp: _fit(sp, leaf, mesh)
+        # KVCache leaves: (L, B, S, Hkv, hd) or (B, S, Hkv, hd).
+        # S shards over `model`: decode contracts S locally and psums a
+        # (B, H, 1) scalar tree instead of gathering the cache; head-dim
+        # sharding would be dropped anyway whenever Hkv < |model|.
+        if name in ("k", "v"):
+            base = [dpt, "model", None, None]
+            return fit(P(*([None] * (nd - 4) + base))) if nd >= 4 else P(*([None] * nd))
+        if name in ("ckv", "krope"):                  # (L, B, S, r)
+            base = [dpt, "model", None]
+            return fit(P(*([None] * (nd - 3) + base)))
+        if name == "state":                           # SSM (L,B,H,P,N) / LRU (L,B,W)
+            if nd == 5:
+                return fit(P(None, dpt, "model", None, None))
+            if nd == 4:
+                return fit(P(dpt, "model", None, None))
+            if nd == 3:
+                return fit(P(None, dpt, "model"))
+            if nd == 2:
+                return fit(P(dpt, "model"))
+        if name == "conv":                            # (L, B, W-1, C)
+            base = [dpt, None, "model"]
+            return fit(P(*([None] * (nd - 3) + base)))
+        return fit(P(*([dpt] + [None] * (nd - 1)))) if nd >= 1 else P()
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_cache)
+
+
+def shardings_from_specs(specs: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_shape(abstract: Any, shardings: Any) -> Any:
+    """Attach shardings to ShapeDtypeStructs (dry-run inputs)."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings)

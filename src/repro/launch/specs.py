@@ -1,0 +1,64 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation anywhere — shapes/dtypes only, shardable, weak-type
+correct. Modality frontends are stubs per the assignment: whisper gets
+precomputed frame embeddings, qwen2-vl gets patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config
+from ..configs.base import ArchConfig
+
+N_VISION_PATCHES = 256
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_abstract(cfg: ArchConfig, kind: str, batch: int, seq: int) -> dict:
+    """Abstract batch for train/prefill (full sequence) or decode (1 token)."""
+    B, S = batch, seq
+    out: dict = {}
+    if kind in ("train", "prefill"):
+        if cfg.enc_dec:
+            dec_len = min(S, cfg.max_decoder_len)
+            out["frames"] = _sds((B, S, cfg.d_model), jnp.float32)
+            out["tokens"] = _sds((B, dec_len), jnp.int32)
+            if kind == "train":
+                out["targets"] = _sds((B, dec_len), jnp.int32)
+        else:
+            out["tokens"] = _sds((B, S), jnp.int32)
+            if kind == "train":
+                out["targets"] = _sds((B, S), jnp.int32)
+            if cfg.mrope:
+                out["vision_embeds"] = _sds((B, N_VISION_PATCHES, cfg.d_model), jnp.float32)
+                out["positions"] = _sds((3, S), jnp.int32)
+    else:  # decode
+        out["tokens"] = _sds((B, 1), jnp.int32)
+        if cfg.enc_dec:
+            out["frames"] = _sds((B, S, cfg.d_model), jnp.float32)
+    return out
+
+
+def cache_abstract(api, B: int, cache_len: int):
+    import functools
+    return jax.eval_shape(functools.partial(api.init_cache, B, cache_len))
+
+
+def input_specs(arch: str, shape: str):
+    """(arch, shape-cell) -> dict with kind + abstract batch (and cache for
+    decode kinds). The returned structures feed jit(...).lower() directly."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    kind = cell["kind"]
+    return {
+        "cfg": cfg,
+        "kind": kind,
+        "batch": batch_abstract(cfg, kind, cell["global_batch"], cell["seq_len"]),
+        "global_batch": cell["global_batch"],
+        "seq_len": cell["seq_len"],
+    }

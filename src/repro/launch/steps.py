@@ -1,0 +1,85 @@
+"""Step builders: train_step / prefill_step / serve_step.
+
+train_step = loss -> grad -> (optional int8 error-feedback compression) ->
+optimizer update. Optimizer states share the parameter shardings (ZeRO via
+FSDP). The optimizer is Adafactor for >=100B-parameter configs (second-
+moment factoring keeps the 671B dry-run within HBM) and AdamW otherwise.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.transformer import ModelApi
+from ..optim import adafactor, adamw, error_feedback_update
+
+BIG_MODEL_PARAMS = 100e9
+
+
+def default_optimizer(cfg: ArchConfig):
+    if cfg.param_count() >= BIG_MODEL_PARAMS:
+        return adafactor(lr=1e-3)
+    return adamw(lr=3e-4)
+
+
+def make_train_step(api: ModelApi, optimizer=None, compress_grads: bool = False,
+                    microbatches: int = 1):
+    """microbatches > 1 enables gradient accumulation: the global batch is
+    split on its leading dim and scanned, so only one microbatch's
+    activations are ever live — the production memory config for the 4k
+    training cells."""
+    opt_init, opt_update = optimizer or default_optimizer(api.cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: api.loss(p, batch), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                assert B % microbatches == 0, (B, microbatches)
+                return x.reshape((microbatches, B // microbatches) + x.shape[1:])
+
+            mb = {k: (split(v) if k != "positions" else
+                      jnp.broadcast_to(v, (microbatches,) + v.shape))
+                  for k, v in batch.items()}
+
+            def acc_step(carry, mb_batch):
+                g_acc, l_acc = carry
+                (loss, _), grads = grads_of(params, mb_batch)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    g_acc, grads)
+                return (g_acc, l_acc + loss / microbatches), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_step, (g0, jnp.zeros(())), mb)
+            metrics = {"ce": loss}
+        if compress_grads:
+            grads, _ = error_feedback_update(grads, None)
+        new_params, new_opt, om = opt_update(grads, opt_state, params)
+        return new_params, new_opt, {**metrics, **om, "loss": loss}
+
+    return train_step, opt_init
+
+
+def make_prefill_step(api: ModelApi):
+    def prefill_step(params, batch):
+        logits = api.forward(params, batch)
+        # serving returns the last-position logits (next-token distribution)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(api: ModelApi):
+    def serve_step(params, cache, batch, index):
+        logits, new_cache = api.decode_step(params, cache, batch, index)
+        return logits[:, -1], new_cache
+
+    return serve_step

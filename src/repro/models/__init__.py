@@ -1,0 +1,7 @@
+"""Model zoo: composable layers + per-family builders."""
+from . import attention, layers, moe, recurrent, ssm, transformer, whisper
+from .model import build_model
+from .transformer import ModelApi
+
+__all__ = ["attention", "layers", "moe", "recurrent", "ssm", "transformer",
+           "whisper", "build_model", "ModelApi"]

@@ -1,0 +1,309 @@
+"""Attention family: GQA (bias / sliding-window / softcap), MLA, cross-attn.
+
+Three execution paths, one numerics:
+  * dense  — einsum scores, for short sequences and decode;
+  * blocked — online-softmax over KV chunks via lax.scan (pure-jnp flash),
+    used automatically for long prefill so the (S x S) score matrix never
+    materializes (prefill_32k / train_4k cells stay in memory budget);
+  * Pallas flash kernel (repro.kernels.flash_attention) — the TPU-target
+    fast path, numerically validated against these in interpret mode.
+
+MLA implements both the literal form (prefill) and the absorbed form
+(decode): the compressed c_kv cache is attended directly, with W_uk/W_uv
+absorbed into the query/output projections — the production decode path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..pspec import DP, TP, hint
+from .layers import Params, apply_mrope, apply_rope, dense_init, rmsnorm, rmsnorm_init, softcap
+
+NEG_INF = -2.0**30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_max, Hkv, D)
+    v: jnp.ndarray        # (B, S_max, Hkv, D)
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray      # (B, S_max, kv_lora)
+    krope: jnp.ndarray    # (B, S_max, rope_dim)
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, window=0) -> jnp.ndarray:
+    """(Q, K) bool mask; window > 0 adds sliding-window locality. `window`
+    may be a traced scalar (per-layer scanned value): 0 means global."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    w = jnp.asarray(window, jnp.int32)
+    weff = jnp.where(w > 0, w, jnp.asarray(2**30, jnp.int32))
+    m &= k_pos[None, :] > q_pos[:, None] - weff
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Core attends
+# ---------------------------------------------------------------------------
+
+def _dense_attend(q, k, v, mask, scale, cap=0.0):
+    """q: (B,Q,Hkv,G,D)  k/v: (B,K,Hkv,D)  mask: (B?,Q,K) or (Q,K).
+    Operands stay in their storage dtype; the contractions accumulate in
+    f32 (preferred_element_type) — halves K/V HBM traffic vs upcasting
+    (§Perf yi-6b decode iteration 3)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    if mask.ndim == 2:
+        mask = mask[None]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def _blocked_attend(q, k, v, q_pos, k_pos, scale, cap=0.0, window=0, block=1024):
+    """Online-softmax over KV chunks (lax.scan): flash attention in jnp.
+    Shapes as _dense_attend; never materializes (Q, K) for the full K."""
+    B, Q, Hkv, G, D = q.shape
+    Dv = v.shape[-1]
+    K = k.shape[1]
+    nblk = (K + block - 1) // block
+    pad = nblk * block - K
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2**30)
+    kb = k.reshape(B, nblk, block, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(nblk, block)
+    qf = q.astype(jnp.float32)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, pc = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kc.astype(jnp.float32)) * scale
+        if cap > 0:
+            s = cap * jnp.tanh(s / cap)
+        msk = causal_mask(q_pos, pc, window)          # (Q, block)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Q), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Q), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Q, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,Q,Hkv,G,D)
+
+
+def attend(q, k, v, q_pos, k_pos, scale, cap=0.0, window=0, block_threshold=2048):
+    """Dispatch dense vs blocked by KV length. q/k head dim may differ from
+    v head dim (MLA). Decode (Q == 1) always takes the dense path: the
+    score tensor is only (B, H, S) and, with the KV cache sequence-sharded
+    over `model`, the contraction lowers to a tiny (B, H, 1) psum instead of
+    gathering the cache (the yi-6b decode_32k §Perf fix)."""
+    B, Q, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Q, Hkv, G, D)
+    if Q == 1 or k.shape[1] <= block_threshold:
+        mask = causal_mask(q_pos, k_pos, window)
+        o = _dense_attend(qg, k, v, mask, scale, cap)
+    else:
+        o = _blocked_attend(qg, k, v, q_pos, k_pos, scale, cap, window)
+    return o.reshape(B, Q, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA block (llama / qwen / gemma / stablelm / recurrentgemma-attn flavors)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    d, hd, H, Hkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, Hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, Hkv * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    return p
+
+
+def gqa_apply(
+    params: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,                       # (B, S, d)
+    positions: jnp.ndarray,               # (S,) or (3, S) for mrope
+    window: jnp.ndarray | int = 0,        # 0 = global
+    cache: Optional[KVCache] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+):
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = hint(q.reshape(B, S, H, hd), DP, None, TP, None)
+    k = hint(k.reshape(B, S, Hkv, hd), DP, None, TP, None)
+    v = hint(v.reshape(B, S, Hkv, hd), DP, None, TP, None)
+
+    pos1 = positions if positions.ndim == 1 else positions[0]
+    if cfg.mrope and positions.ndim == 2:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos1, cfg.rope_theta, cfg.partial_rotary)
+        k = apply_rope(k, pos1, cfg.rope_theta, cfg.partial_rotary)
+
+    if cache is not None:
+        # decode: insert at cache_index, attend over the whole cache
+        k_full = jax.lax.dynamic_update_slice(cache.k, k, (0, cache_index, 0, 0))
+        v_full = jax.lax.dynamic_update_slice(cache.v, v, (0, cache_index, 0, 0))
+        new_cache = KVCache(k_full, v_full)
+        k_pos = jnp.arange(cache.k.shape[1])
+        o = attend(q, k_full, v_full, jnp.atleast_1d(pos1), k_pos,
+                   1.0 / jnp.sqrt(hd).astype(jnp.float32),
+                   cap=cfg.attn_logit_softcap, window=window)
+    else:
+        new_cache = None
+        o = attend(q, k, v, pos1, pos1, 1.0 / jnp.sqrt(hd).astype(jnp.float32),
+                   cap=cfg.attn_logit_softcap, window=window)
+    o = hint(o, DP, None, TP, None)
+    out = o.reshape(B, S, H * hd) @ params["wo"]
+    return hint(out, DP, None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, H * qk_hd, dtype),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": dense_init(ks[4], H * m.v_head_dim, d, dtype),
+    }
+
+
+def mla_prefill(params: Params, cfg: ArchConfig, x, positions):
+    """Literal MLA: expand c_kv to per-head K/V, run standard attention.
+    Returns (out, MLACache) so a following decode can attend compressed."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    nope, rope, vh = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = rmsnorm(params["q_norm"], x @ params["wq_a"]) @ params["wq_b"]
+    q = hint(q.reshape(B, S, H, nope + rope), DP, None, TP, None)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"]
+    ckv = rmsnorm(params["kv_norm"], kv_a[..., : m.kv_lora_rank])
+    k_rope = apply_rope(kv_a[..., m.kv_lora_rank:][:, :, None, :], positions, cfg.rope_theta)
+
+    kv = hint((ckv @ params["wkv_b"]).reshape(B, S, H, nope + vh), DP, None, TP, None)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope))], axis=-1)
+    qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    scale = 1.0 / jnp.sqrt(nope + rope).astype(jnp.float32)
+    o = hint(attend(qc, k, v, positions, positions, scale), DP, None, TP, None)
+    out = o.reshape(B, S, H * vh) @ params["wo"]
+    return hint(out, DP, None, None), MLACache(ckv=ckv, krope=k_rope[:, :, 0, :])
+
+
+def mla_decode(params: Params, cfg: ArchConfig, x, positions, cache: MLACache,
+               cache_index):
+    """Absorbed MLA decode: attend the compressed cache directly.
+    W_uk is absorbed into the query (q_nope' = q_nope @ W_uk per head) and
+    W_uv into the output — per-token cost is O(H * kv_lora * S_ctx)."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape  # S = 1 typically
+    nope, rope, vh, r = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim, m.kv_lora_rank
+
+    q = rmsnorm(params["q_norm"], x @ params["wq_a"]) @ params["wq_b"]
+    q = q.reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"]
+    ckv_new = rmsnorm(params["kv_norm"], kv_a[..., :r])
+    krope_new = apply_rope(kv_a[..., r:][:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    ckv = jax.lax.dynamic_update_slice(cache.ckv, ckv_new, (0, cache_index, 0))
+    krope = jax.lax.dynamic_update_slice(cache.krope, krope_new, (0, cache_index, 0))
+    new_cache = MLACache(ckv=ckv, krope=krope)
+
+    wkv_b = params["wkv_b"].reshape(r, H, nope + vh)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]          # (r, H, nope/vh)
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))               # absorbed query
+
+    s = jnp.einsum("bshr,bkr->bhsk", q_abs, ckv.astype(jnp.float32))
+    s += jnp.einsum("bshp,bkp->bhsk", q_rope.astype(jnp.float32),
+                    krope.astype(jnp.float32))
+    s *= 1.0 / jnp.sqrt(nope + rope).astype(jnp.float32)
+    k_pos = jnp.arange(ckv.shape[1])
+    s = jnp.where(causal_mask(jnp.atleast_1d(positions), k_pos)[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhsk,bkr->bshr", p, ckv.astype(jnp.float32))
+    o = jnp.einsum("bshr,rhv->bshv", o_c, w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = o.reshape(B, S, H * vh) @ params["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_apply(params: Params, cfg: ArchConfig, x, enc_kv: KVCache):
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k, v = enc_kv.k, enc_kv.v
+    q_pos = jnp.arange(S)
+    k_pos = jnp.zeros((k.shape[1],), jnp.int32)  # no causality across modalities
+    mask = jnp.ones((S, k.shape[1]), bool)
+    o = _dense_attend(q.reshape(B, S, Hkv, H // Hkv, hd), k, v, mask,
+                      1.0 / jnp.sqrt(hd).astype(jnp.float32))
+    del q_pos, k_pos
+    return o.reshape(B, S, H * hd) @ params["wo"]
+
+
+def cross_kv(params: Params, cfg: ArchConfig, enc_out: jnp.ndarray) -> KVCache:
+    B, S, _ = enc_out.shape
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ params["wk"]).reshape(B, S, Hkv, hd)
+    v = (enc_out @ params["wv"]).reshape(B, S, Hkv, hd)
+    return KVCache(k, v)

@@ -1,0 +1,152 @@
+"""Base layers: norms, embeddings, rotary variants, MLPs, inits.
+
+Pure-functional style: parameters are nested dicts of jnp arrays; every
+layer is (init, apply) pair. No flax dependency — the framework stays
+self-contained and scan-over-layers friendly (per-layer params stack on a
+leading axis).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..pspec import DP, TP, hint
+
+Params = dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float | None = None):
+    s = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard / partial / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float, rot_frac: float = 1.0):
+    rot_dim = int(head_dim * rot_frac) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               rot_frac: float = 1.0) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    inv, rot_dim = rope_frequencies(x.shape[-1], theta, rot_frac)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., : rot_dim // 2], xr[..., rot_dim // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections=(16, 24, 24)) -> jnp.ndarray:
+    """Qwen2-VL multimodal rotary: positions (3, ..., S) for (t, h, w) axes,
+    each axis rotating its own frequency section. For pure-text streams the
+    three position grids coincide and M-RoPE reduces to RoPE."""
+    hd = x.shape[-1]
+    inv, rot_dim = rope_frequencies(hd, theta, 1.0)
+    half = rot_dim // 2
+    # section id per frequency index
+    sec = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])[:half]
+    pos = positions.astype(jnp.float32)  # (3, ..., S)
+    ang_all = pos[..., None] * inv  # (3, ..., S, half)
+    # pick, per frequency index, the angle from that frequency's (t/h/w) axis
+    sel = jax.nn.one_hot(sec, 3, dtype=jnp.float32).T  # (3, half)
+    sel = sel.reshape((3,) + (1,) * (ang_all.ndim - 2) + (half,))
+    ang = jnp.sum(ang_all * sel, axis=0)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:rot_dim]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x[..., rot_dim:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Softcap / activations
+# ---------------------------------------------------------------------------
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True),
+        "geglu": jax.nn.gelu, "swiglu": jax.nn.silu, "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / plain)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 3)
+    gated = act in ("silu", "geglu", "swiglu")
+    p = {"up": dense_init(ks[0], d, d_ff, dtype), "down": dense_init(ks[1], d_ff, d, dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp(params: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    fn = activation(act)
+    up = x @ params["up"]
+    if "gate" in params:
+        up = fn(x @ params["gate"]) * up
+    else:
+        up = fn(up)
+    up = hint(up, DP, None, TP)
+    return hint(up @ params["down"], DP, None, None)

@@ -1,0 +1,19 @@
+"""build_model: ArchConfig -> ModelApi dispatcher."""
+from __future__ import annotations
+
+from ..configs.base import ArchConfig
+from .transformer import (ModelApi, build_dense_lm, build_hybrid_lm,
+                          build_mamba_lm, build_moe_lm)
+from .whisper import build_encdec
+
+
+def build_model(cfg: ArchConfig, remat: bool = True, unroll: bool = False) -> ModelApi:
+    if cfg.enc_dec:
+        return build_encdec(cfg, remat=remat, unroll=unroll)
+    if cfg.attn == "none":
+        return build_mamba_lm(cfg, remat=remat, unroll=unroll)
+    if cfg.attn == "rglru_hybrid":
+        return build_hybrid_lm(cfg, remat=remat, unroll=unroll)
+    if cfg.moe is not None:
+        return build_moe_lm(cfg, remat=remat, unroll=unroll)
+    return build_dense_lm(cfg, remat=remat, unroll=unroll)

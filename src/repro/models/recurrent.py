@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The temporal mixing is a gated linear recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+computed with `jax.lax.associative_scan` for training/prefill (log-depth —
+the TPU-native counterpart of the paper's "linear recurrences scale to
+500k-token contexts") and an O(1) state update for decode.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..pspec import DP, TP, hint
+from .layers import Params, dense_init
+
+C_EXP = 8.0  # RG-LRU exponent constant (Griffin)
+
+
+class LRUCache(NamedTuple):
+    state: jnp.ndarray    # (B, W) recurrence state
+    conv: jnp.ndarray     # (B, conv_w - 1, W) conv tail
+
+
+def rglru_init(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    d, W = cfg.d_model, cfg.hybrid.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(ks[0], d, W, dtype),          # recurrence branch
+        "wy": dense_init(ks[1], d, W, dtype),          # gate branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.hybrid.conv_width, W), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "wa": dense_init(ks[3], W, W, dtype, scale=0.01),   # recurrence gate
+        "wi": dense_init(ks[4], W, W, dtype, scale=0.01),   # input gate
+        "lambda": jnp.full((W,), 2.0, jnp.float32),    # a = sigmoid(lambda)^(c*r)
+        "wo": dense_init(ks[5], W, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _lru_scan(a: jnp.ndarray, bx: jnp.ndarray, h0: jnp.ndarray | None):
+    """h_t = a_t h_{t-1} + bx_t via associative scan over (a, b) pairs.
+    a, bx: (B, S, W) float32. Returns h: (B, S, W)."""
+    if h0 is not None:
+        # fold initial state into the first element
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_apply(params: Params, cfg: ArchConfig, x: jnp.ndarray,
+                cache: LRUCache | None = None):
+    """x: (B, S, D). Returns (out, new_cache)."""
+    B, S, D = x.shape
+    Wd = cfg.hybrid.lru_width
+
+    y_gate = hint(jax.nn.gelu(x @ params["wy"]), DP, None, TP)
+    xr = hint(x @ params["wx"], DP, None, TP)
+
+    if cache is None:
+        xr = _causal_conv(xr, params["conv_w"], params["conv_b"])
+        conv_tail = jnp.zeros((B, cfg.hybrid.conv_width - 1, Wd), x.dtype)
+        h0 = None
+    else:
+        conv_in = jnp.concatenate([cache.conv, xr], axis=1)
+        w = params["conv_w"]
+        xr = (jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32), w.astype(jnp.float32))
+              + params["conv_b"].astype(jnp.float32))[:, None].astype(x.dtype)
+        conv_tail = conv_in[:, 1:]
+        h0 = cache.state
+
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["wa"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["wi"].astype(jnp.float32))
+    log_a = -C_EXP * r * jax.nn.softplus(params["lambda"])     # log a_t <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, None)) * (i * xf)
+
+    if cache is None:
+        h = _lru_scan(a, gated, None)
+        new_state = h[:, -1]
+    else:
+        h = a * h0[:, None] + gated
+        new_state = h[:, -1]
+    out = (h.astype(x.dtype) * y_gate) @ params["wo"]
+    return out, LRUCache(state=new_state, conv=conv_tail)

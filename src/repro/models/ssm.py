@@ -1,0 +1,170 @@
+"""Mamba-2 block: SSD (state-space duality) with chunked scan.
+
+Training/prefill uses the SSD chunked algorithm (arXiv:2405.21060 §6):
+intra-chunk quadratic term + inter-chunk linear state recurrence — the
+sub-quadratic path that makes the long_500k cell viable. Decode is the O(1)
+state update. The chunk inner product is the compute hot spot and has a
+Pallas kernel (repro.kernels.ssd_scan) validated against this reference.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..pspec import DP, TP, hint
+from .layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray    # (B, W-1, conv_channels)
+    state: jnp.ndarray   # (B, H, P, N)
+
+
+def ssm_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, H, s.head_dim, s.d_state, s.n_groups, conv_ch
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    d_inner, H, P, N, G, conv_ch = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.d_conv, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),           # (W, 1, C) HIO? use dim nums
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1],
+    )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _segsum(a):
+    """log-space cumulative decay matrix: L[i, j] = sum_{j<k<=i} a_k, -inf for j>i."""
+    S = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """SSD forward. x:(B,S,H,P)  dt:(B,S,H)  A:(H,)  Bm/Cm:(B,S,G,N).
+    Returns (y:(B,S,H,P), final_state:(B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    nc = S // chunk
+    assert S % chunk == 0, "sequence must be divisible by chunk"
+    rep = H // G
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, chunk, G, N), rep, axis=3)   # (B,nc,Q,H,N)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, chunk, G, N), rep, axis=3)
+
+    a = dtc * A  # (B,nc,Q,H) log-decay per step (A negative)
+    a_hsplit = a.transpose(0, 1, 3, 2)                               # (B,nc,H,Q)
+    L = jnp.exp(_segsum(a_hsplit))                                   # (B,nc,H,Q,Q)
+
+    # intra-chunk (quadratic within chunk)
+    s = jnp.einsum("bcqhn,bckhn->bchqk", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    y_intra = jnp.einsum("bchqk,bchqk,bckh,bckhp->bcqhp",
+                         s, L, dtc, xc.astype(jnp.float32))
+
+    # chunk-final states
+    a_cum = jnp.cumsum(a_hsplit, axis=-1)                            # (B,nc,H,Q)
+    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)                  # (B,nc,H,Q)
+    states = jnp.einsum("bckh,bchk,bckhn,bckhp->bchpn",
+                        dtc, decay_to_end, Bc.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # inter-chunk recurrence over nc (linear scan)
+    chunk_decay = jnp.exp(a_cum[..., -1])                            # (B,nc,H)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state entering this chunk
+
+    s0 = jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None else init_state
+    final, entering = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    entering = entering.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,P,N)
+
+    decay_from_start = jnp.exp(a_cum)                                # (B,nc,H,Q)
+    y_inter = jnp.einsum("bcqhn,bchq,bchpn->bcqhp",
+                         Cc.astype(jnp.float32), decay_from_start, entering)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def mamba2_apply(params: Params, cfg: ArchConfig, x: jnp.ndarray,
+                 cache: SSMCache | None = None):
+    """x: (B, S, D). cache!=None -> single-step decode (S small, conv+state)."""
+    s = cfg.ssm
+    d_inner, H, P, N, G, conv_ch = ssm_dims(cfg)
+    B, S, D = x.shape
+
+    zxbcdt = hint(x @ params["in_proj"], DP, None, TP)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner : d_inner + conv_ch]
+    dt = jax.nn.softplus(zxbcdt[..., -H:].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    if cache is None:
+        xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+        xBC = jax.nn.silu(xBC)
+        xs = hint(xBC[..., :d_inner].reshape(B, S, H, P), DP, None, TP, None)
+        Bm = xBC[..., d_inner : d_inner + G * N].reshape(B, S, G, N)
+        Cm = xBC[..., d_inner + G * N :].reshape(B, S, G, N)
+        y, final = ssd_chunked(xs, dt, A, Bm, Cm, chunk=min(s.chunk, S))
+        new_cache = SSMCache(
+            conv=jnp.zeros((B, s.d_conv - 1, conv_ch), x.dtype),
+            state=final,
+        )
+    else:
+        # decode: roll conv state, single recurrence step (S == 1)
+        conv_in = jnp.concatenate([cache.conv, xBC], axis=1)         # (B, W, C)
+        w = params["conv_w"]
+        xBC = jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32),
+                         w.astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+        xBC = jax.nn.silu(xBC)[:, None, :].astype(x.dtype)
+        xs = xBC[..., :d_inner].reshape(B, H, P)
+        Bm = jnp.repeat(xBC[..., d_inner : d_inner + G * N].reshape(B, G, N), H // G, axis=1)
+        Cm = jnp.repeat(xBC[..., d_inner + G * N :].reshape(B, G, N), H // G, axis=1)
+        dt1 = dt[:, 0]                                               # (B, H)
+        decay = jnp.exp(dt1 * A)                                     # (B, H)
+        st = cache.state * decay[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt1, Bm.astype(jnp.float32), xs.astype(jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(jnp.float32), st)[:, None]
+        y = y.reshape(B, 1, H, P)
+        new_cache = SSMCache(conv=conv_in[:, 1:], state=st)
+        xs = xs[:, None]
+
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    return y @ params["out_proj"], new_cache

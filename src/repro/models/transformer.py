@@ -1,0 +1,605 @@
+"""Model assembly: decoder-only LMs, MoE/MLA stacks, SSM, hybrid, enc-dec.
+
+Layers are grouped into homogeneous *stacks* whose per-layer parameters are
+stacked on a leading axis and executed with `jax.lax.scan` — a 96-layer
+model lowers to one rolled loop, keeping HLO size and compile time flat in
+depth (critical for the 40-cell dry-run). Heterogeneous architectures
+(DeepSeek dense->MoE prefix, RecurrentGemma's (rec, rec, attn) pattern) are
+ordered sequences of stacks / group-scans.
+
+Every model exposes the same API (ModelApi):
+  init(key) -> params
+  forward(params, batch) -> logits                     (train / prefill)
+  loss(params, batch) -> (scalar, metrics)
+  init_cache(batch_size, cache_len) -> cache           (decode)
+  decode_step(params, cache, batch, index) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..pspec import CONFIG as PSPEC_CONFIG, DP, TP, hint, residual_hint
+from . import attention as attn
+from . import moe as moe_mod
+from . import recurrent as rec_mod
+from . import ssm as ssm_mod
+from .attention import KVCache, MLACache
+from .layers import (Params, activation, dense_init, embed_init, layernorm,
+                     layernorm_init, mlp, mlp_init, rmsnorm, rmsnorm_init,
+                     softcap)
+
+AUX_LOSS_WEIGHT = 1e-3
+
+
+def _use_post_norm(cfg: ArchConfig) -> bool:
+    return cfg.name.startswith(("gemma2", "recurrentgemma"))
+
+
+def _embed_scale(cfg: ArchConfig) -> float:
+    return float(cfg.d_model) ** 0.5 if _use_post_norm(cfg) else 1.0
+
+
+# ---------------------------------------------------------------------------
+# Blocks (init + apply); every block is residual on (B, S, D)
+# ---------------------------------------------------------------------------
+
+def dense_block_init(key, cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "attn_norm": rmsnorm_init(cfg.d_model),
+        "attn": attn.gqa_init(ks[0], cfg),
+        "mlp_norm": rmsnorm_init(cfg.d_model),
+        "mlp": mlp_init(ks[1], cfg.d_model, d_ff or cfg.d_ff, cfg.act),
+    }
+    if _use_post_norm(cfg):
+        p["attn_post"] = rmsnorm_init(cfg.d_model)
+        p["mlp_post"] = rmsnorm_init(cfg.d_model)
+    return p
+
+
+def dense_block_apply(params, cfg: ArchConfig, x, positions, window,
+                      cache=None, cache_index=None):
+    h = rmsnorm(params["attn_norm"], x)
+    a, new_cache = attn.gqa_apply(params["attn"], cfg, h, positions, window,
+                                  cache, cache_index)
+    if "attn_post" in params:
+        a = rmsnorm(params["attn_post"], a)
+    x = x + a
+    h = rmsnorm(params["mlp_norm"], x)
+    m = mlp(params["mlp"], h, cfg.act)
+    if "mlp_post" in params:
+        m = rmsnorm(params["mlp_post"], m)
+    return residual_hint(x + m), new_cache
+
+
+def mla_block_init(key, cfg: ArchConfig, use_moe: bool) -> Params:
+    ks = jax.random.split(key, 2)
+    p = {
+        "attn_norm": rmsnorm_init(cfg.d_model),
+        "attn": attn.mla_init(ks[0], cfg),
+        "mlp_norm": rmsnorm_init(cfg.d_model),
+    }
+    if use_moe:
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.moe.dense_d_ff, cfg.act)
+    return p
+
+
+def mla_block_apply(params, cfg: ArchConfig, x, positions, cache=None,
+                    cache_index=None):
+    h = rmsnorm(params["attn_norm"], x)
+    if cache is None:
+        a, new_cache = attn.mla_prefill(params["attn"], cfg, h, positions)
+    else:
+        a, new_cache = attn.mla_decode(params["attn"], cfg, h, positions,
+                                       cache, cache_index)
+    x = x + a
+    h = rmsnorm(params["mlp_norm"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in params:
+        m, stats = moe_mod.moe_apply(params["moe"], cfg, h)
+        aux = stats.aux_loss
+    else:
+        m = mlp(params["mlp"], h, cfg.act)
+    return residual_hint(x + m), new_cache, aux
+
+
+def moe_gqa_block_init(key, cfg: ArchConfig, use_moe: bool) -> Params:
+    ks = jax.random.split(key, 2)
+    p = {
+        "attn_norm": rmsnorm_init(cfg.d_model),
+        "attn": attn.gqa_init(ks[0], cfg),
+        "mlp_norm": rmsnorm_init(cfg.d_model),
+    }
+    if use_moe:
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.moe.dense_d_ff, cfg.act)
+    return p
+
+
+def moe_gqa_block_apply(params, cfg: ArchConfig, x, positions, cache=None,
+                        cache_index=None):
+    h = rmsnorm(params["attn_norm"], x)
+    a, new_cache = attn.gqa_apply(params["attn"], cfg, h, positions, 0,
+                                  cache, cache_index)
+    x = x + a
+    h = rmsnorm(params["mlp_norm"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in params:
+        m, stats = moe_mod.moe_apply(params["moe"], cfg, h)
+        aux = stats.aux_loss
+    else:
+        m = mlp(params["mlp"], h, cfg.act)
+    return residual_hint(x + m), new_cache, aux
+
+
+def mamba_block_init(key, cfg: ArchConfig) -> Params:
+    return {"norm": rmsnorm_init(cfg.d_model), "mixer": ssm_mod.mamba2_init(key, cfg)}
+
+
+def mamba_block_apply(params, cfg: ArchConfig, x, cache=None):
+    h = rmsnorm(params["norm"], x)
+    y, new_cache = ssm_mod.mamba2_apply(params["mixer"], cfg, h, cache)
+    return x + y, new_cache
+
+
+def rec_block_init(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    p = {
+        "mix_norm": rmsnorm_init(cfg.d_model),
+        "mixer": rec_mod.rglru_init(ks[0], cfg),
+        "mlp_norm": rmsnorm_init(cfg.d_model),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+    if _use_post_norm(cfg):
+        p["mix_post"] = rmsnorm_init(cfg.d_model)
+        p["mlp_post"] = rmsnorm_init(cfg.d_model)
+    return p
+
+
+def rec_block_apply(params, cfg: ArchConfig, x, cache=None):
+    h = rmsnorm(params["mix_norm"], x)
+    y, new_cache = rec_mod.rglru_apply(params["mixer"], cfg, h, cache)
+    if "mix_post" in params:
+        y = rmsnorm(params["mix_post"], y)
+    x = x + y
+    h = rmsnorm(params["mlp_norm"], x)
+    m = mlp(params["mlp"], h, cfg.act)
+    if "mlp_post" in params:
+        m = rmsnorm(params["mlp_post"], m)
+    return residual_hint(x + m), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stacked-scan machinery
+# ---------------------------------------------------------------------------
+
+def stack_init(key, n: int, init_fn: Callable) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def scan_stack(params, x, body, length: int, xs_extra=None, remat: bool = True,
+               unroll: bool = False):
+    """Run `body(layer_params, x, extra) -> (x, per_layer_out)` over a
+    stacked parameter pytree with lax.scan. `unroll=True` fully unrolls —
+    used by the dry-run cost pass so XLA's cost model (which counts while
+    bodies once) sees every layer."""
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, inp):
+        lp, extra = inp
+        new_x, out = fn(lp, carry, extra)
+        return new_x, out
+
+    xs = (params, xs_extra if xs_extra is not None else jnp.zeros((length,)))
+    return jax.lax.scan(step, x, xs, unroll=length if unroll else 1)
+
+
+# ---------------------------------------------------------------------------
+# ModelApi
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable
+    forward: Callable            # (params, batch) -> logits
+    loss: Callable               # (params, batch) -> (scalar, metrics)
+    init_cache: Callable         # (params_like, B, cache_len) -> cache
+    decode_step: Callable        # (params, cache, batch, index) -> (logits, cache)
+
+
+def _positions(cfg: ArchConfig, batch, S):
+    if cfg.mrope:
+        if "positions" in batch:
+            return batch["positions"]
+        p = jnp.arange(S)
+        return jnp.stack([p, p, p])  # text-only: three coincident grids
+    return jnp.arange(S)
+
+
+def _embed_tokens(cfg, params, batch):
+    x = params["embed"][batch["tokens"]]
+    if cfg.mrope and "vision_embeds" in batch:
+        v = batch["vision_embeds"].astype(x.dtype)
+        nv = v.shape[1]
+        x = jnp.concatenate([v, x[:, nv:]], axis=1)
+    return residual_hint(x * _embed_scale(cfg))
+
+
+def _lm_logits(cfg, params, x):
+    h = rmsnorm(params["final_norm"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = hint(h @ w, DP, None, TP)
+    if cfg.final_logit_softcap > 0:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits
+
+
+def _ce_loss(logits, targets, mask=None):
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+# ---------------------------------------------------------------------------
+# Dense decoder-only LM (gemma2 / yi / qwen2 / stablelm / qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def _dense_windows(cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.local_global_alternate and cfg.sliding_window:
+        return jnp.asarray(
+            [cfg.sliding_window if i % 2 == 0 else 0 for i in range(cfg.n_layers)],
+            jnp.int32)
+    return jnp.zeros((cfg.n_layers,), jnp.int32)
+
+
+def build_dense_lm(cfg: ArchConfig, remat: bool = True, unroll: bool = False) -> ModelApi:
+    L = cfg.n_layers
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "embed": embed_init(k1, cfg.vocab_size, cfg.d_model),
+            "blocks": stack_init(k2, L, lambda k: dense_block_init(k, cfg)),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(k3, cfg.d_model, cfg.vocab_size)
+        return p
+
+    windows = _dense_windows(cfg)
+
+    def forward(params, batch):
+        S = batch["tokens"].shape[1]
+        pos = _positions(cfg, batch, S)
+        x = _embed_tokens(cfg, params, batch)
+
+        def body(lp, x, win):
+            y, _ = dense_block_apply(lp, cfg, x, pos, win)
+            return y, jnp.zeros(())
+
+        x, _ = scan_stack(params["blocks"], x, body, L, xs_extra=windows, remat=remat, unroll=unroll)
+        return _lm_logits(cfg, params, x)
+
+    def loss(params, batch):
+        logits = forward(params, batch)
+        l = _ce_loss(logits, batch["targets"])
+        return l, {"ce": l}
+
+    def init_cache(B, cache_len, dtype=jnp.bfloat16):
+        sh = (L, B, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        return KVCache(k=jnp.zeros(sh, dtype), v=jnp.zeros(sh, dtype))
+
+    def decode_step(params, cache, batch, index):
+        tok = batch["tokens"]                    # (B, 1)
+        pos = jnp.full((1,), index, jnp.int32)
+        if cfg.mrope:
+            pos3 = jnp.stack([pos, pos, pos])
+        x = params["embed"][tok] * _embed_scale(cfg)
+
+        def body(lp, x, inp):
+            win, k, v = inp
+            y, nc = dense_block_apply(lp, cfg, x, pos3 if cfg.mrope else pos,
+                                      win, cache=KVCache(k, v), cache_index=index)
+            return y, nc
+
+        x, new_kv = scan_stack(params["blocks"], x, body, L,
+                               xs_extra=(windows, cache.k, cache.v), remat=False)
+        logits = _lm_logits(cfg, params, x)
+        return logits, KVCache(k=new_kv.k, v=new_kv.v)
+
+    return ModelApi(cfg, init, forward, loss, init_cache, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# MoE LM (deepseek-v3: MLA+MoE+MTP; moonshot: GQA+MoE)
+# ---------------------------------------------------------------------------
+
+def build_moe_lm(cfg: ArchConfig, remat: bool = True, unroll: bool = False) -> ModelApi:
+    mo = cfg.moe
+    n_dense, n_moe = mo.first_k_dense, cfg.n_layers - mo.first_k_dense
+    is_mla = cfg.attn == "mla"
+    blk_init = mla_block_init if is_mla else moe_gqa_block_init
+    blk_apply = mla_block_apply if is_mla else moe_gqa_block_apply
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        p = {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "dense_blocks": stack_init(ks[1], n_dense, lambda k: blk_init(k, cfg, use_moe=False)),
+            "moe_blocks": stack_init(ks[2], n_moe, lambda k: blk_init(k, cfg, use_moe=True)),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(ks[3], cfg.d_model, cfg.vocab_size)
+        if cfg.n_mtp:
+            km = jax.random.split(ks[4], 3)
+            p["mtp"] = {
+                "proj": dense_init(km[0], 2 * cfg.d_model, cfg.d_model),
+                "norm_h": rmsnorm_init(cfg.d_model),
+                "norm_e": rmsnorm_init(cfg.d_model),
+                "block": blk_init(km[1], cfg, use_moe=True),
+            }
+        return p
+
+    def _backbone(params, x, pos):
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def body(lp, x, _):
+            y, _, aux = blk_apply(lp, cfg, x, pos)
+            return y, aux
+
+        x, aux1 = scan_stack(params["dense_blocks"], x, body, n_dense, remat=remat, unroll=unroll)
+        x, aux2 = scan_stack(params["moe_blocks"], x, body, n_moe, remat=remat, unroll=unroll)
+        aux_total = jnp.sum(aux1) + jnp.sum(aux2)
+        return x, aux_total
+
+    def forward(params, batch):
+        S = batch["tokens"].shape[1]
+        pos = _positions(cfg, batch, S)
+        x = _embed_tokens(cfg, params, batch)
+        x, _ = _backbone(params, x, pos)
+        return _lm_logits(cfg, params, x)
+
+    def loss(params, batch):
+        S = batch["tokens"].shape[1]
+        pos = _positions(cfg, batch, S)
+        x = _embed_tokens(cfg, params, batch)
+        h, aux = _backbone(params, x, pos)
+        logits = _lm_logits(cfg, params, h)
+        l = _ce_loss(logits, batch["targets"])
+        metrics = {"ce": l, "moe_aux": aux}
+        total = l + AUX_LOSS_WEIGHT * aux
+        if cfg.n_mtp and "mtp" in params:
+            # MTP head: predict token t+2 from (h_t, embed(t+1))
+            mp = params["mtp"]
+            emb_next = params["embed"][batch["tokens"]]
+            cat = jnp.concatenate(
+                [rmsnorm(mp["norm_h"], h[:, :-1]),
+                 rmsnorm(mp["norm_e"], emb_next[:, 1:])], axis=-1)
+            h2 = cat @ mp["proj"]
+            h2, _, mtp_aux = blk_apply(mp["block"], cfg, h2, pos[:-1] if pos.ndim == 1 else pos[..., :-1])
+            mtp_logits = _lm_logits(cfg, params, h2)
+            mtp_l = _ce_loss(mtp_logits[:, :-1], batch["targets"][:, 2:])
+            metrics["mtp_ce"] = mtp_l
+            total = total + 0.3 * mtp_l + AUX_LOSS_WEIGHT * mtp_aux
+        return total, metrics
+
+    def init_cache(B, cache_len, dtype=jnp.bfloat16):
+        if is_mla:
+            m = cfg.mla
+            mk = lambda n: MLACache(
+                ckv=jnp.zeros((n, B, cache_len, m.kv_lora_rank), dtype),
+                krope=jnp.zeros((n, B, cache_len, m.qk_rope_head_dim), dtype))
+            return {"dense": mk(n_dense), "moe": mk(n_moe)}
+        sh = lambda n: (n, B, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"dense": KVCache(jnp.zeros(sh(n_dense), dtype), jnp.zeros(sh(n_dense), dtype)),
+                "moe": KVCache(jnp.zeros(sh(n_moe), dtype), jnp.zeros(sh(n_moe), dtype))}
+
+    def decode_step(params, cache, batch, index):
+        pos = jnp.full((1,), index, jnp.int32)
+        x = params["embed"][batch["tokens"]] * _embed_scale(cfg)
+
+        def body_for(stack_cache_cls):
+            def body(lp, x, c):
+                cc = stack_cache_cls(*c)
+                y, nc, _ = blk_apply(lp, cfg, x, pos, cache=cc, cache_index=index)
+                return y, tuple(nc)
+            return body
+
+        cls = MLACache if is_mla else KVCache
+        x, nd = scan_stack(params["dense_blocks"], x, body_for(cls), n_dense,
+                           xs_extra=tuple(cache["dense"]), remat=False)
+        x, nm = scan_stack(params["moe_blocks"], x, body_for(cls), n_moe,
+                           xs_extra=tuple(cache["moe"]), remat=False)
+        logits = _lm_logits(cfg, params, x)
+        return logits, {"dense": cls(*nd), "moe": cls(*nm)}
+
+    return ModelApi(cfg, init, forward, loss, init_cache, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 LM
+# ---------------------------------------------------------------------------
+
+def build_mamba_lm(cfg: ArchConfig, remat: bool = True, unroll: bool = False) -> ModelApi:
+    L = cfg.n_layers
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "embed": embed_init(k1, cfg.vocab_size, cfg.d_model),
+            "blocks": stack_init(k2, L, lambda k: mamba_block_init(k, cfg)),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+
+    def forward(params, batch):
+        x = _embed_tokens(cfg, params, batch)
+
+        def body(lp, x, _):
+            y, _ = mamba_block_apply(lp, cfg, x)
+            return y, jnp.zeros(())
+
+        x, _ = scan_stack(params["blocks"], x, body, L, remat=remat, unroll=unroll)
+        return _lm_logits(cfg, params, x)
+
+    def loss(params, batch):
+        logits = forward(params, batch)
+        l = _ce_loss(logits, batch["targets"])
+        return l, {"ce": l}
+
+    def init_cache(B, cache_len, dtype=jnp.bfloat16):
+        d_inner, H, P, N, G, conv_ch = ssm_mod.ssm_dims(cfg)
+        return ssm_mod.SSMCache(
+            conv=jnp.zeros((L, B, cfg.ssm.d_conv - 1, conv_ch), dtype),
+            state=jnp.zeros((L, B, H, P, N), jnp.float32))
+
+    def decode_step(params, cache, batch, index):
+        x = _embed_tokens(cfg, params, batch)
+
+        def body(lp, x, c):
+            y, nc = mamba_block_apply(lp, cfg, x, cache=ssm_mod.SSMCache(*c))
+            return y, tuple(nc)
+
+        x, nc = scan_stack(params["blocks"], x, body, L,
+                           xs_extra=tuple(cache), remat=False)
+        return _lm_logits(cfg, params, x), ssm_mod.SSMCache(*nc)
+
+    return ModelApi(cfg, init, forward, loss, init_cache, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid LM (RecurrentGemma: (rec, rec, attn) groups + remainder)
+# ---------------------------------------------------------------------------
+
+def build_hybrid_lm(cfg: ArchConfig, remat: bool = True, unroll: bool = False) -> ModelApi:
+    h = cfg.hybrid
+    glen = len(h.pattern)                       # 3
+    n_groups = cfg.n_layers // glen             # full (rec, rec, attn) groups
+    n_rem = cfg.n_layers - n_groups * glen      # remainder layers (rec-first)
+    window = h.window
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        grp = {}
+        for gi, kind in enumerate(h.pattern):
+            kk = jax.random.fold_in(ks[1], gi)
+            if kind == "rec":
+                grp[f"g{gi}_rec"] = stack_init(kk, n_groups, lambda k: rec_block_init(k, cfg))
+            else:
+                grp[f"g{gi}_attn"] = stack_init(kk, n_groups, lambda k: dense_block_init(k, cfg))
+        rem = {}
+        for ri in range(n_rem):
+            kk = jax.random.fold_in(ks[2], ri)
+            kind = h.pattern[ri % glen]
+            rem[f"r{ri}_{kind}"] = (rec_block_init(kk, cfg) if kind == "rec"
+                                    else dense_block_init(kk, cfg))
+        return {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "groups": grp, "rem": rem,
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+
+    def _run(params, x, pos, caches=None, index=None):
+        """caches: dict like params['groups'] of stacked caches (+ rem)."""
+        new_caches = {"groups": {}, "rem": {}}
+        grp = params["groups"]
+
+        # group scan: one body running the whole (rec, rec, attn) pattern
+        names = [f"g{gi}_{kind}" for gi, kind in enumerate(h.pattern)]
+        stacked = tuple(grp[n] for n in names)
+        cache_xs = tuple(
+            tuple(caches["groups"][n]) if caches is not None else jnp.zeros((n_groups,))
+            for n in names)
+
+        def body(x, inp):
+            lps, cs = inp
+            outs = []
+            for (name, kind), lp, c in zip(
+                    [(n, k) for n, k in zip(names, h.pattern)], lps, cs):
+                if kind == "rec":
+                    cc = rec_mod.LRUCache(*c) if caches is not None else None
+                    y, nc = rec_block_apply(lp, cfg, x, cache=cc)
+                else:
+                    cc = KVCache(*c) if caches is not None else None
+                    y, nc = dense_block_apply(lp, cfg, x, pos, window,
+                                              cache=cc, cache_index=index)
+                x = y
+                outs.append(tuple(nc) if nc is not None else jnp.zeros(()))
+            return x, tuple(outs)
+
+        fn = jax.checkpoint(body) if (remat and caches is None) else body
+        x, outs = jax.lax.scan(fn, x, (stacked, cache_xs),
+                               unroll=n_groups if unroll else 1)
+        if caches is not None:
+            for n, kind, o in zip(names, h.pattern, outs):
+                new_caches["groups"][n] = (rec_mod.LRUCache(*o) if kind == "rec"
+                                           else KVCache(*o))
+
+        for ri in range(n_rem):
+            kind = h.pattern[ri % glen]
+            name = f"r{ri}_{kind}"
+            lp = params["rem"][name]
+            c = caches["rem"][name] if caches is not None else None
+            if kind == "rec":
+                x, nc = rec_block_apply(lp, cfg, x, cache=c)
+            else:
+                x, nc = dense_block_apply(lp, cfg, x, pos, window,
+                                          cache=c, cache_index=index)
+            if caches is not None:
+                new_caches["rem"][name] = nc
+        return x, new_caches
+
+    def forward(params, batch):
+        S = batch["tokens"].shape[1]
+        pos = jnp.arange(S)
+        x = _embed_tokens(cfg, params, batch)
+        x, _ = _run(params, x, pos)
+        return _lm_logits(cfg, params, x)
+
+    def loss(params, batch):
+        logits = forward(params, batch)
+        l = _ce_loss(logits, batch["targets"])
+        return l, {"ce": l}
+
+    def init_cache(B, cache_len, dtype=jnp.bfloat16):
+        wlen = min(cache_len, window)
+        kv = lambda n: KVCache(
+            k=jnp.zeros((n, B, wlen, cfg.n_kv_heads, cfg.head_dim), dtype),
+            v=jnp.zeros((n, B, wlen, cfg.n_kv_heads, cfg.head_dim), dtype))
+        lru = lambda n: rec_mod.LRUCache(
+            state=jnp.zeros((n, B, h.lru_width), jnp.float32),
+            conv=jnp.zeros((n, B, h.conv_width - 1, h.lru_width), dtype))
+        caches = {"groups": {}, "rem": {}}
+        for gi, kind in enumerate(h.pattern):
+            caches["groups"][f"g{gi}_{kind}"] = (lru(n_groups) if kind == "rec"
+                                                 else kv(n_groups))
+        for ri in range(n_rem):
+            kind = h.pattern[ri % glen]
+            one = lru(1) if kind == "rec" else kv(1)
+            caches["rem"][f"r{ri}_{kind}"] = jax.tree.map(lambda a: a[0], one)
+        return caches
+
+    def decode_step(params, cache, batch, index):
+        x = _embed_tokens(cfg, params, batch)
+        # local-attention cache is a rolling window: position within window
+        widx = jnp.remainder(index, window)
+        pos = jnp.full((1,), index, jnp.int32)
+        x, nc = _run(params, x, pos, caches=cache, index=widx)
+        del pos
+        return _lm_logits(cfg, params, x), nc
+
+    return ModelApi(cfg, init, forward, loss, init_cache, decode_step)

@@ -1,0 +1,150 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend (log-mel + strided convs) is a STUB per the assignment:
+`batch["frames"]` carries precomputed frame embeddings (B, S_enc, d_model).
+Encoder: bidirectional attention + sinusoidal positions. Decoder: causal
+self-attention + cross-attention over the encoder output + MLP, learned
+positions, tied lm head (Whisper convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attn
+from .attention import KVCache
+from .layers import (dense_init, embed_init, layernorm, layernorm_init, mlp,
+                     mlp_init)
+from .transformer import ModelApi, _ce_loss, scan_stack, stack_init
+
+
+def _sinusoid(S: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_block_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": layernorm_init(cfg.d_model),
+        "attn": attn.gqa_init(ks[0], cfg),
+        "mlp_norm": layernorm_init(cfg.d_model),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _dec_block_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "self_norm": layernorm_init(cfg.d_model),
+        "self": attn.gqa_init(ks[0], cfg),
+        "cross_norm": layernorm_init(cfg.d_model),
+        "cross": attn.gqa_init(ks[1], cfg),
+        "mlp_norm": layernorm_init(cfg.d_model),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _enc_block_apply(p, cfg, x):
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    h = layernorm(p["attn_norm"], x)
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (h @ p["attn"]["wq"]).reshape(B, S, H, hd)
+    k = (h @ p["attn"]["wk"]).reshape(B, S, Hkv, hd)
+    v = (h @ p["attn"]["wv"]).reshape(B, S, Hkv, hd)
+    mask = jnp.ones((S, S), bool)  # bidirectional
+    o = attn._dense_attend(q.reshape(B, S, Hkv, H // Hkv, hd), k, v, mask,
+                           1.0 / jnp.sqrt(hd).astype(jnp.float32))
+    x = x + o.reshape(B, S, H * hd) @ p["attn"]["wo"]
+    x = x + mlp(p["mlp"], layernorm(p["mlp_norm"], x), cfg.act)
+    del pos
+    return x
+
+
+def _dec_block_apply(p, cfg, x, positions, enc_kv: KVCache,
+                     cache: KVCache | None = None, cache_index=None):
+    h = layernorm(p["self_norm"], x)
+    a, new_cache = attn.gqa_apply(p["self"], cfg, h, positions, 0, cache, cache_index)
+    x = x + a
+    h = layernorm(p["cross_norm"], x)
+    x = x + attn.cross_attn_apply(p["cross"], cfg, h, enc_kv)
+    x = x + mlp(p["mlp"], layernorm(p["mlp_norm"], x), cfg.act)
+    return x, new_cache
+
+
+def build_encdec(cfg: ArchConfig, remat: bool = True, unroll: bool = False) -> ModelApi:
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    Dmax = cfg.max_decoder_len
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "dec_pos": (jax.random.normal(ks[1], (Dmax, cfg.d_model), jnp.float32) * 0.01
+                        ).astype(jnp.bfloat16),
+            "enc_blocks": stack_init(ks[2], Le, lambda k: _enc_block_init(k, cfg)),
+            "dec_blocks": stack_init(ks[3], Ld, lambda k: _dec_block_init(k, cfg)),
+            "enc_norm": layernorm_init(cfg.d_model),
+            "dec_norm": layernorm_init(cfg.d_model),
+        }
+
+    def encode(params, frames):
+        B, S, _ = frames.shape
+        x = frames.astype(jnp.bfloat16) + _sinusoid(S, cfg.d_model).astype(jnp.bfloat16)
+
+        def body(lp, x, _):
+            return _enc_block_apply(lp, cfg, x), jnp.zeros(())
+
+        x, _ = scan_stack(params["enc_blocks"], x, body, Le, remat=remat, unroll=unroll)
+        return layernorm(params["enc_norm"], x)
+
+    def decode_stack(params, enc_out, tokens, cache=None, index=None):
+        B, S = tokens.shape
+        if index is None:
+            pos_ids = jnp.arange(S)
+            x = params["embed"][tokens] + params["dec_pos"][None, :S]
+        else:
+            pos_ids = jnp.full((1,), index, jnp.int32)
+            x = params["embed"][tokens] + params["dec_pos"][index][None, None, :]
+
+        def body(lp, x, c):
+            enc_kv = attn.cross_kv(lp["cross"], cfg, enc_out)
+            cc = KVCache(*c) if cache is not None else None
+            y, nc = _dec_block_apply(lp, cfg, x, pos_ids, enc_kv, cc, index)
+            return y, (tuple(nc) if nc is not None else jnp.zeros(()))
+
+        xs = tuple(cache) if cache is not None else None
+        fn_remat = remat and cache is None
+        x, ncs = scan_stack(params["dec_blocks"], x, body, Ld, xs_extra=xs,
+                            remat=fn_remat, unroll=unroll)
+        x = layernorm(params["dec_norm"], x)
+        logits = x @ params["embed"].T
+        return logits, (KVCache(*ncs) if cache is not None else None)
+
+    def forward(params, batch):
+        enc_out = encode(params, batch["frames"])
+        logits, _ = decode_stack(params, enc_out, batch["tokens"])
+        return logits
+
+    def loss(params, batch):
+        logits = forward(params, batch)
+        l = _ce_loss(logits, batch["targets"])
+        return l, {"ce": l}
+
+    def init_cache(B, cache_len, dtype=jnp.bfloat16):
+        clen = min(cache_len, Dmax)
+        sh = (Ld, B, clen, cfg.n_kv_heads, cfg.head_dim)
+        return KVCache(k=jnp.zeros(sh, dtype), v=jnp.zeros(sh, dtype))
+
+    def decode_step(params, cache, batch, index):
+        enc_out = encode(params, batch["frames"])
+        idx = jnp.minimum(index, Dmax - 1)
+        logits, nc = decode_stack(params, enc_out, batch["tokens"],
+                                  cache=cache, index=idx)
+        return logits, nc
+
+    return ModelApi(cfg, init, forward, loss, init_cache, decode_step)

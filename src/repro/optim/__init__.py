@@ -1,0 +1,6 @@
+"""Optimizers + distributed-training tricks (functional, pytree-first)."""
+from .adamw import adafactor, adamw, global_norm_clip
+from .compression import compress_int8, decompress_int8, error_feedback_update
+
+__all__ = ["adamw", "adafactor", "global_norm_clip", "compress_int8",
+           "decompress_int8", "error_feedback_update"]

@@ -1,0 +1,109 @@
+"""AdamW and Adafactor, functional style.
+
+Optimizer states mirror the parameter pytree, so parameter shardings apply
+verbatim to the states (ZeRO-style optimizer-state sharding falls out of
+FSDP parameter sharding for free). Adafactor keeps factored second moments
+for >=2-D parameters — the memory-sane default for the 671B-class dry-run
+configs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict | None      # first moment (adamw only)
+    nu: dict             # second moment (adamw) / factored dict (adafactor)
+
+
+def global_norm_clip(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, max_grad_norm: float = 1.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros, params),
+                        nu=jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        grads, gnorm = global_norm_clip(grads, max_grad_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1, c2 = 1.0 - b1**t, 1.0 - b2**t
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mh, vh = m / c1, v / c2
+            new_p = p.astype(jnp.float32) - lr * (mh / (jnp.sqrt(vh) + eps)
+                                                  + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step, new_mu, new_nu), {"grad_norm": gnorm}
+
+    return init, update
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              max_grad_norm: float = 1.0, weight_decay: float = 0.0):
+    """Factored second moments for >=2-D params: O(sum of dims) state instead
+    of O(product) — what makes the 671B AdamW-free dry-run memory sane."""
+    def init(params):
+        def factored(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return OptState(step=jnp.zeros((), jnp.int32), mu=None,
+                        nu=jax.tree.map(factored, params,
+                                        is_leaf=lambda x: isinstance(x, jnp.ndarray)))
+
+    def update(grads, state, params):
+        grads, gnorm = global_norm_clip(grads, max_grad_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, nu):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                r = beta * nu["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * nu["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rc = r / jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), eps)
+                v = rc[..., None] * c[..., None, :]
+                new_nu = {"r": r, "c": c}
+            else:
+                v = beta * nu["v"] + (1 - beta) * g2
+                new_nu = {"v": v}
+            upd_ = gf / jnp.sqrt(v + eps)
+            # relative-scale clipping (Adafactor's d=1.0 rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd_)))
+            upd_ = upd_ / jnp.maximum(1.0, rms)
+            new_p = p.astype(jnp.float32) - lr * upd_ - lr * weight_decay * p.astype(jnp.float32)
+            return new_p.astype(p.dtype), new_nu
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_nu = tdef.flatten_up_to(state.nu)
+        outs = [upd(p, g, nu) for p, g, nu in zip(flat_p, flat_g, flat_nu)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_nu = tdef.unflatten([o[1] for o in outs])
+        return new_params, OptState(step, None, new_nu), {"grad_norm": gnorm}
+
+    return init, update

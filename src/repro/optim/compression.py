@@ -1,0 +1,47 @@
+"""Gradient compression for the DP all-reduce: int8 + error feedback.
+
+At 1000+ node scale the data-parallel gradient all-reduce dominates link
+traffic; per-tensor symmetric int8 quantization cuts it 2x vs bf16 (4x vs
+f32) at the cost of quantization noise, which the error-feedback residual
+re-injects next step (Seide et al.; 1-bit Adam lineage).
+
+Usage inside a train step (see launch/steps.py):
+    g_q, scale = compress_int8(g + residual)
+    g_hat      = decompress_int8(g_q, scale)       # what the wire carries
+    residual   = (g + residual) - g_hat
+The all-reduce then runs on g_q/scale; XLA fuses the cast into the
+collective's operand, shrinking `collective_bytes` in the §Roofline terms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jnp.ndarray):
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def error_feedback_update(grads, residuals):
+    """Quantize (grads + residuals) per leaf; return (dequantized grads to
+    feed the optimizer/all-reduce, new residuals)."""
+    if residuals is None:
+        residuals = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = compress_int8(target)
+        g_hat = decompress_int8(q, s)
+        return g_hat.astype(g.dtype), target - g_hat
+
+    out = jax.tree.map(one, grads, residuals)
+    g_hat = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return g_hat, new_res

@@ -1,0 +1,88 @@
+"""Activation sharding hints (logical-axis rules, MaxText style).
+
+`hint(x, *axes)` applies `with_sharding_constraint` when a mesh context is
+active and silently no-ops otherwise (CPU smoke tests see one device and no
+mesh). Axis entries name mesh axes; `DP` expands to the data-parallel axes
+('pod', 'data') filtered to whatever the active mesh actually has — the same
+model code serves the single-pod and multi-pod meshes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+DP = ("pod", "data")     # data-parallel composite axis
+TP = "model"             # tensor/expert-parallel axis
+
+# ---------------------------------------------------------------------------
+# Runtime perf knobs (set by the dry-run's --opts; defaults = paper-faithful
+# baseline). See EXPERIMENTS.md §Perf for the iteration log.
+# ---------------------------------------------------------------------------
+CONFIG = {
+    "seqpar": False,        # shard the residual stream's S dim over `model`
+    "moe_capacity": 1.25,   # MoE capacity factor
+}
+
+
+def set_opts(**kw):
+    for k, v in kw.items():
+        assert k in CONFIG, k
+        CONFIG[k] = v
+
+
+def residual_hint(x):
+    """Between-block residual stream (B, S, D). Baseline: replicated over
+    `model`. seqpar: Megatron-SP — S sharded over `model`, cutting the
+    saved-carry memory and turning activation all-reduces into
+    reduce-scatter + all-gather pairs."""
+    if CONFIG["seqpar"]:
+        return hint(x, DP, TP, None)
+    return hint(x, DP, None, None)
+
+
+def _active_mesh():
+    try:
+        m = jax._src.mesh.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def _filter(entry, names):
+    if entry is None:
+        return None
+    if isinstance(entry, (tuple, list)):
+        kept = tuple(a for a in entry if a in names)
+        return kept if kept else None
+    return entry if entry in names else None
+
+
+def hint(x, *axes):
+    """axes: one entry per dim of x (None / mesh-axis / tuple of axes).
+    An axis is dropped when the dim size is not divisible by the mesh-axis
+    extent — GSPMD's padded-shard fallback triggers involuntary full
+    rematerialization (e.g. 4 KV heads on a 16-way model axis)."""
+    m = _active_mesh()
+    if m is None:
+        return x
+    names = set(m.axis_names)
+    sizes = dict(zip(m.axis_names, m.devices.shape))
+    entries = []
+    for dim, a in enumerate(axes):
+        a = _filter(a, names)
+        if a is not None:
+            extent = 1
+            for ax in (a if isinstance(a, tuple) else (a,)):
+                extent *= sizes[ax]
+            if x.shape[dim] % extent != 0:
+                a = None
+        entries.append(a)
+    spec = P(*entries)
+    return jax.lax.with_sharding_constraint(x, jax.sharding.NamedSharding(m, spec))
+
+
+def hint_tree(tree, spec_fn):
+    m = _active_mesh()
+    if m is None:
+        return tree
+    return jax.tree.map(spec_fn, tree)

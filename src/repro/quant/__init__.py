@@ -1,0 +1,4 @@
+"""W8A8 quantization bridge: model params -> CIM-executable weights."""
+from .w8a8 import cim_linear, dequantize_tree, quantize_tree
+
+__all__ = ["cim_linear", "dequantize_tree", "quantize_tree"]

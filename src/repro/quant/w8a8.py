@@ -1,0 +1,65 @@
+"""W8A8 post-training quantization — the paper's integer-only GEMM setting.
+
+`quantize_tree` walks a parameter pytree and converts every 2-D projection
+weight to (int8, per-channel scale); `cim_linear` executes a quantized
+projection through the CIM-GEMM Pallas kernel (interpret mode on CPU,
+Mosaic on TPU), so a quantized model literally runs on the paper's compute
+primitive. `dequantize_tree` reconstitutes bf16 weights for accuracy
+comparisons (tests assert end-to-end logit fidelity).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ops import cim_matmul, quantize_w8
+
+# weight names that are 2-D projections safe to quantize
+_QUANT_NAMES = {"wq", "wk", "wv", "wo", "up", "gate", "down", "wx", "wy",
+                "in_proj", "out_proj", "lm_head", "wq_a", "wq_b", "wkv_a",
+                "wkv_b", "wa", "wi"}
+
+
+def _is_quantizable(path, leaf) -> bool:
+    name = str(getattr(path[-1], "key", getattr(path[-1], "name", path[-1])))
+    # 2-D plain weights or 3-D scan-stacked (L, K, N) weights
+    return name in _QUANT_NAMES and leaf.ndim in (2, 3)
+
+
+def quantize_tree(params: Any) -> Any:
+    """Replace each quantizable leaf with {"w_q": int8, "scale": f32}.
+    Scan-stacked weights quantize per layer (vmapped)."""
+    def q(path, leaf):
+        if not _is_quantizable(path, leaf):
+            return leaf
+        if leaf.ndim == 3:
+            w_q, scale = jax.vmap(quantize_w8)(leaf)       # (L,K,N) -> (L,N)
+        else:
+            w_q, scale = quantize_w8(leaf)
+        return {"w_q": w_q, "scale": scale}
+
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+def dequantize_tree(qparams: Any, dtype=jnp.bfloat16) -> Any:
+    def dq(leaf):
+        if isinstance(leaf, dict) and "w_q" in leaf:
+            w_q, scale = leaf["w_q"], leaf["scale"]
+            s = scale[:, None, :] if w_q.ndim == 3 else scale[None, :]
+            return (w_q.astype(jnp.float32) * s).astype(dtype)
+        return leaf
+
+    return jax.tree.map(dq, qparams,
+                        is_leaf=lambda x: isinstance(x, dict) and "w_q" in x)
+
+
+def cim_linear(x: jnp.ndarray, qw: dict, *, dataflow: str = "os",
+               interpret: bool = True) -> jnp.ndarray:
+    """(..., K) @ quantized (K, N) through the CIM-GEMM kernel."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = cim_matmul(x2, qw["w_q"], qw["scale"], dataflow=dataflow,
+                     interpret=interpret, out_dtype=x.dtype)
+    return out.reshape(*lead, qw["w_q"].shape[1])

@@ -1,0 +1,4 @@
+"""Runtime: fault-tolerant step driver, straggler mitigation, elasticity."""
+from .fault_tolerance import StragglerMonitor, TrainController, TrainResult
+
+__all__ = ["StragglerMonitor", "TrainController", "TrainResult"]

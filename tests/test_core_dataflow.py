@@ -1,0 +1,144 @@
+"""Dataflow timing model: paper equations, cycle-sim equivalence, properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cycle_sim, dataflow as dfm
+from repro.core.design_space import BROADCAST, OS, SYSTOLIC, WS, make_point
+from repro.core.dataflow import Gemm, gemm_timing
+
+
+def tc_ts(p):
+    return float(dfm.t_c(p)), float(dfm.t_s(p))
+
+
+# ---------------------------------------------------------------------------
+# Paper equations 1-5, exactly
+# ---------------------------------------------------------------------------
+
+def test_eq1_eq2():
+    p = make_point(TL=64, PC=32)
+    assert float(dfm.t_c(p)) == 64 * 8 / 2        # eq 1: TL * IBW/2
+    assert float(dfm.t_s(p)) == 1.0 * 32 * 8      # eq 2: kappa * PC * WBW
+
+
+def test_eq3_eq4_eq5():
+    p_nol = make_point(TL=64, PC=32, LSL=4, OL=0)
+    p_ol = make_point(TL=64, PC=32, LSL=4, OL=1)
+    tc, ts = tc_ts(p_nol)
+    assert float(dfm.block_cycles_macro(p_nol)) == 4 * (tc + ts)          # eq 3
+    assert float(dfm.block_cycles_macro(p_ol)) == 4 * max(tc, ts)         # eq 4
+    bound = float(dfm.overlap_speedup_bound(p_nol))
+    assert 0.0 <= bound <= 0.5                                            # eq 5
+    # eq 5 is tight when T_c == T_s
+    p_eq = make_point(TL=64, PC=32)  # tc = 256, ts = 256
+    assert float(dfm.overlap_speedup_bound(p_eq)) == pytest.approx(0.5)
+
+
+@given(
+    TL=st.sampled_from([8, 16, 64, 256, 512]),
+    PC=st.sampled_from([2, 8, 32, 256]),
+    LSL=st.sampled_from([2, 8, 64]),
+)
+@settings(max_examples=30, deadline=None)
+def test_eq5_bound_property(TL, PC, LSL):
+    p = make_point(TL=TL, PC=PC, LSL=LSL, OL=0)
+    assert 0.0 <= float(dfm.overlap_speedup_bound(p)) <= 0.5 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Closed form == cycle-accurate simulator (steady state), all 8 variants
+# ---------------------------------------------------------------------------
+
+VARIANTS = [(df, ic, ol) for df in (WS, OS) for ic in (BROADCAST, SYSTOLIC) for ol in (0, 1)]
+
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+def test_cycle_sim_matches_closed_form(df, ic, ol):
+    p = make_point(AL=64, PC=8, LSL=4, PL=2, OL=ol, BR=3, BC=2, TL=32,
+                   dataflow=df, interconnect=ic)
+    sim = cycle_sim.simulate(p, n_passes=6)
+    closed_per_pass = float(dfm._round_cycles(p)) * int(p.LSL)
+    assert sim.per_pass_steady == pytest.approx(closed_per_pass)
+
+
+@given(
+    df=st.sampled_from([WS, OS]),
+    ic=st.sampled_from([BROADCAST, SYSTOLIC]),
+    ol=st.sampled_from([0, 1]),
+    BR=st.integers(1, 6),
+    LSL=st.sampled_from([2, 4, 8]),
+    TL=st.sampled_from([8, 32, 128]),
+    PC=st.sampled_from([2, 8, 32]),
+)
+@settings(max_examples=60, deadline=None)
+def test_cycle_sim_property(df, ic, ol, BR, LSL, TL, PC):
+    p = make_point(AL=32, PC=PC, LSL=LSL, PL=1, OL=ol, BR=BR, BC=1, TL=TL,
+                   dataflow=df, interconnect=ic)
+    sim = cycle_sim.simulate(p, n_passes=5)
+    closed = float(dfm._round_cycles(p)) * LSL
+    assert sim.per_pass_steady == pytest.approx(closed), (
+        f"steady-state mismatch for df={df} ic={ic} ol={ol} BR={BR}")
+    # end-to-end total is within fill/drain slack of n_passes * steady
+    tc, ts = tc_ts(p)
+    slack = (BR + LSL + 2) * (tc + 2 * ts)
+    assert abs(sim.total_cycles - 5 * closed) <= slack
+
+
+# ---------------------------------------------------------------------------
+# GEMM-level timing properties
+# ---------------------------------------------------------------------------
+
+def test_gemm_utilization_bounded():
+    p = make_point(AL=64, PC=16, LSL=2, BR=4, BC=4, TL=64)
+    t = gemm_timing(p, Gemm(4096, 4096, 4096))
+    assert 0.0 < float(t.utilization) <= 1.0
+    assert float(t.total_cycles) >= float(t.ideal_cycles)
+
+
+@given(
+    df=st.sampled_from([WS, OS]),
+    ic=st.sampled_from([BROADCAST, SYSTOLIC]),
+    M=st.sampled_from([256, 4096, 8192]),
+    K=st.sampled_from([1024, 4096]),
+    N=st.sampled_from([1024, 4096]),
+)
+@settings(max_examples=40, deadline=None)
+def test_overlap_never_slower(df, ic, M, K, N):
+    """OL removes cycles (eq 5): same design with OL=1 is never slower."""
+    kw = dict(AL=64, PC=16, LSL=2, BR=4, BC=4, TL=64, dataflow=df, interconnect=ic)
+    t0 = gemm_timing(make_point(OL=0, **kw), Gemm(M, K, N))
+    t1 = gemm_timing(make_point(OL=1, **kw), Gemm(M, K, N))
+    assert float(t1.total_cycles) <= float(t0.total_cycles) + 1e-6
+    # and the saving respects the 50% bound at macro level
+    assert float(t1.total_cycles) >= 0.49 * float(t0.total_cycles)
+
+
+def test_ws_systolic_beats_ws_broadcast_multirow():
+    """Paper §3.2: WS-Broadcast serializes updates down each column; systolic
+    staggering removes the idle time whenever BR > 1."""
+    kw = dict(AL=64, PC=16, LSL=2, BR=8, BC=4, TL=64, OL=0, dataflow=WS)
+    g = Gemm(8192, 4096, 4096)
+    t_b = gemm_timing(make_point(interconnect=BROADCAST, **kw), g)
+    t_s = gemm_timing(make_point(interconnect=SYSTOLIC, **kw), g)
+    assert float(t_s.total_cycles) < float(t_b.total_cycles)
+
+
+def test_monotone_in_array_size():
+    """More macros never increases total cycles (same GEMM)."""
+    g = Gemm(8192, 4096, 4096)
+    kw = dict(AL=64, PC=16, LSL=2, TL=64, OL=0, dataflow=WS, interconnect=SYSTOLIC)
+    cyc = [float(gemm_timing(make_point(BR=br, BC=bc, **kw), g).total_cycles)
+           for br, bc in [(1, 1), (2, 2), (4, 4), (8, 8)]]
+    assert all(a >= b for a, b in zip(cyc, cyc[1:]))
+
+
+def test_traffic_accounting():
+    """Weight traffic >= one full pass of the weight matrix; activation
+    traffic >= one full pass of the activations."""
+    p = make_point(AL=64, PC=16, LSL=2, BR=4, BC=4, TL=64)
+    g = Gemm(4096, 4096, 4096)
+    t = gemm_timing(p, g)
+    assert float(t.weight_bits) >= g.K * g.N * 8
+    assert float(t.act_bits) >= g.M * g.K * 8

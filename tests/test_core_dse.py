@@ -1,0 +1,167 @@
+"""Pareto extraction, BO search, workload extraction, model mapper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import PAPER_MODELS, get_config
+from repro.core import (Gemm, bayesopt, evaluate_model, pareto_front,
+                        pareto_mask, sample_random)
+from repro.core.mapper import constrained_objective
+from repro.core.workload import (dedupe_gemms, model_flops, model_gemms,
+                                 qkv_projection_gemm, total_macs)
+
+
+# ---------------------------------------------------------------------------
+# Pareto
+# ---------------------------------------------------------------------------
+
+def _brute_force_pareto(obj):
+    n = obj.shape[0]
+    mask = np.ones(n, dtype=bool)
+    for i in range(n):
+        for j in range(n):
+            if np.all(obj[j] <= obj[i]) and np.any(obj[j] < obj[i]):
+                mask[i] = False
+                break
+    return mask
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_pareto_mask_matches_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    obj = rng.random((40, 2))
+    assert np.array_equal(np.asarray(pareto_mask(jnp.asarray(obj))), _brute_force_pareto(obj))
+
+
+def test_pareto_front_sorted_and_nondominated():
+    rng = np.random.default_rng(0)
+    obj = rng.random((200, 2))
+    (front,) = pareto_front(obj)
+    assert np.all(np.diff(front[:, 0]) >= 0)
+    assert np.all(np.diff(front[:, 1]) <= 0)  # 2-D front is a staircase
+
+
+# ---------------------------------------------------------------------------
+# Workload extraction
+# ---------------------------------------------------------------------------
+
+def test_paper_qkv_gemm_shape():
+    """Paper §4.2: LLaMA-3-8B, batch 8, seq 1024 -> M,N,K = 8192, 4096, 4096."""
+    g = qkv_projection_gemm(PAPER_MODELS["llama3-8b"], batch=8, seq=1024)
+    assert (g.M, g.K, g.N) == (8192.0, 4096.0, 4096.0)
+
+
+def test_prefill_macs_close_to_2ND():
+    """Projection-GEMM MACs ~ active params * tokens (lm_head adds the rest)."""
+    cfg = get_config("yi-6b")
+    g = model_gemms(cfg, "prefill", batch=1, seq=512)
+    macs = total_macs(g)
+    approx = cfg.param_count() * 512  # params * tokens (MACs, not FLOPs)
+    assert 0.7 * approx < macs < 1.3 * approx
+
+
+def test_decode_vs_prefill_ratio():
+    cfg = get_config("qwen2-0.5b")
+    pre = total_macs(model_gemms(cfg, "prefill", batch=4, seq=256))
+    dec = total_macs(model_gemms(cfg, "decode", batch=4, seq=256))
+    assert pre == pytest.approx(dec * 256, rel=1e-6)
+
+
+def test_train_is_3x_prefill():
+    cfg = get_config("qwen2-0.5b")
+    pre = total_macs(model_gemms(cfg, "prefill", batch=2, seq=128))
+    tr = total_macs(model_gemms(cfg, "train", batch=2, seq=128))
+    assert tr == pytest.approx(3 * pre, rel=1e-6)
+
+
+def test_moe_workload_counts_active_experts_only():
+    cfg = get_config("moonshot-v1-16b-a3b")
+    g = model_gemms(cfg, "prefill", batch=1, seq=4096, include_lm_head=False)
+    macs = total_macs(g)
+    approx = (cfg.active_param_count() - 2 * cfg.vocab_size * cfg.d_model) * 4096
+    assert 0.7 * approx < macs < 1.3 * approx
+
+
+def test_every_assigned_arch_has_workload():
+    from repro.configs import ASSIGNED
+    for name in ASSIGNED:
+        cfg = get_config(name)
+        for mode in ("prefill", "decode", "train"):
+            g = model_gemms(cfg, mode, batch=2, seq=128)
+            assert g and total_macs(g) > 0, (name, mode)
+            d = dedupe_gemms(g)
+            assert total_macs(d) == pytest.approx(total_macs(g))
+            assert len(d) <= len(g)
+
+
+def test_model_flops_moe_uses_active_params():
+    moe = get_config("deepseek-v3-671b")
+    assert moe.active_param_count() < 0.15 * moe.param_count()
+    f = model_flops(moe, "train", batch=1, seq=128)
+    assert f == pytest.approx(6.0 * moe.active_param_count() * 128, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+def _toy_objective(p):
+    # smooth, known optimum at large AL*PC (more parallelism -> fewer cycles)
+    return 1e9 / (p.AL * p.PC * p.BR * p.BC) + 0.01 * p.TL
+
+
+def test_random_search_returns_valid_best():
+    best, val, _, y = bayesopt.random_minimize(jax.random.key(0), _toy_objective, n=512)
+    assert float(val) == pytest.approx(float(jnp.min(y)))
+
+
+def test_bayes_beats_random_median_on_budget():
+    """GP-EI with ~160 evals should beat the median random-search result of
+    the same budget on the mapper objective."""
+    cfg = PAPER_MODELS["qwen3-0.6b"]
+    obj = lambda p: constrained_objective(p, cfg, n_cores=1, batch=8, seq=1024)
+    _, v_bo, _, _ = bayesopt.bayes_minimize(
+        jax.random.key(1), obj, n_init=48, n_iters=16, acq_batch=4, pool=512)
+    vals = []
+    for s in range(3):
+        _, v_r, _, _ = bayesopt.random_minimize(jax.random.key(100 + s), obj, n=112)
+        vals.append(float(v_r))
+    assert float(v_bo) <= np.median(vals) * 1.25  # at least competitive
+
+
+def test_encode_decode_roundtrip():
+    pts = sample_random(jax.random.key(3), 64)
+    u = bayesopt.encode(pts)
+    back = bayesopt.decode(u)
+    for f in pts._fields:
+        np.testing.assert_allclose(np.asarray(getattr(back, f)),
+                                   np.asarray(getattr(pts, f)))
+
+
+# ---------------------------------------------------------------------------
+# Mapper
+# ---------------------------------------------------------------------------
+
+def test_evaluate_model_plausible_scale():
+    """A 20-TOPS-class engine on LLaMA-3-8B prefill should land within an
+    order of magnitude of the paper's Table 3 row (886 ms, ~1 W, ~3 mm^2)."""
+    from repro.core import make_point
+    p = make_point(AL=256, PC=16, LSL=2, PL=4, OL=1, BR=2, BC=4, TL=32,
+                   dataflow=1, interconnect=1)
+    q = evaluate_model(p, PAPER_MODELS["llama3-8b"], n_cores=4, batch=1, seq=8192)
+    assert 0.05 < float(q.latency_s) < 20.0
+    assert 0.05 < float(q.power_w) < 20.0
+    assert 0.3 < float(q.area_mm2) < 30.0
+
+
+def test_multicore_speedup():
+    from repro.core import make_point
+    p = make_point(AL=128, PC=32, LSL=2, BR=4, BC=4, TL=64)
+    cfg = PAPER_MODELS["llama3-8b"]
+    l1 = float(evaluate_model(p, cfg, n_cores=1, batch=8, seq=1024).latency_s)
+    l4 = float(evaluate_model(p, cfg, n_cores=4, batch=8, seq=1024).latency_s)
+    assert l4 < l1
+    assert l4 > l1 / 4.5  # no super-linear magic

@@ -1,0 +1,191 @@
+"""Per-kernel validation: shape/dtype sweeps, allclose vs ref.py oracles,
+bit-serial == direct arithmetic, WS == OS grid orders (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import cim_matmul, mha_flash, ops, ref, ssd_forward
+from repro.kernels.cim_gemm import cim_gemm_int32
+from repro.kernels.flash_attention import flash_attention
+from repro.models.ssm import ssd_chunked
+
+
+def _rand_i8(key, shape):
+    return jax.random.randint(key, shape, -128, 128, dtype=jnp.int32).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# cim_gemm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 384, 128), (128, 256, 384)])
+@pytest.mark.parametrize("dataflow", ["os", "ws"])
+def test_cim_gemm_matches_ref(M, K, N, dataflow):
+    kx, kw = jax.random.split(jax.random.key(0))
+    x, w = _rand_i8(kx, (M, K)), _rand_i8(kw, (K, N))
+    out = cim_gemm_int32(x, w, dataflow=dataflow, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.cim_gemm_ref(x, w)))
+
+
+@pytest.mark.parametrize("dataflow", ["os", "ws"])
+def test_cim_gemm_bit_serial_exact(dataflow):
+    """The macro's 2-bit-slice arithmetic (paper Fig. 4 steps ①-⑤) must be
+    bit-identical to the direct int8 GEMM."""
+    kx, kw = jax.random.split(jax.random.key(1))
+    x, w = _rand_i8(kx, (128, 256)), _rand_i8(kw, (256, 128))
+    direct = cim_gemm_int32(x, w, dataflow=dataflow, bit_serial=False)
+    serial = cim_gemm_int32(x, w, dataflow=dataflow, bit_serial=True)
+    np.testing.assert_array_equal(np.asarray(direct), np.asarray(serial))
+
+
+def test_cim_gemm_ws_equals_os():
+    kx, kw = jax.random.split(jax.random.key(2))
+    x, w = _rand_i8(kx, (256, 256)), _rand_i8(kw, (256, 256))
+    a = cim_gemm_int32(x, w, dataflow="ws")
+    b = cim_gemm_int32(x, w, dataflow="os")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(
+    m=st.sampled_from([64, 128, 200]),
+    k=st.sampled_from([64, 128, 300]),
+    n=st.sampled_from([64, 128, 200]),
+    df=st.sampled_from(["ws", "os"]),
+)
+@settings(max_examples=12, deadline=None)
+def test_cim_matmul_w8a8_property(m, k, n, df):
+    """Padded wrapper over arbitrary shapes tracks the f32 oracle within
+    quantization error."""
+    kx, kw = jax.random.split(jax.random.key(m * 31 + k * 7 + n))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    w_q, w_scale = ops.quantize_w8(w)
+    out = cim_matmul(x, w_q, w_scale, dataflow=df, out_dtype=jnp.float32)
+    oracle = ref.w8a8_matmul_ref(x, w_q, w_scale, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), rtol=1e-5, atol=1e-4)
+    # and the whole W8A8 path tracks the fp matmul within int8 error
+    fp = x @ w
+    err = np.abs(np.asarray(out) - np.asarray(fp))
+    assert np.median(err) < 0.05 * float(jnp.std(fp)) + 0.05
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32, jnp.float16])
+def test_cim_matmul_dtypes(dtype):
+    kx, kw = jax.random.split(jax.random.key(5))
+    x = jax.random.normal(kx, (64, 128), jnp.float32).astype(dtype)
+    w = jax.random.normal(kw, (128, 64), jnp.float32)
+    w_q, w_scale = ops.quantize_w8(w)
+    out = cim_matmul(x, w_q, w_scale, out_dtype=dtype)
+    assert out.dtype == dtype and out.shape == (64, 64)
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Sq,Skv,d", [(128, 128, 64), (256, 384, 64), (128, 512, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(Sq, Skv, d, causal):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (4, Sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (4, Skv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (4, Skv, d), jnp.float32)
+    scale = 1.0 / d**0.5
+    out = flash_attention(q, k, v, scale=scale, causal=causal)
+    oracle = ref.flash_attention_ref(q, k, v, scale=scale, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("cap,window", [(50.0, 0), (0.0, 96), (30.0, 64)])
+def test_flash_softcap_window(cap, window):
+    """Gemma-2 softcap and sliding windows."""
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (2, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 256, 64), jnp.float32)
+    out = flash_attention(q, k, v, scale=0.125, cap=cap, window=window)
+    oracle = ref.flash_attention_ref(q, k, v, scale=0.125, cap=cap, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), rtol=2e-4, atol=2e-4)
+
+
+@given(
+    sq=st.sampled_from([128, 200, 260]),
+    skv=st.sampled_from([128, 300]),
+    h=st.sampled_from([2, 4]),
+    hkv=st.sampled_from([1, 2]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+@settings(max_examples=10, deadline=None)
+def test_mha_flash_gqa_property(sq, skv, h, hkv, dtype):
+    """GQA wrapper with padding over arbitrary (non-multiple) shapes."""
+    dt = jnp.float32 if dtype == "float32" else jnp.bfloat16
+    ks = jax.random.split(jax.random.key(sq + skv), 3)
+    q = jax.random.normal(ks[0], (2, sq, h, 64), jnp.float32).astype(dt)
+    k = jax.random.normal(ks[1], (2, skv, hkv, 64), jnp.float32).astype(dt)
+    v = jax.random.normal(ks[2], (2, skv, hkv, 64), jnp.float32).astype(dt)
+    out = mha_flash(q, k, v, causal=False)
+    # oracle: repeat kv heads, loop heads through the ref
+    kr = jnp.repeat(k, h // hkv, axis=2)
+    vr = jnp.repeat(v, h // hkv, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(2 * h, sq, 64)
+    kf = kr.transpose(0, 2, 1, 3).reshape(2 * h, skv, 64)
+    vf = vr.transpose(0, 2, 1, 3).reshape(2 * h, skv, 64)
+    oracle = ref.flash_attention_ref(qf, kf, vf, scale=0.125, causal=False)
+    oracle = oracle.reshape(2, h, sq, 64).transpose(0, 2, 1, 3)
+    tol = 3e-2 if dtype == "bfloat16" else 3e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oracle, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_padding_does_not_leak():
+    """Padded KV rows must not contribute probability mass."""
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (1, 100, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 100, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 100, 2, 64), jnp.float32)
+    out = mha_flash(q, k, v, causal=True)
+    oracle = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(2, 100, 64),
+        k.transpose(0, 2, 1, 3).reshape(2, 100, 64),
+        v.transpose(0, 2, 1, 3).reshape(2, 100, 64), scale=0.125, causal=True)
+    oracle = oracle.reshape(1, 2, 100, 64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd chunk kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Q,H,P,N", [(32, 4, 16, 16), (64, 2, 32, 32), (128, 8, 64, 64)])
+def test_ssd_chunk_matches_ref(Q, H, P, N):
+    ks = jax.random.split(jax.random.key(0), 5)
+    BC = 6
+    x = jax.random.normal(ks[0], (BC, Q, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (BC, Q, H), jnp.float32))
+    a = -jax.nn.softplus(jax.random.normal(ks[2], (BC, Q, H), jnp.float32))
+    Bm = jax.random.normal(ks[3], (BC, Q, H, N), jnp.float32)
+    Cm = jax.random.normal(ks[4], (BC, Q, H, N), jnp.float32)
+    from repro.kernels.ssd_scan import ssd_chunk
+    y, st_ = ssd_chunk(x, dt, a, Bm, Cm, interpret=True)
+    y_ref, st_ref = ref.ssd_chunk_ref(x, dt, a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(st_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_forward_matches_model_reference():
+    """Kernel-based full SSD == the model's pure-jnp ssd_chunked (the path
+    the LM actually runs)."""
+    ks = jax.random.split(jax.random.key(7), 5)
+    B, S, H, P, G, N, chunk = 2, 128, 4, 16, 2, 16, 32
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N), jnp.float32)
+    Cm = jax.random.normal(ks[4], (B, S, G, N), jnp.float32)
+    y_k, st_k = ssd_forward(x, dt, A, Bm, Cm, chunk=chunk)
+    y_r, st_r = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,111 @@
+"""Paper-claim validation: the three takeaways + case-study plausibility.
+
+These are the EXPERIMENTS.md acceptance tests — each asserts a qualitative
+claim of the paper against our calibrated models, at reduced budget so the
+suite stays fast. The full-budget versions live in benchmarks/.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PAPER_MODELS
+from repro.core import (ALL_DATAFLOWS, Gemm, dataflow_pareto_sweep,
+                        evaluate_workload, make_point)
+from repro.core import design_space as ds
+from repro.core.dse import DataflowName, optimize_for_model
+from repro.core.pareto import hypervolume_2d
+
+PAPER_GEMM = Gemm(8192, 4096, 4096)
+
+
+def _hv(front):
+    f = np.log10(np.maximum(front, 1e-12))
+    return hypervolume_2d(f, ref=np.array([0.0, 4.0]))
+
+
+@pytest.fixture(scope="module")
+def fronts():
+    return dataflow_pareto_sweep(jax.random.key(0), [PAPER_GEMM], n_samples=2048,
+                                 objectives=("latency_s", "area_mm2"))
+
+
+def test_takeaway1_systolic_dominates_broadcast_on_area(fronts):
+    """Takeaway #1: systolic interconnects enhance area efficiency."""
+    for df in ("WS", "OS"):
+        for ol in ("NOL", "OL"):
+            hb = _hv(fronts[f"{df}-Broadcast-{ol}"]["front"])
+            hs = _hv(fronts[f"{df}-Systolic-{ol}"]["front"])
+            assert hs > hb, (df, ol, hs, hb)
+
+
+def test_takeaway2_medium_macros_best_area_efficiency():
+    """Takeaway #2: at iso-multiplier budget, medium macros win on area
+    efficiency while big macros win on energy efficiency."""
+    budget = 512 * 1024
+    results = {}
+    for al, pc in [(32, 4), (128, 8), (256, 32), (256, 256)]:
+        n_macros = max(budget // (al * pc * 8), 1)
+        bc = int(np.ceil(np.sqrt(n_macros)))
+        br = int(np.ceil(n_macros / bc))
+        p = make_point(AL=al, PC=pc, LSL=2, PL=3, BR=br, BC=bc, TL=64,
+                       dataflow=ds.WS, interconnect=ds.SYSTOLIC)
+        ppa = evaluate_workload(p, [PAPER_GEMM])
+        results[al * pc] = (float(ppa.tops_per_watt), float(ppa.tops_per_mm2))
+    caps = sorted(results)
+    # energy efficiency rises with macro capacity
+    assert results[caps[-1]][0] > results[caps[0]][0]
+    # area efficiency peaks strictly inside the range (medium macros)
+    area_effs = [results[c][1] for c in caps]
+    assert max(area_effs) not in (area_effs[0],), area_effs
+    assert np.argmax(area_effs) < len(caps) - 1, area_effs
+
+
+def test_takeaway3_overlap_tradeoff():
+    """Takeaway #3: OL costs energy efficiency but improves area efficiency
+    for bandwidth-constrained designs (T_s comparable to T_c, i.e. large PC:
+    banks contend for the one weight-I/O port). For small PC the hidden
+    update is negligible and the OL area penalty wins."""
+    def eff(pc, ol):
+        p = make_point(AL=256, PC=pc, LSL=2, PL=3, OL=ol, BR=2, BC=4, TL=512,
+                       dataflow=ds.WS, interconnect=ds.SYSTOLIC)
+        ppa = evaluate_workload(p, [PAPER_GEMM])
+        return float(ppa.tops_per_watt), float(ppa.tops_per_mm2)
+
+    e0, a0 = eff(256, 0)
+    e1, a1 = eff(256, 1)
+    assert e1 < e0                  # energy efficiency always drops
+    assert a1 > a0                  # bandwidth-constrained: OL wins area-eff
+    e0s, a0s = eff(4, 0)
+    e1s, a1s = eff(4, 1)
+    assert a1s < a0s                # small PC: area penalty dominates
+
+
+def test_eq5_overlap_bound():
+    """Eq. 5's <=50% saving is a MACRO-level bound. At array level it holds
+    for the single-hop dataflows; OS-Systolic-NOL additionally pays the
+    neighbor-forward hop (round = T_c + 2*T_s), so OL may save up to 2/3 —
+    exactly the paper's 'OS-Systolic-NOL is suboptimal' observation."""
+    for dfn in ALL_DATAFLOWS:
+        if dfn.ol:
+            continue
+        kw = dict(AL=128, PC=64, LSL=4, BR=4, BC=4, TL=32,
+                  dataflow=dfn.dataflow, interconnect=dfn.interconnect)
+        l0 = float(evaluate_workload(make_point(OL=0, **kw), [PAPER_GEMM]).latency_s)
+        l1 = float(evaluate_workload(make_point(OL=1, **kw), [PAPER_GEMM]).latency_s)
+        floor = 0.32 if (dfn.dataflow == ds.OS and dfn.interconnect == ds.SYSTOLIC) else 0.49
+        assert l1 <= l0 and l1 >= floor * l0, (dfn.label, l1 / l0)
+
+
+def test_case_study_plausibility_gpt3():
+    """Table 3 GPT-3 row: random search at small budget should land within
+    ~5x of the paper's 2.22 s / sub-4 mm^2 / sub-4 W point."""
+    cfg = PAPER_MODELS["gpt3-175b"]
+    best, qor, _ = optimize_for_model(
+        jax.random.key(1), cfg, n_cores=16, batch=1, seq=2048,
+        peak_tops_cap=40.0, method="random", n=8192)
+    assert 0.4 < float(qor.latency_s) < 12.0
+    assert float(qor.area_mm2) < 8.0
+    assert float(qor.power_w) < 8.0
+    # systolic should win (takeaway 1)
+    assert int(best.interconnect) == ds.SYSTOLIC
