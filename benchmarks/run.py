@@ -18,10 +18,12 @@ def main() -> None:
 
     from .paper_figures import ALL, table3_llm_case_study
     from .roofline import roofline_table
+    from .sim_throughput import sim_throughput
 
     benches = dict(ALL)
     benches["table3_llm_case_study"] = lambda: table3_llm_case_study(args.budget)
     benches["roofline_table"] = roofline_table
+    benches["sim_throughput"] = sim_throughput
 
     print("name,us_per_call,derived")
     failed = []

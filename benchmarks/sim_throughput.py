@@ -1,0 +1,68 @@
+"""Fidelity-oracle throughput: per-point numpy event loop vs batched JAX sim.
+
+The cycle simulator went from a spot-check tool to a population-scale
+oracle; this harness keeps its speed in the bench trajectory so regressions
+(or wins) in simulated points/sec are visible PR over PR. Measures both
+backends on the same mixed 1024-point population (numpy on a timed
+subsample, extrapolated as points/sec) and reports the speedup in the
+derived column — tracked, not enforced (the shared-CPU bench hosts are too
+noisy for a hard perf floor; typical measurements land at 150-220x). Only a
+fidelity divergence between the backends fails the bench.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import cycle_sim, cycle_sim_jax
+from repro.core import design_space as ds
+from repro.core.design_space import point_rows
+
+from .common import write_csv
+
+N_POINTS = 1024
+N_PASSES = 3
+NUMPY_SUBSAMPLE = 64  # the python loop is ~3 orders slower; sample + extrapolate
+
+
+def sim_throughput():
+    pop = ds.sample_random(jax.random.key(42), N_POINTS)
+
+    # --- batched JAX: warm the jit caches, then best-of-3 full dispatches
+    res = cycle_sim_jax.simulate_batched(pop, N_PASSES)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        res = cycle_sim_jax.simulate_batched(pop, N_PASSES)
+        jax.block_until_ready(res.total_cycles)
+        best = min(best, time.perf_counter() - t0)
+    jax_pts_per_s = N_POINTS / best
+
+    # --- per-point numpy event loop on a subsample of the same population
+    rows = point_rows(pop)[:NUMPY_SUBSAMPLE]
+    t0 = time.perf_counter()
+    ref = [cycle_sim.simulate(r, N_PASSES) for r in rows]
+    np_time = time.perf_counter() - t0
+    np_pts_per_s = len(rows) / np_time
+
+    # fidelity guard: a fast-but-wrong oracle is worse than none, so a
+    # divergence from the numpy reference fails the bench outright
+    tot = np.asarray(res.total_cycles)[:NUMPY_SUBSAMPLE]
+    mismatches = int(np.sum(tot != np.array([r.total_cycles for r in ref])))
+    if mismatches:
+        raise AssertionError(
+            f"jax batched sim diverges from numpy event sim on "
+            f"{mismatches}/{len(rows)} benched points")
+
+    speedup = jax_pts_per_s / np_pts_per_s
+    write_csv(
+        "bench/sim_throughput.csv",
+        ["backend", "points", "points_per_s"],
+        [["numpy_event_loop", len(rows), np_pts_per_s],
+         ["jax_batched", N_POINTS, jax_pts_per_s]],
+    )
+    derived = (f"numpy={np_pts_per_s:.0f}pts/s jax={jax_pts_per_s:.0f}pts/s"
+               f" speedup={speedup:.0f}x mismatches={mismatches}")
+    return best * 1e6, derived

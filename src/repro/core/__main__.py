@@ -1,0 +1,13 @@
+"""Fidelity gate entry point: ``python -m repro.core [--smoke]``.
+
+A dedicated __main__ avoids the double-module-execution RuntimeWarning that
+``python -m repro.core.dse`` triggers (the package __init__ already imports
+dse before runpy re-executes it as __main__). Both spellings work; CI uses
+this one.
+"""
+import sys
+
+from .dse import _fidelity_main
+
+if __name__ == "__main__":
+    sys.exit(_fidelity_main())

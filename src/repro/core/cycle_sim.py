@@ -1,10 +1,24 @@
 """Cycle-accurate event simulator for the macro-array dataflows.
 
-This is the fidelity oracle for the closed forms in ``dataflow.py`` — the
-same role the paper's in-house cycle-accurate simulator plays. It simulates
-the macros of one array column as explicit state machines with weight-I/O
-bus contention, reduction-tree synchronization, systolic staggering, and
-per-row weight readiness, at event granularity (numpy; not perf-critical).
+This is the *root* fidelity oracle for the closed forms in ``dataflow.py``
+— the same role the paper's in-house cycle-accurate simulator plays. It
+simulates the macros of one array column as explicit state machines with
+weight-I/O bus contention, reduction-tree synchronization, systolic
+staggering, and per-row weight readiness, at event granularity (numpy;
+deliberately the slow, obviously-faithful reference).
+
+Three-level fidelity chain (each level validates the next):
+
+  1. this numpy event simulator — executes the raw event rules per macro;
+  2. ``cycle_sim_jax.py`` — a batched lax.scan re-implementation proven
+     bit-exact against level 1 by property tests over all 8 variants
+     (tests/test_cycle_sim_jax.py), fast enough to sweep whole DSE
+     populations (~100-200x the points/sec of this loop; see
+     benchmarks/sim_throughput.py);
+  3. the closed forms in ``dataflow.py`` — checked against level 2 at
+     population scale by ``dse.fidelity_sweep`` (CI gate:
+     ``PYTHONPATH=src python -m repro.core --smoke``), and against
+     level 1 by the steady-state tests in tests/test_core_dataflow.py.
 
 Array columns are timing-identical (they process disjoint N-chunks on
 replicated schedules), so a single column of BR macros captures the exact

@@ -1,0 +1,390 @@
+"""Batched, jit-compiled cycle-accurate simulator — the population-scale
+fidelity oracle.
+
+This is an exact JAX re-implementation of the numpy event simulator in
+``cycle_sim.py``: same event recurrences, same arrival/availability
+semantics, same ``end`` accounting — but expressed as ``lax.scan`` over
+rounds with per-macro state carried as padded arrays, so one dispatch
+simulates thousands of design points (the same batched ``DesignPoint``
+convention as ``dse.evaluate_population``). The three-level fidelity chain
+is:
+
+    numpy event sim  ==exact==  batched JAX sim  ==fill/drain slack==  closed forms
+
+tests/test_cycle_sim_jax.py pins the first equality under property-based
+randomization; ``dse.fidelity_sweep`` sweeps the second at population scale.
+
+Vectorization of the per-round event loops (see cycle_sim.py for the
+physical rules; each runner's docstring carries its derivation):
+
+  WS-Broadcast   The column bus rewrites the BR macros serially starting at
+                 t0 = max(bus_free, compute_end); macro r's row is ready at
+                 t0 + (r+1)*T_s, so only the per-slot *max* over macros
+                 (= t0 + BR*T_s = the new bus_free) needs carrying.
+  WS-Systolic    Rows never interact (each macro rewrites its own row on
+                 its own port) and run the identical monotone recurrence
+                 from stagger-ordered initial states, so simulating the
+                 last row's lane yields the array end exactly.
+  OS-Broadcast   All macros advance in lockstep; the carry is the scalar
+                 pair (avail, next_row_ready).
+  OS-Systolic    The neighbor-hop chains are max-plus lattice recurrences
+                 whose maximal paths tie under the uniform T_c/T_s costs,
+                 collapsing each to an elementwise per-row recurrence —
+                 again simulated on the last row's lane.
+
+Per-point round counts differ across a batch (rounds = n_passes * LSL), so
+the scans run to the group maximum and snapshot each point's ``end`` at its
+own target round; simulating n_passes and n_passes+1 shares one scan. The
+WS runners carry per-slot weight-readiness state and are specialized on a
+static LSL (populations are bucketed by exact LSL), which turns every slot
+access into a static index — no gather/scatter in any hot loop. Batch and
+round counts are bucketed to powers of two so repeated calls with nearby
+populations reuse the jit cache.
+
+All quantities are integer-valued floats (T_c, T_s are integers and every
+event time is a sum of them), so float32 arithmetic is exact as long as
+end times stay below 2**24 cycles — true for the grids in design_space and
+the pass counts used by tests and sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cycle_sim import SimResult
+from .dataflow import t_c as _t_c, t_s as _t_s
+from .design_space import BROADCAST, OS, SYSTOLIC, WS, DesignPoint
+
+_NEG = -1.0e30  # -inf stand-in that survives float32 arithmetic
+
+
+def _bucket(n: int, lo: int = 1) -> int:
+    """Round up to a power of two so jit caches hit across nearby batches."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def _snapshot(j, end, ra, rb, end_a, end_b):
+    """Record ``end`` when round j completes a point's n_passes / n_passes+1
+    round budget."""
+    end_a = jnp.where(j == ra - 1, end, end_a)
+    end_b = jnp.where(j == rb - 1, end, end_b)
+    return end_a, end_b
+
+
+# The five variant runners share the same skeleton: a lax.scan whose carry
+# is (variant state..., end, end_a, end_b), jitted with static shape
+# buckets. The WS runners carry per-slot weight-readiness state, so they are
+# specialized on a *static* LSL (populations are bucketed by exact LSL in
+# simulate_batched): the scan runs over block passes with the LSL rounds of
+# a pass unrolled, making every slot access a static slice instead of a
+# gather/scatter — orders of magnitude faster on CPU XLA. The OS runners
+# have no per-slot state; they scan over round *chunks* of _CHUNK unrolled
+# rounds to amortize while-loop overhead.
+
+_CHUNK = 16  # unrolled rounds per scan step in the OS runners
+
+
+def _ws_broadcast(tc, ts, BR, ol, pa, pb, LSL, P):
+    """LSL static; scan over P block passes. pa/pb = per-point pass counts
+    to snapshot (n_passes and n_passes+1)."""
+    n = tc.shape[0]
+
+    def step(carry, pss):
+        amax, wmax, bus_free, end, end_a, end_b = carry
+        wmax = list(wmax)  # per-slot readiness: a tuple of (n,) arrays, so
+        for s in range(LSL):  # static slot access never copies a buffer
+            start = jnp.maximum(amax, wmax[s])
+            cend = start + tc
+            t0 = jnp.maximum(bus_free, cend)
+            busf = t0 + BR * ts
+            wmax[s] = busf
+            bus_free = busf
+            amax = jnp.where(ol, cend, busf)
+            end = jnp.maximum(end, jnp.maximum(cend, busf))
+        end_a = jnp.where(pss == pa - 1, end, end_a)
+        end_b = jnp.where(pss == pb - 1, end, end_b)
+        return (amax, tuple(wmax), bus_free, end, end_a, end_b), None
+
+    z = jnp.zeros((n,), jnp.float32)
+    init = (z, (z,) * LSL, z, z, z, z)
+    (_, _, _, _, end_a, end_b), _ = jax.lax.scan(
+        step, init, jnp.arange(P, dtype=jnp.int32))
+    return end_a, end_b
+
+
+def _ws_systolic(tc, ts, r, ol, pa, pb, LSL, P):
+    """One lane per point, simulating the *last* array row. WS-Systolic rows
+    never interact — each macro has its own weight port and link segment —
+    and all rows run the identical monotone recurrence from states ordered
+    by the activation stagger r*T_s, so row BR-1 (``r`` = BR-1) finishes
+    last and its lane is exactly the array's end time. Update ends are
+    monotone over rounds, so the snapshot value is the lane's running max."""
+    n = tc.shape[0]
+
+    def step(carry, pss):
+        avail, wready, port, end_a, end_b = carry
+        wready = list(wready)  # per-slot readiness: tuple of (n,) arrays, so
+        for s in range(LSL):   # static slot access never copies a buffer
+            start = jnp.maximum(avail, wready[s])
+            if s == 0:  # activation stagger only exists on the very first round
+                start = jnp.maximum(start, jnp.where(pss == 0, r * ts, 0.0))
+            cend = start + tc
+            uend = jnp.maximum(cend, port) + ts
+            wready[s] = uend
+            port = uend
+            avail = jnp.where(ol, cend, uend)
+        end_a = jnp.where(pss == pa - 1, port, end_a)
+        end_b = jnp.where(pss == pb - 1, port, end_b)
+        return (avail, tuple(wready), port, end_a, end_b), None
+
+    z = jnp.zeros((n,), jnp.float32)
+    init = (z, (z,) * LSL, z, z, z)
+    (_, _, _, end_a, end_b), _ = jax.lax.scan(
+        step, init, jnp.arange(P, dtype=jnp.int32))
+    return end_a, end_b
+
+
+def _os_broadcast(tc, ts, BR, ol, ra, rb, C):
+    """Scan over C chunks of _CHUNK rounds; ra/rb = per-point round targets."""
+    n = tc.shape[0]
+
+    def step(carry, c):
+        avail, nxt, end, end_a, end_b = carry
+        for u in range(_CHUNK):
+            j = c * _CHUNK + u
+            cstart = jnp.maximum(avail, nxt)
+            cend = cstart + tc
+            bstart = jnp.maximum(nxt, jnp.where(ol, cstart, cend))
+            nxt = bstart + ts
+            avail = jnp.where(ol, cend, nxt)
+            end = jnp.maximum(end, jnp.maximum(cend, nxt))
+            end_a, end_b = _snapshot(j, end, ra, rb, end_a, end_b)
+        return (avail, nxt, end, end_a, end_b), None
+
+    z = jnp.zeros((n,), jnp.float32)
+    init = (z, ts, z, z, z)  # first broadcast completes at ts; bus_free == nxt
+    (_, _, _, end_a, end_b), _ = jax.lax.scan(
+        step, init, jnp.arange(C, dtype=jnp.int32))
+    return end_a, end_b
+
+
+def _os_systolic_ol(tc, ts, r, ra, rb, C):
+    """One lane per point, simulating the last array row (``r`` = BR-1).
+    The weight-hop chain never waits on compute in OL mode, and with the
+    uniform per-hop cost T_s the pipelined-link recurrence
+        arrive[j, r] = max(arrive[j, r-1], arrive[j-1, r]) + T_s
+    has the exact solution arrive[j, r] = (j + r + 1) * T_s (every lattice
+    path from the round-0 boundary has the same weight). That decouples the
+    rows, leaving the elementwise event recurrence this scan executes:
+        cend[j] = max(cend[j-1], arrive[j, r]) + T_c.
+    cend is monotone in r and over rounds, so the last row's lane is the
+    array end and the snapshot is the lane max."""
+    n = tc.shape[0]
+
+    def step(carry, c):
+        cend, end_a, end_b = carry
+        for u in range(_CHUNK):
+            j = c * _CHUNK + u
+            arrive = (jnp.float32(j) + r + 1.0) * ts
+            cend = jnp.maximum(cend, arrive) + tc
+            end_a, end_b = _snapshot(j, cend, ra, rb, end_a, end_b)
+        return (cend, end_a, end_b), None
+
+    z = jnp.zeros((n,), jnp.float32)
+    (_, end_a, end_b), _ = jax.lax.scan(
+        step, init=(z, z, z), xs=jnp.arange(C, dtype=jnp.int32))
+    return end_a, end_b
+
+
+def _os_systolic_nol(tc, ts, r, ra, rb, C):
+    """One lane per point, simulating the last array row (``r`` = BR-1).
+    Without overlap a macro serializes receive (T_s), compute (T_c), and
+    serving its downstream neighbor's receive (T_s):
+        xe[j, r] = max(xe[j, r-1] + T_c + T_s, F[j-1, r] + T_s)
+    where F is the previous round's port-free time (xe[j-1, r+1] for inner
+    rows, xe[j-1, r] + T_c for the last row). With uniform T_c/T_s every
+    maximal lattice path ties, giving the exact per-row event recurrence
+        xe[j] = xe[j-1] + T_c + 2*T_s   (BR >= 2 — the paper's round cost)
+        xe[j] = xe[j-1] + T_c + T_s     (BR == 1: no downstream hop)
+    from xe[0] = r*(T_c+T_s) + T_s. xe is monotone in r and over rounds, so
+    the last row's lane is the array end and the snapshot is the lane max."""
+    n = tc.shape[0]
+    xe0 = r * (tc + ts) + ts
+    # r == 0 here means BR == 1: a single row has no downstream neighbor to
+    # serve, so the forward hop disappears from the round.
+    period = jnp.where(r == 0.0, tc + ts, tc + 2.0 * ts)
+
+    def step(carry, c):
+        xe, end_a, end_b = carry
+        for u in range(_CHUNK):
+            j = c * _CHUNK + u
+            xe = jnp.where(j == 0, xe0, xe + period)
+            end_a, end_b = _snapshot(j, xe + tc, ra, rb, end_a, end_b)
+        return (xe, end_a, end_b), None
+
+    z = jnp.zeros((n,), jnp.float32)
+    (_, end_a, end_b), _ = jax.lax.scan(
+        step, init=(z, z, z), xs=jnp.arange(C, dtype=jnp.int32))
+    return end_a, end_b
+
+
+_JIT_RUNNERS = {
+    "ws_b": jax.jit(_ws_broadcast, static_argnums=(6, 7)),
+    "ws_s": jax.jit(_ws_systolic, static_argnums=(6, 7)),
+    "os_b": jax.jit(_os_broadcast, static_argnums=(6,)),
+    "os_s_ol": jax.jit(_os_systolic_ol, static_argnums=(5,)),
+    "os_s_nol": jax.jit(_os_systolic_nol, static_argnums=(5,)),
+}
+
+
+def simulate_batched(p: DesignPoint, n_passes) -> SimResult:
+    """Simulate a batch of design points in one (or a few) jitted dispatches.
+
+    ``p`` follows the ``evaluate_population`` convention: every field is a
+    scalar or an (n,)-shaped array. ``n_passes`` may be a python int or a
+    per-point integer array (rounds simulated = n_passes * LSL per point,
+    as in ``cycle_sim.simulate``). Returns a ``SimResult`` whose fields are
+    arrays of the batch shape (scalars for an unbatched point).
+
+    Only the scans for the dataflow variants actually present in the batch
+    are dispatched, so populations pinned to one dataflow (the
+    ``fidelity_sweep`` case) pay for exactly one scan.
+    """
+    shape = jnp.shape(p.AL)
+    flat = jax.tree.map(
+        lambda x: jnp.reshape(jnp.asarray(x, jnp.float32), (-1,)), p)
+    n = flat.AL.shape[0]
+
+    BR = np.asarray(flat.BR, dtype=np.int64)
+    LSL = np.asarray(flat.LSL, dtype=np.int64)
+    passes = np.broadcast_to(np.asarray(n_passes, dtype=np.int64), (n,))
+    ra = passes * LSL
+    rb = (passes + 1) * LSL
+
+    tc_all = np.asarray(_t_c(flat), dtype=np.float32)
+    ts_all = np.asarray(_t_s(flat), dtype=np.float32)
+    ol_all = np.asarray(flat.OL) > 0.5
+
+    df = np.asarray(flat.dataflow).astype(np.int64)
+    ic = np.asarray(flat.interconnect).astype(np.int64)
+    oli = ol_all.astype(np.int64)
+
+    end_a = np.zeros((n,), np.float32)
+    end_b = np.zeros((n,), np.float32)
+    groups: list[tuple[str, np.ndarray]] = []
+    ws_b_sel = (df == WS) & (ic == BROADCAST)
+    ws_s_sel = (df == WS) & (ic == SYSTOLIC)
+    # WS runners are specialized on a static LSL: one sub-batch per value.
+    for key, sel in (("ws_b", ws_b_sel), ("ws_s", ws_s_sel)):
+        for lsl in np.unique(LSL[sel]):
+            groups.append((key, np.nonzero(sel & (LSL == lsl))[0]))
+    for key, sel in (
+        ("os_b", (df == OS) & (ic == BROADCAST)),
+        ("os_s_ol", (df == OS) & (ic == SYSTOLIC) & (oli == 1)),
+        ("os_s_nol", (df == OS) & (ic == SYSTOLIC) & (oli == 0)),
+    ):
+        if sel.any():
+            groups.append((key, np.nonzero(sel)[0]))
+
+    for key, idx in groups:
+        m = _bucket(len(idx))
+        # pad by repeating the first point — simulated, then discarded
+        pad = np.concatenate([idx, np.full(m - len(idx), idx[0], np.int64)])
+        tc = jnp.asarray(tc_all[pad])
+        ts = jnp.asarray(ts_all[pad])
+        olb = jnp.asarray(ol_all[pad])
+        # the systolic runners simulate the last array row's lane (r = BR-1);
+        # see their docstrings for why that lane is exactly the array end
+        rlast = jnp.asarray((BR[pad] - 1).astype(np.float32))
+        if key in ("ws_b", "ws_s"):
+            lsl = int(LSL[idx[0]])
+            P = _bucket(int(passes[pad].max()) + 1, lo=2)
+            pa = jnp.asarray(passes[pad], jnp.int32)
+            pb = pa + 1
+            if key == "ws_b":
+                BRf = jnp.asarray(BR[pad], jnp.float32)
+                ea, eb = _JIT_RUNNERS["ws_b"](tc, ts, BRf, olb, pa, pb, lsl, P)
+            else:
+                ea, eb = _JIT_RUNNERS["ws_s"](
+                    tc, ts, rlast, olb, pa, pb, lsl, P)
+        else:
+            C = _bucket(-(-int(rb[pad].max()) // _CHUNK))
+            # snapshots compare against the int32 round counter
+            rai = jnp.asarray(ra[pad], jnp.int32)
+            rbi = jnp.asarray(rb[pad], jnp.int32)
+            if key == "os_b":
+                BRf = jnp.asarray(BR[pad], jnp.float32)
+                ea, eb = _JIT_RUNNERS["os_b"](tc, ts, BRf, olb, rai, rbi, C)
+            elif key == "os_s_ol":
+                ea, eb = _JIT_RUNNERS["os_s_ol"](tc, ts, rlast, rai, rbi, C)
+            else:
+                ea, eb = _JIT_RUNNERS["os_s_nol"](tc, ts, rlast, rai, rbi, C)
+        end_a[idx] = np.asarray(ea)[: len(idx)]
+        end_b[idx] = np.asarray(eb)[: len(idx)]
+
+    end_a = jnp.asarray(end_a)
+    end_b = jnp.asarray(end_b)
+    compute_busy = jnp.asarray(
+        (passes * LSL).astype(np.float32) * tc_all * BR.astype(np.float32)
+        * np.asarray(flat.BC, dtype=np.float32))
+
+    def out(x):
+        return jnp.reshape(x, shape) if shape else jnp.reshape(x, ())[()]
+
+    return SimResult(
+        total_cycles=out(end_a),
+        per_pass_steady=out(end_b - end_a),
+        compute_busy=out(compute_busy),
+    )
+
+
+def simulate(p: DesignPoint, n_passes: int) -> SimResult:
+    """Scalar-point convenience wrapper returning python floats, API-matched
+    to ``cycle_sim.simulate`` (the numpy reference this module is tested
+    against)."""
+    r = simulate_batched(p, n_passes)
+    return SimResult(
+        total_cycles=float(r.total_cycles),
+        per_pass_steady=float(r.per_pass_steady),
+        compute_busy=float(r.compute_busy),
+    )
+
+
+def steady_state_passes(p: DesignPoint, min_passes: int = 3) -> np.ndarray:
+    """Per-point block-pass counts sufficient for ``per_pass_steady`` to
+    measure true steady state (scalar or batched, elementwise).
+
+    Fill transients last ~BR rounds; the OS-Systolic-OL arrival chain
+    additionally stays arrival-dominated for ~BR*T_s/(T_c-T_s) rounds when
+    compute outpaces the hops (capped at 4096 rounds). Shared by
+    ``dse.fidelity_sweep`` and the property tests so the CI gate and the
+    test suite agree on what "reached steady state" means.
+    """
+    BR = np.asarray(p.BR, np.int64)
+    LSL = np.asarray(p.LSL, np.int64)
+    tc = np.asarray(_t_c(p), np.float64)
+    ts = np.asarray(_t_s(p), np.float64)
+    need = BR + 2
+    os_s_ol = (np.asarray(p.dataflow) == OS) & \
+        (np.asarray(p.interconnect) == SYSTOLIC) & (np.asarray(p.OL) > 0.5)
+    gap = np.maximum(tc - ts, 0.0)
+    cross = np.where(gap > 0, np.ceil(BR * ts / np.maximum(gap, 1e-9)), 0.0)
+    need = np.where(
+        os_s_ol, np.maximum(need, np.minimum(cross, 4096).astype(np.int64) + 2),
+        need)
+    return np.maximum(min_passes, -(-need // LSL) + 1)
+
+
+def fill_drain_slack(p: DesignPoint) -> np.ndarray:
+    """Generous bound on fill/drain cycles: (BR + LSL + 2) * (T_c + 2*T_s).
+    End-to-end totals must stay within this of n_passes x the closed-form
+    steady pass cost (scalar or batched, elementwise)."""
+    BR = np.asarray(p.BR, np.float64)
+    LSL = np.asarray(p.LSL, np.float64)
+    tc = np.asarray(_t_c(p), np.float64)
+    ts = np.asarray(_t_s(p), np.float64)
+    return (BR + LSL + 2) * (tc + 2 * ts)

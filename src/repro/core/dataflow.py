@@ -89,7 +89,7 @@ def block_cycles_macro(p: DesignPoint) -> jnp.ndarray:
     return jnp.where(p.OL > 0.5, p.LSL * jnp.maximum(tc, ts), p.LSL * (tc + ts))
 
 
-def _round_cycles(p: DesignPoint) -> jnp.ndarray:
+def round_cycles(p: DesignPoint) -> jnp.ndarray:
     """Steady-state cycles of one (compute one weight row + make its update
     happen) round, per the 8-variant table above."""
     tc, ts = t_c(p), t_s(p)
@@ -102,6 +102,17 @@ def _round_cycles(p: DesignPoint) -> jnp.ndarray:
     ws = jnp.where(p.interconnect == BROADCAST, ws_b, ws_s)
     os = jnp.where(p.interconnect == BROADCAST, os_b, os_s)
     return jnp.where(p.dataflow == WS, ws, os)
+
+
+def steady_pass_cycles(p: DesignPoint) -> jnp.ndarray:
+    """Closed-form steady-state cost of one block pass (LSL rounds) — the
+    quantity the cycle simulators' ``per_pass_steady`` is validated against
+    (see cycle_sim.py for the three-level fidelity chain)."""
+    return p.LSL * round_cycles(p)
+
+
+# backwards-compatible private alias (pre-fidelity-suite name)
+_round_cycles = round_cycles
 
 
 def _fill_cycles(p: DesignPoint) -> jnp.ndarray:
@@ -122,7 +133,7 @@ def gemm_timing(p: DesignPoint, g: Gemm) -> DataflowTiming:
     loss exactly as it would on silicon.
     """
     tc = t_c(p)
-    round_c = _round_cycles(p)
+    round_c = round_cycles(p)
     fill = _fill_cycles(p)
 
     # ---- WS mapping: rows->K (AL each), cols->N (PC*LSL each), M->TL blocks.

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from . import bayesopt, design_space as ds
-from .dataflow import Gemm
+from . import bayesopt, cycle_sim_jax, design_space as ds
+from .dataflow import Gemm, steady_pass_cycles
 from .design_space import DesignPoint
 from .mapper import constrained_objective, evaluate_model
 from .pareto import pareto_front, pareto_mask
@@ -83,6 +83,68 @@ def dataflow_pareto_sweep(
     return out
 
 
+def fidelity_sweep(
+    key: jax.Array,
+    gemms: Sequence[Gemm] | None = None,
+    n_samples: int = 512,
+    min_passes: int = 3,
+    dataflows: Sequence[DataflowName] = tuple(ALL_DATAFLOWS),
+):
+    """Population-scale cross-validation of the closed forms against the
+    batched cycle simulator — the systematic sim-vs-model check the paper's
+    evaluation methodology rests on, swept instead of spot-checked.
+
+    For each dataflow variant, samples a pinned random population, runs the
+    batched event simulator (``cycle_sim_jax``) and the closed-form steady
+    pass cost (``dataflow.steady_pass_cycles``) on the *same* points, and
+    reports max/mean relative error plus the fraction of points whose
+    end-to-end total stays within the fill/drain slack of n_passes x the
+    closed form. Pass counts adapt per point so every design reaches steady
+    state before the measured pass (systolic fill takes ~BR rounds; the
+    OS-Systolic-OL arrival chain takes ~BR*T_s/(T_c-T_s) rounds when
+    compute outpaces the hops).
+
+    ``gemms``, when given, additionally reports the closed-form mean
+    utilization of the valid population on that workload, tying the sweep to
+    the DSE objective the closed forms feed.
+
+    Returns {variant label: {n, max_rel_err, mean_rel_err,
+    frac_within_slack[, mean_util]}}.
+    """
+    out = {}
+    for dfn in dataflows:
+        key, k = jax.random.split(key)
+        pop = ds.sample_random(
+            k, n_samples, dataflow=dfn.dataflow, interconnect=dfn.interconnect,
+            OL=dfn.ol,
+        )
+        valid = np.asarray(ds.is_valid(pop))
+        popv = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[valid]), pop)
+
+        # per-point pass counts that reach steady state (see the helper)
+        passes = cycle_sim_jax.steady_state_passes(popv, min_passes=min_passes)
+        sim = cycle_sim_jax.simulate_batched(popv, passes)
+        closed = np.asarray(steady_pass_cycles(popv), np.float64)
+        pps = np.asarray(sim.per_pass_steady, np.float64)
+        rel = np.abs(pps - closed) / np.maximum(closed, 1.0)
+
+        slack = cycle_sim_jax.fill_drain_slack(popv)
+        total = np.asarray(sim.total_cycles, np.float64)
+        within = np.abs(total - passes * closed) <= slack
+
+        rep = dict(
+            n=int(valid.sum()),
+            max_rel_err=float(rel.max()) if rel.size else 0.0,
+            mean_rel_err=float(rel.mean()) if rel.size else 0.0,
+            frac_within_slack=float(within.mean()) if rel.size else 1.0,
+        )
+        if gemms is not None:
+            ppa = evaluate_population(popv, gemms)
+            rep["mean_util"] = float(np.asarray(ppa.utilization).mean())
+        out[dfn.label] = rep
+    return out
+
+
 def optimize_for_model(
     key: jax.Array,
     cfg: ArchConfig,
@@ -114,3 +176,48 @@ def optimize_for_model(
     best = jax.tree.map(lambda v: jnp.reshape(jnp.asarray(v), ()), best)
     qor = evaluate_model(best, cfg, n_cores=n_cores, batch=batch, seq=seq, mode=mode)
     return best, qor, (x, y)
+
+
+def _fidelity_main(argv=None):  # pragma: no cover - exercised by CI smoke run
+    """CLI gate: ``python -m repro.core [--smoke]`` runs the fidelity
+    sweep and fails (exit 1) when simulator-vs-closed-form drift exceeds the
+    per-variant error budget — CI's defense against either side rotting."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=fidelity_sweep.__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small population for CI (64 samples/variant)")
+    ap.add_argument("--samples", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget", type=float, default=1e-4,
+                    help="max allowed per-variant max relative error of the "
+                         "steady per-pass cost (float32 rounding headroom)")
+    args = ap.parse_args(argv)
+
+    n = 64 if args.smoke else args.samples
+    rep = fidelity_sweep(jax.random.key(args.seed), n_samples=n)
+    worst = 0.0
+    print("variant,n,max_rel_err,mean_rel_err,frac_within_slack")
+    for label, r in rep.items():
+        print(f"{label},{r['n']},{r['max_rel_err']:.3e},"
+              f"{r['mean_rel_err']:.3e},{r['frac_within_slack']:.3f}")
+        worst = max(worst, r["max_rel_err"])
+        if r["n"] == 0:
+            # an empty valid population means the variant was not actually
+            # validated — a vacuous pass must not keep CI green
+            print(f"FAIL: {label} sampled no valid points")
+            return 1
+        if r["frac_within_slack"] < 1.0:
+            print(f"FAIL: {label} has points outside fill/drain slack")
+            return 1
+    if worst > args.budget:
+        print(f"FAIL: max_rel_err {worst:.3e} exceeds budget {args.budget:.1e}")
+        return 1
+    print(f"OK: worst max_rel_err {worst:.3e} within budget {args.budget:.1e}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(_fidelity_main())

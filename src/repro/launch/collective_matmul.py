@@ -22,10 +22,30 @@ tests/test_collective_matmul.py on a host mesh.
 from __future__ import annotations
 
 import functools
+import inspect
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+if hasattr(jax, "shard_map"):  # jax >= 0.5: top-level API
+    _shard_map = jax.shard_map
+else:  # older jax: experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the replication-check kwarg was renamed check_rep -> check_vma
+# independently of shard_map's top-level promotion; key off the signature
+_SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else {"check_rep": False}
+)
+
+
+def _axis_size(axis: str):
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)  # folds to the static axis size at trace time
 
 
 def broadcast_matmul(x: jnp.ndarray, w: jnp.ndarray, mesh, axis: str = "model"):
@@ -35,10 +55,10 @@ def broadcast_matmul(x: jnp.ndarray, w: jnp.ndarray, mesh, axis: str = "model"):
         wf = jax.lax.all_gather(ws, axis, axis=0, tiled=True)  # (K, N)
         return xs @ wf
 
-    return jax.shard_map(
+    return _shard_map(
         inner, mesh=mesh,
         in_specs=(P(None, None), P(axis, None)),
-        out_specs=P(None, None), check_vma=False,
+        out_specs=P(None, None), **_SHARD_MAP_KW,
     )(x, w)
 
 
@@ -53,7 +73,7 @@ def ring_matmul(x: jnp.ndarray, w: jnp.ndarray, mesh, axis: str = "model"):
     N = w.shape[1]
 
     def inner(xs, ws):
-        n = jax.lax.axis_size(axis)
+        n = _axis_size(axis)
         me = jax.lax.axis_index(axis)
         part = xs @ ws                                  # (M, K/n)@(K/n, N)
         M = part.shape[0]
@@ -85,8 +105,8 @@ def ring_matmul(x: jnp.ndarray, w: jnp.ndarray, mesh, axis: str = "model"):
                 out, cur[:, None, :], src, axis=1)
         return out.reshape(M, N)
 
-    return jax.shard_map(
+    return _shard_map(
         inner, mesh=mesh,
         in_specs=(P(None, axis), P(axis, None)),
-        out_specs=P(None, None), check_vma=False,
+        out_specs=P(None, None), **_SHARD_MAP_KW,
     )(x, w)

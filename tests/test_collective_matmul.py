@@ -19,8 +19,12 @@ import json, re
 import jax, jax.numpy as jnp, numpy as np
 from repro.launch.collective_matmul import broadcast_matmul, ring_matmul
 
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+# axis_types / AxisType only exist on newer jax; the default (Auto) is what
+# we want anyway, so pass it only when available.
+mesh_kw = {}
+if hasattr(jax.sharding, "AxisType"):
+    mesh_kw["axis_types"] = (jax.sharding.AxisType.Auto,)
+mesh = jax.make_mesh((8,), ("model",), **mesh_kw)
 kx, kw = jax.random.split(jax.random.key(0))
 x = jax.random.normal(kx, (64, 128), jnp.float32)
 w = jax.random.normal(kw, (128, 96), jnp.float32)

@@ -1,0 +1,134 @@
+"""Batched JAX cycle simulator vs the numpy event simulator (exact) and the
+closed forms (within fill/drain slack) — the three-level fidelity chain.
+
+The numpy event simulator (cycle_sim.py) is the root oracle: it executes the
+per-macro event rules directly. The batched JAX simulator (cycle_sim_jax.py)
+must reproduce it *bit-exactly* — totals and steady per-pass costs — for all
+8 dataflow variants, including fill transients, because the DSE fidelity
+sweep trusts it at population scale where the numpy loop can only ever
+spot-check.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cycle_sim, cycle_sim_jax, dataflow as dfm
+from repro.core import design_space as ds
+from repro.core.design_space import (BROADCAST, OS, SYSTOLIC, WS, make_point,
+                                     point_rows)
+
+VARIANTS = [(df, ic, ol) for df in (WS, OS) for ic in (BROADCAST, SYSTOLIC)
+            for ol in (0, 1)]
+
+
+# ---------------------------------------------------------------------------
+# Level 1: numpy event sim == batched JAX sim, exactly (satellite: property
+# equivalence over randomized BR/BC/LSL/T_c/T_s for all 8 variants)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+@given(
+    BR=st.integers(1, 6),
+    LSL=st.sampled_from([2, 4, 8]),
+    TL=st.sampled_from([8, 32, 128]),     # T_c = TL * IBW/2
+    PC=st.sampled_from([2, 8, 32]),       # T_s = kappa * PC * WBW
+    BC=st.sampled_from([1, 3]),
+    n_passes=st.sampled_from([3, 5]),
+)
+@settings(max_examples=20, deadline=None)
+def test_jax_sim_matches_numpy_exactly(df, ic, ol, BR, LSL, TL, PC, BC, n_passes):
+    p = make_point(AL=32, PC=PC, LSL=LSL, PL=1, OL=ol, BR=BR, BC=BC, TL=TL,
+                   dataflow=df, interconnect=ic)
+    ref = cycle_sim.simulate(p, n_passes=n_passes)
+    got = cycle_sim_jax.simulate(p, n_passes=n_passes)
+    assert got.total_cycles == ref.total_cycles, (
+        f"total mismatch df={df} ic={ic} ol={ol} BR={BR} LSL={LSL}")
+    assert got.per_pass_steady == ref.per_pass_steady, (
+        f"steady mismatch df={df} ic={ic} ol={ol} BR={BR} LSL={LSL}")
+    assert got.compute_busy == ref.compute_busy
+
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+@given(
+    BR=st.integers(1, 6),
+    LSL=st.sampled_from([2, 4, 8]),
+    TL=st.sampled_from([8, 32, 128]),
+    PC=st.sampled_from([2, 8, 32]),
+)
+@settings(max_examples=15, deadline=None)
+def test_jax_sim_matches_closed_form_within_slack(df, ic, ol, BR, LSL, TL, PC):
+    """Level 2: the batched sim's totals stay within fill/drain slack of
+    n_passes x the closed-form steady pass cost, and the steady per-pass cost
+    itself matches the closed form once the design reaches steady state."""
+    p = make_point(AL=32, PC=PC, LSL=LSL, PL=1, OL=ol, BR=BR, BC=1, TL=TL,
+                   dataflow=df, interconnect=ic)
+    # the same steady-state pass counts and slack bound the CI fidelity gate
+    # uses (cycle_sim_jax helpers) — test and gate must agree on both
+    n_passes = int(cycle_sim_jax.steady_state_passes(p))
+    sim = cycle_sim_jax.simulate(p, n_passes=n_passes)
+    closed = float(dfm.steady_pass_cycles(p))
+    assert sim.per_pass_steady == pytest.approx(closed)
+    slack = float(cycle_sim_jax.fill_drain_slack(p))
+    assert abs(sim.total_cycles - n_passes * closed) <= slack
+
+
+# ---------------------------------------------------------------------------
+# Batched dispatch: mixed populations, per-point pass counts, shapes
+# ---------------------------------------------------------------------------
+
+def test_batched_mixed_population_matches_per_point_numpy():
+    """One batched dispatch over a mixed random population equals the
+    per-point numpy event loop exactly — the population-scale contract the
+    fidelity sweep rests on."""
+    pop = ds.sample_random(jax.random.key(11), 128)
+    res = cycle_sim_jax.simulate_batched(pop, 3)
+    tot = np.asarray(res.total_cycles)
+    pps = np.asarray(res.per_pass_steady)
+    busy = np.asarray(res.compute_busy)
+    for i, row in enumerate(point_rows(pop)):
+        ref = cycle_sim.simulate(row, 3)
+        assert tot[i] == ref.total_cycles, f"point {i}: {row}"
+        assert pps[i] == ref.per_pass_steady, f"point {i}: {row}"
+        assert busy[i] == pytest.approx(ref.compute_busy, rel=1e-6)
+
+
+def test_batched_per_point_pass_counts():
+    pop = ds.sample_random(jax.random.key(3), 64)
+    passes = np.full(64, 3)
+    passes[::2] = 6
+    res = cycle_sim_jax.simulate_batched(pop, passes)
+    for i, row in enumerate(point_rows(pop)):
+        ref = cycle_sim.simulate(row, int(passes[i]))
+        assert float(np.asarray(res.total_cycles)[i]) == ref.total_cycles
+        assert float(np.asarray(res.per_pass_steady)[i]) == ref.per_pass_steady
+
+
+def test_batch_shape_and_scalar_roundtrip():
+    pop = ds.sample_random(jax.random.key(5), 17)
+    res = cycle_sim_jax.simulate_batched(pop, 3)
+    assert np.shape(res.total_cycles) == (17,)
+    assert np.shape(res.per_pass_steady) == (17,)
+    p = make_point()
+    scalar = cycle_sim_jax.simulate(p, 3)
+    assert isinstance(scalar.total_cycles, float)
+    assert scalar.total_cycles == cycle_sim.simulate(p, 3).total_cycles
+
+
+# ---------------------------------------------------------------------------
+# Level 3: the DSE fidelity sweep reports (near-)zero drift per variant
+# ---------------------------------------------------------------------------
+
+def test_fidelity_sweep_smoke():
+    from repro.core.dse import fidelity_sweep
+
+    rep = fidelity_sweep(jax.random.key(0), n_samples=32)
+    assert set(rep) == {
+        "WS-Broadcast-NOL", "WS-Broadcast-OL", "WS-Systolic-NOL",
+        "WS-Systolic-OL", "OS-Broadcast-NOL", "OS-Broadcast-OL",
+        "OS-Systolic-NOL", "OS-Systolic-OL",
+    }
+    for label, r in rep.items():
+        assert r["n"] > 0
+        assert r["max_rel_err"] <= 1e-4, (label, r)
+        assert r["frac_within_slack"] == 1.0, (label, r)

@@ -1,0 +1,136 @@
+"""pareto.py + dse.dataflow_pareto_sweep coverage: golden determinism,
+non-domination, permutation invariance, and the degenerate all-invalid path."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import design_space as ds
+from repro.core import dse
+from repro.core.dataflow import Gemm
+from repro.core.pareto import hypervolume_2d, pareto_front, pareto_mask
+
+
+def dominates(a, b):
+    return np.all(a <= b) and np.any(a < b)
+
+
+# ---------------------------------------------------------------------------
+# pareto_mask / pareto_front
+# ---------------------------------------------------------------------------
+
+def test_pareto_mask_golden():
+    objs = np.array([
+        [1.0, 5.0],   # front
+        [2.0, 4.0],   # front
+        [3.0, 3.0],   # front
+        [2.0, 6.0],   # dominated by [1,5] and [2,4]
+        [4.0, 4.0],   # dominated by [3,3] and [2,4]
+        [1.0, 5.0],   # duplicate of a front point -> also kept
+    ])
+    mask = np.asarray(pareto_mask(objs))
+    assert mask.tolist() == [True, True, True, False, False, True]
+
+
+def test_pareto_front_sorted_and_aligned_extras():
+    objs = np.array([[3.0, 3.0], [1.0, 5.0], [2.0, 4.0], [4.0, 9.0]])
+    tags = np.array([30, 10, 20, 40])
+    front, t = pareto_front(objs, tags)
+    assert front[:, 0].tolist() == [1.0, 2.0, 3.0]   # sorted by objective 0
+    assert t.tolist() == [10, 20, 30]                # extras stay aligned
+
+
+def test_pareto_front_nondominated_and_complete_random():
+    rng = np.random.default_rng(0)
+    objs = rng.random((256, 3))
+    mask = np.asarray(pareto_mask(objs))
+    front = objs[mask]
+    rest = objs[~mask]
+    for f in front:  # mutually non-dominated
+        assert not any(dominates(g, f) for g in front if not np.array_equal(g, f))
+    for r in rest:   # every excluded point is dominated by someone on the front
+        assert any(dominates(f, r) for f in front)
+
+
+def test_pareto_front_permutation_invariant():
+    rng = np.random.default_rng(1)
+    objs = rng.random((128, 2))
+    perm = rng.permutation(128)
+    f1, = pareto_front(objs)
+    f2, = pareto_front(objs[perm])
+    np.testing.assert_allclose(f1, f2)
+
+
+def test_pareto_mask_all_inf_population():
+    """The all-invalid-population path: dataflow_pareto_sweep masks invalid
+    points to np.inf — an all-inf population must survive (no point strictly
+    dominates another, so everything stays on the 'front')."""
+    objs = np.full((8, 2), np.inf)
+    mask = np.asarray(pareto_mask(objs))
+    assert mask.all()
+    front, = pareto_front(objs)
+    assert front.shape == (8, 2) and np.isinf(front).all()
+
+
+def test_inf_points_dominated_by_finite():
+    objs = np.array([[1.0, 1.0], [np.inf, np.inf], [np.inf, 2.0]])
+    mask = np.asarray(pareto_mask(objs))
+    assert mask.tolist() == [True, False, False]
+
+
+def test_hypervolume_2d():
+    front = np.array([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0]])
+    ref = np.array([4.0, 4.0])
+    # rectangles: (4-1)*(4-3) + (4-2)*(3-2) + (4-3)*(2-1) = 3 + 2 + 1
+    assert hypervolume_2d(front, ref) == pytest.approx(6.0)
+    assert hypervolume_2d(np.zeros((0, 2)), ref) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# dse.dataflow_pareto_sweep
+# ---------------------------------------------------------------------------
+
+GEMMS = [Gemm(1024, 1024, 1024)]
+
+
+def _sweep(seed=0, n=256):
+    return dse.dataflow_pareto_sweep(
+        jax.random.key(seed), GEMMS, n_samples=n,
+        dataflows=[dse.DataflowName(ds.WS, ds.SYSTOLIC, 0),
+                   dse.DataflowName(ds.OS, ds.BROADCAST, 1)],
+    )
+
+
+def test_pareto_sweep_deterministic_golden():
+    a = _sweep()
+    b = _sweep()
+    assert set(a) == {"WS-Systolic-NOL", "OS-Broadcast-OL"}
+    for label in a:
+        np.testing.assert_array_equal(a[label]["front"], b[label]["front"])
+        np.testing.assert_array_equal(a[label]["points"], b[label]["points"])
+
+
+def test_pareto_sweep_fronts_nondominated_and_sorted():
+    out = _sweep(seed=2)
+    for label, d in out.items():
+        front = d["front"]
+        finite = front[np.all(np.isfinite(front), axis=1)]
+        assert len(finite) >= 1, label
+        assert np.all(np.diff(finite[:, 0]) >= 0), label  # sorted
+        for i, f in enumerate(finite):
+            for j, g in enumerate(finite):
+                if i != j:
+                    assert not dominates(g, f), (label, f, g)
+
+
+def test_pareto_sweep_all_invalid_population(monkeypatch):
+    """When every sampled point is invalid all objectives become np.inf; the
+    sweep must still return a well-formed (degenerate) front, not crash."""
+    monkeypatch.setattr(
+        dse.ds, "is_valid",
+        lambda p: np.zeros(np.shape(np.asarray(p.AL)), dtype=bool))
+    out = dse.dataflow_pareto_sweep(
+        jax.random.key(0), GEMMS, n_samples=64,
+        dataflows=[dse.DataflowName(ds.WS, ds.SYSTOLIC, 0)])
+    front = out["WS-Systolic-NOL"]["front"]
+    assert front.shape[0] == 64
+    assert np.isinf(front).all()

@@ -128,12 +128,25 @@ def test_elastic_restore_changes_sharding(tmp_path):
 # Fault tolerance
 # ---------------------------------------------------------------------------
 
-def _controller(tmp_path, cfg=None):
+class _LearnableLMDataset(SyntheticLMDataset):
+    """Synthetic stream with a learnable marginal: tokens restricted to a
+    small slice of the vocab. The base stream is uniform over the whole
+    vocab, which puts a near-uniform init *at* the entropy floor — loss then
+    only random-walks and "training decreases loss" is a coin flip."""
+
+    def batch_at(self, step: int) -> dict:
+        batch = super().batch_at(step)
+        tok = 2 + batch["tokens"] % 37
+        return {"tokens": tok, "targets": jnp.roll(tok, -1, axis=1)}
+
+
+def _controller(tmp_path, cfg=None, learnable=False):
     cfg = cfg or smoke_config("qwen2-0.5b")
     api = build_model(cfg, remat=False)
     train_step, opt_init = make_train_step(api)
     jitted = jax.jit(train_step, donate_argnums=())
-    ds = SyntheticLMDataset(cfg, batch=2, seq=32, seed=3)
+    ds_cls = _LearnableLMDataset if learnable else SyntheticLMDataset
+    ds = ds_cls(cfg, batch=2, seq=32, seed=3)
     return TrainController(
         train_step=jitted,
         init_params=lambda: api.init(jax.random.key(0)),
@@ -164,7 +177,7 @@ def test_recovery_is_bitwise_identical(tmp_path):
 
 
 def test_loss_decreases_over_training(tmp_path):
-    ctrl = _controller(tmp_path)
+    ctrl = _controller(tmp_path, learnable=True)
     res = ctrl.run(total_steps=8)
     assert res.losses[-1] < res.losses[0]
 
