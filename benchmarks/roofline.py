@@ -8,7 +8,6 @@ form the §Roofline table, multi-pod rows prove the pod axis shards.
 from __future__ import annotations
 
 import json
-from pathlib import Path
 
 from .common import RESULTS, write_csv
 

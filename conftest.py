@@ -6,7 +6,8 @@ collection with ``ModuleNotFoundError``, install a minimal deterministic
 shim into ``sys.modules`` that supports the exact subset the suite uses:
 
     from hypothesis import given, settings, strategies as st
-    @given(st.sampled_from([...]), x=st.integers(lo, hi))
+    @given(st.sampled_from([...]), x=st.integers(lo, hi),
+           xs=st.lists(st.tuples(...), min_size=..., max_size=...))
     @settings(max_examples=N, deadline=None)
 
 The shim enumerates the cartesian product of finite strategies when it fits
@@ -71,6 +72,22 @@ def _install_hypothesis_shim() -> None:
 
         def draw(self, rng):
             return rng.uniform(self.min_value, self.max_value)
+
+    class _Tuples(_Strategy):
+        def __init__(self, *parts):
+            self.parts = parts
+
+        def draw(self, rng):
+            return tuple(p.draw(rng) for p in self.parts)
+
+    class _Lists(_Strategy):
+        def __init__(self, element, min_size=0, max_size=10, **_kw):
+            self.element = element
+            self.min_size, self.max_size = int(min_size), int(max_size)
+
+        def draw(self, rng):
+            size = rng.randint(self.min_size, self.max_size)
+            return [self.element.draw(rng) for _ in range(size)]
 
     def settings(max_examples=None, deadline=None, **_kw):
         def deco(fn):
@@ -148,6 +165,8 @@ def _install_hypothesis_shim() -> None:
     st_mod.integers = _Integers
     st_mod.booleans = _Booleans
     st_mod.floats = _Floats
+    st_mod.tuples = _Tuples
+    st_mod.lists = _Lists
 
     hyp_mod = types.ModuleType("hypothesis")
     hyp_mod.given = given

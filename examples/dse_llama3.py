@@ -9,14 +9,15 @@ import argparse
 
 import jax
 
-from repro.configs import PAPER_MODELS, get_config
+from repro.configs import REGISTRY, get_config
 from repro.core.dse import DataflowName, optimize_for_model
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--model", default="llama3-8b",
-                    choices=sorted(set(PAPER_MODELS) | set()))
+    # the full config registry, so non-paper archs (deepseek-v3-671b,
+    # gemma2-27b, ...) can be optimized from the CLI too
+    ap.add_argument("--model", default="llama3-8b", choices=sorted(REGISTRY))
     ap.add_argument("--cores", type=int, default=4)
     ap.add_argument("--seq", type=int, default=8192)
     ap.add_argument("--tops-cap", type=float, default=40.0)

@@ -6,12 +6,10 @@ GEMM through the CIM Pallas kernel (interpret mode) to see the compute path.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (Gemm, dataflow_pareto_sweep, evaluate_workload,
-                        make_point, sample_random)
+                        make_point)
 from repro.core import design_space as ds
-from repro.core.dse import DataflowName
 from repro.kernels import cim_matmul, quantize_w8
 
 

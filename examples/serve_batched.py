@@ -5,7 +5,6 @@ with the KV cache — the serve_step the decode_32k dry-run cells lower.
     PYTHONPATH=src python examples/serve_batched.py --arch yi-6b --decode 32
 """
 import argparse
-import dataclasses
 import time
 
 import jax

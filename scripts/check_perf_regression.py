@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Compare a fresh sim_throughput bench CSV against the checked-in baseline.
+
+CI's perf-regression gate. The baseline CSV may have been produced on
+different hardware than the runner executing the gate, so raw points/sec
+ratios confound machine speed with code regressions. The gate therefore
+keys on a machine-invariant signal with an absolute backstop:
+
+  * speedup ratio (primary) — the jax_batched / numpy_event_loop speedup
+    is measured on one machine in one bench run, so hardware speed cancels
+    exactly. The batched JAX simulator is the product hot path (the numpy
+    event loop exists as its spot-check oracle): a real cliff there — an
+    accidentally de-jitted scan, a quadratic blowup in the batching —
+    collapses the speedup no matter which machine runs the bench. Fails
+    when current_speedup / baseline_speedup drops below ``--min-ratio``
+    (default 0.5 — generous, so runner noise doesn't trip it).
+  * absolute points/sec (backstop) — a per-backend order-of-magnitude
+    floor (``--min-abs-ratio``, default 0.1) that catches a uniform
+    collapse hitting both backends equally (which the speedup cancels).
+    No CI runner is 10x slower than a developer machine.
+
+Bit-exactness between the numpy and JAX simulators is the bench's own hard
+guard: ``benchmarks.sim_throughput`` raises before a CSV is ever written,
+failing the CI step upstream of this comparison.
+
+    python scripts/check_perf_regression.py \
+        --baseline /tmp/sim_throughput.baseline.csv \
+        --current results/bench/sim_throughput.csv [--min-ratio 0.5]
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+from pathlib import Path
+
+FAST, SLOW = "jax_batched", "numpy_event_loop"
+
+
+def read_points_per_s(path: Path) -> dict[str, float]:
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    if not rows:
+        raise SystemExit(f"{path}: empty bench CSV")
+    return {r["backend"]: float(r["points_per_s"]) for r in rows}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", type=Path, required=True)
+    ap.add_argument("--current", type=Path, required=True)
+    ap.add_argument("--min-ratio", type=float, default=0.5,
+                    help="fail when the machine-invariant jax/numpy speedup "
+                         "drops below this fraction of the baseline speedup")
+    ap.add_argument("--min-abs-ratio", type=float, default=0.1,
+                    help="fail when a backend's raw points/sec drops below "
+                         "this fraction of baseline (uniform-cliff backstop)")
+    args = ap.parse_args()
+
+    base = read_points_per_s(args.baseline)
+    cur = read_points_per_s(args.current)
+
+    missing = sorted(set(base) - set(cur))
+    if missing:
+        print(f"FAIL: backends missing from current CSV: {missing}")
+        return 1
+    for b in (FAST, SLOW):
+        if b not in base:
+            print(f"FAIL: baseline CSV lacks backend '{b}'")
+            return 1
+
+    failed = False
+    print(f"{'backend':<20}{'baseline':>14}{'current':>14}{'ratio':>8}")
+    for backend in sorted(base):
+        raw = cur[backend] / base[backend]
+        bad = raw < args.min_abs_ratio
+        flag = "  << COLLAPSE" if bad else ""
+        print(f"{backend:<20}{base[backend]:>14.1f}{cur[backend]:>14.1f}"
+              f"{raw:>8.2f}{flag}")
+        failed |= bad
+
+    base_speedup = base[FAST] / base[SLOW]
+    cur_speedup = cur[FAST] / cur[SLOW]
+    srel = cur_speedup / base_speedup
+    print(f"speedup ({FAST}/{SLOW}): baseline {base_speedup:.0f}x, "
+          f"current {cur_speedup:.0f}x, relative {srel:.2f}")
+    if srel < args.min_ratio:
+        print(f"FAIL: machine-invariant speedup fell below "
+              f"{args.min_ratio:.2f}x of baseline")
+        failed = True
+    if failed:
+        return 1
+    print(f"OK: speedup within {args.min_ratio:.2f}x of baseline; all "
+          f"backends above the {args.min_abs_ratio:.2f}x absolute backstop")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

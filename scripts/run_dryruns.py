@@ -16,7 +16,7 @@ from concurrent.futures import ThreadPoolExecutor, as_completed
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
-from repro.configs import ASSIGNED, SHAPES, cell_applicable  # noqa: E402
+from repro.configs import ASSIGNED, SHAPES  # noqa: E402
 
 ROOT = Path(__file__).resolve().parent.parent
 OUT = ROOT / "results" / "dryrun"

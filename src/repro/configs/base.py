@@ -9,7 +9,7 @@ in this package; `registry()` maps --arch ids to configs.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Literal, Optional
 
 AttnKind = Literal["gqa", "mla", "local_global", "none", "rglru_hybrid", "encdec"]

@@ -11,7 +11,6 @@ the multiplicative parameter grids (AL, PC, TL, ...) become uniform.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, NamedTuple
 
 import jax

@@ -46,6 +46,16 @@ Rules per variant (derivation in dataflow.py):
 rounds each plus the measured steady-state per-pass cost; tests assert the
 per-pass cost equals the closed form exactly and totals match within
 fill/drain slack.
+
+Off-chip memory (``mem``, see memory.py): the DRAM port is a sixth explicit
+resource. It streams each round's weight bits in round order, fully
+pipelined and never blocked by the array (a deep-enough prefetch FIFO), so
+round j's weight rewrite gains one extra gate: it cannot start before
+fetch(j) = (j+1) * F, F = ceil(round_weight_bits / BW). BC columns share
+the port, which is why F covers the whole array's bits per round — the
+uniform gate keeps the columns in lockstep, preserving the single-column
+simulation argument. F = 0 (mem=None or infinite BW) is bit-exact with the
+pre-memory event rules.
 """
 from __future__ import annotations
 
@@ -55,6 +65,7 @@ import numpy as np
 
 from .design_space import BROADCAST, OS, SYSTOLIC, WS, DesignPoint
 from .dataflow import t_c as _t_c, t_s as _t_s
+from .memory import MemoryConfig, round_fetch_cycles
 
 
 @dataclass
@@ -64,12 +75,14 @@ class SimResult:
     compute_busy: float  # sum of compute-busy cycles across the BR x BC array
 
 
-def simulate(p: DesignPoint, n_passes: int) -> SimResult:
+def simulate(p: DesignPoint, n_passes: int,
+             mem: MemoryConfig | None = None) -> SimResult:
     BR, BC, LSL = int(p.BR), int(p.BC), int(p.LSL)
     tc, ts = float(_t_c(p)), float(_t_s(p))
     df, ic, ol = int(p.dataflow), int(p.interconnect), bool(int(p.OL))
-    a = _run(BR, LSL, tc, ts, df, ic, ol, n_passes)
-    b = _run(BR, LSL, tc, ts, df, ic, ol, n_passes + 1)
+    F = 0.0 if mem is None else float(round_fetch_cycles(p, mem))
+    a = _run(BR, LSL, tc, ts, df, ic, ol, n_passes, F)
+    b = _run(BR, LSL, tc, ts, df, ic, ol, n_passes + 1, F)
     return SimResult(
         total_cycles=a,
         per_pass_steady=b - a,
@@ -77,7 +90,7 @@ def simulate(p: DesignPoint, n_passes: int) -> SimResult:
     )
 
 
-def _run(BR, LSL, tc, ts, df, ic, ol, n_passes) -> float:
+def _run(BR, LSL, tc, ts, df, ic, ol, n_passes, F=0.0) -> float:
     rounds = n_passes * LSL
     avail = np.zeros(BR)              # macro busy-until
     wready = np.zeros((BR, LSL))      # weight slot ready time (per macro)
@@ -90,7 +103,7 @@ def _run(BR, LSL, tc, ts, df, ic, ol, n_passes) -> float:
             start = max(avail.max(), wready[:, s].max())
             cend = start + tc
             avail[:] = cend
-            t = max(bus_free, cend)
+            t = max(bus_free, cend, (j + 1) * F)
             for r in range(BR):
                 uend = t + ts
                 wready[r, s] = uend
@@ -108,7 +121,7 @@ def _run(BR, LSL, tc, ts, df, ic, ol, n_passes) -> float:
             for r in range(BR):
                 start = max(avail[r], wready[r, s], first[r] if j == 0 else 0.0)
                 cend = start + tc
-                ustart = max(cend, port_free[r])
+                ustart = max(cend, port_free[r], (j + 1) * F)
                 uend = ustart + ts         # rewrite own row (own link segment)
                 port_free[r] = uend
                 wready[r, s] = uend
@@ -117,17 +130,18 @@ def _run(BR, LSL, tc, ts, df, ic, ol, n_passes) -> float:
 
     elif df == OS and ic == BROADCAST:
         # wready indexed by round parity slot: row j's weights broadcast once
-        nxt = ts  # first row's broadcast completes at ts
-        bus_free = ts
+        nxt = F + ts  # first row fetched at F, its broadcast completes at +ts
+        bus_free = nxt
         for j in range(rounds):
             cstart = max(avail.max(), nxt)
             cend = cstart + tc
             avail[:] = cend
+            # the round-j broadcast loads row j+1, fetched at (j+2)*F
             if ol:
-                bstart = max(bus_free, cstart)       # prefetch during compute
+                bstart = max(bus_free, cstart, (j + 2) * F)  # prefetch during compute
                 nxt = bstart + ts
             else:
-                bstart = max(bus_free, cend)         # port busy blocks macros
+                bstart = max(bus_free, cend, (j + 2) * F)    # port busy blocks macros
                 nxt = bstart + ts
                 avail[:] = nxt                        # macros take part in I/O
             bus_free = nxt
@@ -138,14 +152,15 @@ def _run(BR, LSL, tc, ts, df, ic, ol, n_passes) -> float:
             # Dedicated in/out links pipeline one weight row per T_s hop;
             # transfers hide under compute. arrive(j, r) = when row j is
             # fully written into macro r.
-            arrive_prev = np.array([(r + 1) * ts for r in range(BR)])  # row 0
+            arrive_prev = np.array([F + (r + 1) * ts for r in range(BR)])  # row 0
             cend_prev = np.zeros(BR)
             for j in range(rounds):
                 if j == 0:
                     arrive = arrive_prev
                 else:
                     arrive = np.zeros(BR)
-                    up = arrive_prev[0] + ts  # buffer pushes next row
+                    # buffer pushes next row once its bits are fetched
+                    up = max(arrive_prev[0], (j + 1) * F) + ts
                     for r in range(BR):
                         # link (r-1 -> r) free after it moved row j-1
                         arrive[r] = max(up, arrive_prev[r] + ts)
@@ -164,7 +179,7 @@ def _run(BR, LSL, tc, ts, df, ic, ol, n_passes) -> float:
             for j in range(rounds):
                 for r in range(BR):
                     src_free = buf_free if r == 0 else free[r - 1]
-                    src_have = 0.0 if r == 0 else have[r - 1]
+                    src_have = (j + 1) * F if r == 0 else have[r - 1]
                     xs = max(src_have, src_free, free[r])
                     xe = xs + ts
                     if r == 0:

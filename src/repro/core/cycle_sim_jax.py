@@ -41,10 +41,22 @@ access into a static index — no gather/scatter in any hot loop. Batch and
 round counts are bucketed to powers of two so repeated calls with nearby
 populations reuse the jit cache.
 
-All quantities are integer-valued floats (T_c, T_s are integers and every
-event time is a sum of them), so float32 arithmetic is exact as long as
-end times stay below 2**24 cycles — true for the grids in design_space and
-the pass counts used by tests and sweeps.
+Off-chip memory (``mem``, see memory.py): the DRAM port gate of the numpy
+simulator — round j's weight rewrite waits for fetch(j) = (j+1) * F, with
+F = ceil(round_weight_bits / BW) — vectorizes exactly. In the WS and
+OS-Broadcast runners the gate is one extra jnp.maximum against the affine
+term (j+1)*F. The OS-Systolic lane recurrences stay closed-form: the gated
+max-plus lattices add one affine forcing family whose maximum over entry
+rounds is attained at an endpoint (the forcing is affine in the entry
+round), so each lane formula gains a two-term max — derivations in the
+runner docstrings. F = 0 reproduces the ungated values bit-exactly.
+
+All quantities are integer-valued floats (T_c, T_s and the per-round fetch
+F are integers and every event time is a sum of them), so float32
+arithmetic is exact as long as end times stay below 2**24 cycles — true
+for the grids in design_space and the pass counts used by tests and
+sweeps (the bandwidth-bound fidelity sweep pins BC=1 to keep F, and with
+it the gated end times, inside that headroom).
 """
 from __future__ import annotations
 
@@ -53,8 +65,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cycle_sim import SimResult
-from .dataflow import t_c as _t_c, t_s as _t_s
+from .dataflow import round_cycles as _round_cycles, t_c as _t_c, t_s as _t_s
 from .design_space import BROADCAST, OS, SYSTOLIC, WS, DesignPoint
+from .memory import MemoryConfig, round_fetch_cycles
 
 _NEG = -1.0e30  # -inf stand-in that survives float32 arithmetic
 
@@ -88,18 +101,20 @@ def _snapshot(j, end, ra, rb, end_a, end_b):
 _CHUNK = 16  # unrolled rounds per scan step in the OS runners
 
 
-def _ws_broadcast(tc, ts, BR, ol, pa, pb, LSL, P):
+def _ws_broadcast(tc, ts, BR, ol, F, pa, pb, LSL, P):
     """LSL static; scan over P block passes. pa/pb = per-point pass counts
-    to snapshot (n_passes and n_passes+1)."""
+    to snapshot (n_passes and n_passes+1). F = per-round DRAM fetch cycles
+    gating each round's bus wave (0 disables the gate)."""
     n = tc.shape[0]
 
     def step(carry, pss):
         amax, wmax, bus_free, end, end_a, end_b = carry
         wmax = list(wmax)  # per-slot readiness: a tuple of (n,) arrays, so
         for s in range(LSL):  # static slot access never copies a buffer
+            fetch = (pss * LSL + (s + 1)).astype(jnp.float32) * F
             start = jnp.maximum(amax, wmax[s])
             cend = start + tc
-            t0 = jnp.maximum(bus_free, cend)
+            t0 = jnp.maximum(jnp.maximum(bus_free, cend), fetch)
             busf = t0 + BR * ts
             wmax[s] = busf
             bus_free = busf
@@ -116,24 +131,26 @@ def _ws_broadcast(tc, ts, BR, ol, pa, pb, LSL, P):
     return end_a, end_b
 
 
-def _ws_systolic(tc, ts, r, ol, pa, pb, LSL, P):
+def _ws_systolic(tc, ts, r, ol, F, pa, pb, LSL, P):
     """One lane per point, simulating the *last* array row. WS-Systolic rows
     never interact — each macro has its own weight port and link segment —
     and all rows run the identical monotone recurrence from states ordered
-    by the activation stagger r*T_s, so row BR-1 (``r`` = BR-1) finishes
-    last and its lane is exactly the array's end time. Update ends are
-    monotone over rounds, so the snapshot value is the lane's running max."""
+    by the activation stagger r*T_s (the round-granular fetch gate (j+1)*F
+    is shared by every row), so row BR-1 (``r`` = BR-1) finishes last and
+    its lane is exactly the array's end time. Update ends are monotone over
+    rounds, so the snapshot value is the lane's running max."""
     n = tc.shape[0]
 
     def step(carry, pss):
         avail, wready, port, end_a, end_b = carry
         wready = list(wready)  # per-slot readiness: tuple of (n,) arrays, so
         for s in range(LSL):   # static slot access never copies a buffer
+            fetch = (pss * LSL + (s + 1)).astype(jnp.float32) * F
             start = jnp.maximum(avail, wready[s])
             if s == 0:  # activation stagger only exists on the very first round
                 start = jnp.maximum(start, jnp.where(pss == 0, r * ts, 0.0))
             cend = start + tc
-            uend = jnp.maximum(cend, port) + ts
+            uend = jnp.maximum(jnp.maximum(cend, port), fetch) + ts
             wready[s] = uend
             port = uend
             avail = jnp.where(ol, cend, uend)
@@ -148,17 +165,20 @@ def _ws_systolic(tc, ts, r, ol, pa, pb, LSL, P):
     return end_a, end_b
 
 
-def _os_broadcast(tc, ts, BR, ol, ra, rb, C):
-    """Scan over C chunks of _CHUNK rounds; ra/rb = per-point round targets."""
+def _os_broadcast(tc, ts, BR, ol, F, ra, rb, C):
+    """Scan over C chunks of _CHUNK rounds; ra/rb = per-point round targets.
+    The round-j broadcast loads row j+1, whose bits arrive at (j+2)*F."""
     n = tc.shape[0]
 
     def step(carry, c):
         avail, nxt, end, end_a, end_b = carry
         for u in range(_CHUNK):
             j = c * _CHUNK + u
+            fetch = (c * _CHUNK + (u + 2)).astype(jnp.float32) * F
             cstart = jnp.maximum(avail, nxt)
             cend = cstart + tc
-            bstart = jnp.maximum(nxt, jnp.where(ol, cstart, cend))
+            bstart = jnp.maximum(jnp.maximum(nxt, jnp.where(ol, cstart, cend)),
+                                 fetch)
             nxt = bstart + ts
             avail = jnp.where(ol, cend, nxt)
             end = jnp.maximum(end, jnp.maximum(cend, nxt))
@@ -166,19 +186,24 @@ def _os_broadcast(tc, ts, BR, ol, ra, rb, C):
         return (avail, nxt, end, end_a, end_b), None
 
     z = jnp.zeros((n,), jnp.float32)
-    init = (z, ts, z, z, z)  # first broadcast completes at ts; bus_free == nxt
+    init = (z, F + ts, z, z, z)  # row 0 fetched at F, broadcast done at +ts
     (_, _, _, end_a, end_b), _ = jax.lax.scan(
         step, init, jnp.arange(C, dtype=jnp.int32))
     return end_a, end_b
 
 
-def _os_systolic_ol(tc, ts, r, ra, rb, C):
+def _os_systolic_ol(tc, ts, r, F, ra, rb, C):
     """One lane per point, simulating the last array row (``r`` = BR-1).
-    The weight-hop chain never waits on compute in OL mode, and with the
-    uniform per-hop cost T_s the pipelined-link recurrence
+    The weight-hop chain never waits on compute in OL mode. With the
+    uniform per-hop cost T_s and the fetch gate at the chain entrance
+    (row j enters link 0 no earlier than fetch(j) = (j+1)*F), the
+    pipelined-link recurrence
         arrive[j, r] = max(arrive[j, r-1], arrive[j-1, r]) + T_s
-    has the exact solution arrive[j, r] = (j + r + 1) * T_s (every lattice
-    path from the round-0 boundary has the same weight). That decouples the
+    is a max-plus lattice whose value is the maximum over entry rounds i of
+        fetch(i) + (j - i + r + 1) * T_s
+    — affine in i, so the max sits at an endpoint (i = j or i = 0):
+        arrive[j, r] = max((j+1)*F + (r+1)*T_s, F + (j+r+1)*T_s)
+    (F = 0 recovers the ungated (j+r+1)*T_s exactly). That decouples the
     rows, leaving the elementwise event recurrence this scan executes:
         cend[j] = max(cend[j-1], arrive[j, r]) + T_c.
     cend is monotone in r and over rounds, so the last row's lane is the
@@ -189,7 +214,9 @@ def _os_systolic_ol(tc, ts, r, ra, rb, C):
         cend, end_a, end_b = carry
         for u in range(_CHUNK):
             j = c * _CHUNK + u
-            arrive = (jnp.float32(j) + r + 1.0) * ts
+            jf = jnp.float32(j)
+            arrive = jnp.maximum((jf + 1.0) * F + (r + 1.0) * ts,
+                                 F + (jf + r + 1.0) * ts)
             cend = jnp.maximum(cend, arrive) + tc
             end_a, end_b = _snapshot(j, cend, ra, rb, end_a, end_b)
         return (cend, end_a, end_b), None
@@ -200,7 +227,7 @@ def _os_systolic_ol(tc, ts, r, ra, rb, C):
     return end_a, end_b
 
 
-def _os_systolic_nol(tc, ts, r, ra, rb, C):
+def _os_systolic_nol(tc, ts, r, F, ra, rb, C):
     """One lane per point, simulating the last array row (``r`` = BR-1).
     Without overlap a macro serializes receive (T_s), compute (T_c), and
     serving its downstream neighbor's receive (T_s):
@@ -210,45 +237,60 @@ def _os_systolic_nol(tc, ts, r, ra, rb, C):
     maximal lattice path ties, giving the exact per-row event recurrence
         xe[j] = xe[j-1] + T_c + 2*T_s   (BR >= 2 — the paper's round cost)
         xe[j] = xe[j-1] + T_c + T_s     (BR == 1: no downstream hop)
-    from xe[0] = r*(T_c+T_s) + T_s. xe is monotone in r and over rounds, so
-    the last row's lane is the array end and the snapshot is the lane max."""
+    from xe[0] = r*(T_c+T_s) + T_s.
+
+    The fetch gate enters the lattice at row 0 (round j's receive waits for
+    fetch(j) = (j+1)*F). A maximal path entering at round i picks up
+    fetch(i), r horizontal hops (T_c+T_s each), and j-i of the most
+    expensive round-advancing moves (the diagonal-then-horizontal zigzag at
+    T_c+2*T_s for BR >= 2, the direct T_c+T_s for BR == 1 — exactly the
+    ungated periods). Affine in i, so the max over entries is at i = j or
+    i = 0:
+        xe[j] = max((j+1)*F, F + j*period) + T_s + r*(T_c+T_s)
+    (F = 0 recovers xe[0] + j*period exactly). xe is monotone in r and over
+    rounds, so the last row's lane is the array end and the snapshot is the
+    lane max."""
     n = tc.shape[0]
-    xe0 = r * (tc + ts) + ts
+    base = r * (tc + ts) + ts
     # r == 0 here means BR == 1: a single row has no downstream neighbor to
     # serve, so the forward hop disappears from the round.
     period = jnp.where(r == 0.0, tc + ts, tc + 2.0 * ts)
 
     def step(carry, c):
-        xe, end_a, end_b = carry
+        end_a, end_b = carry
         for u in range(_CHUNK):
             j = c * _CHUNK + u
-            xe = jnp.where(j == 0, xe0, xe + period)
+            jf = jnp.float32(j)
+            xe = jnp.maximum((jf + 1.0) * F, F + jf * period) + base
             end_a, end_b = _snapshot(j, xe + tc, ra, rb, end_a, end_b)
-        return (xe, end_a, end_b), None
+        return (end_a, end_b), None
 
     z = jnp.zeros((n,), jnp.float32)
-    (_, end_a, end_b), _ = jax.lax.scan(
-        step, init=(z, z, z), xs=jnp.arange(C, dtype=jnp.int32))
+    (end_a, end_b), _ = jax.lax.scan(
+        step, init=(z, z), xs=jnp.arange(C, dtype=jnp.int32))
     return end_a, end_b
 
 
 _JIT_RUNNERS = {
-    "ws_b": jax.jit(_ws_broadcast, static_argnums=(6, 7)),
-    "ws_s": jax.jit(_ws_systolic, static_argnums=(6, 7)),
-    "os_b": jax.jit(_os_broadcast, static_argnums=(6,)),
-    "os_s_ol": jax.jit(_os_systolic_ol, static_argnums=(5,)),
-    "os_s_nol": jax.jit(_os_systolic_nol, static_argnums=(5,)),
+    "ws_b": jax.jit(_ws_broadcast, static_argnums=(7, 8)),
+    "ws_s": jax.jit(_ws_systolic, static_argnums=(7, 8)),
+    "os_b": jax.jit(_os_broadcast, static_argnums=(7,)),
+    "os_s_ol": jax.jit(_os_systolic_ol, static_argnums=(6,)),
+    "os_s_nol": jax.jit(_os_systolic_nol, static_argnums=(6,)),
 }
 
 
-def simulate_batched(p: DesignPoint, n_passes) -> SimResult:
+def simulate_batched(p: DesignPoint, n_passes,
+                     mem: MemoryConfig | None = None) -> SimResult:
     """Simulate a batch of design points in one (or a few) jitted dispatches.
 
     ``p`` follows the ``evaluate_population`` convention: every field is a
     scalar or an (n,)-shaped array. ``n_passes`` may be a python int or a
     per-point integer array (rounds simulated = n_passes * LSL per point,
-    as in ``cycle_sim.simulate``). Returns a ``SimResult`` whose fields are
-    arrays of the batch shape (scalars for an unbatched point).
+    as in ``cycle_sim.simulate``). ``mem`` enables the DRAM fetch gate with
+    the same per-round fetch cycles the numpy simulator uses. Returns a
+    ``SimResult`` whose fields are arrays of the batch shape (scalars for
+    an unbatched point).
 
     Only the scans for the dataflow variants actually present in the batch
     are dispatched, so populations pinned to one dataflow (the
@@ -267,6 +309,10 @@ def simulate_batched(p: DesignPoint, n_passes) -> SimResult:
 
     tc_all = np.asarray(_t_c(flat), dtype=np.float32)
     ts_all = np.asarray(_t_s(flat), dtype=np.float32)
+    if mem is None:
+        F_all = np.zeros((n,), dtype=np.float32)
+    else:
+        F_all = np.asarray(round_fetch_cycles(flat, mem), dtype=np.float32)
     ol_all = np.asarray(flat.OL) > 0.5
 
     df = np.asarray(flat.dataflow).astype(np.int64)
@@ -297,6 +343,7 @@ def simulate_batched(p: DesignPoint, n_passes) -> SimResult:
         tc = jnp.asarray(tc_all[pad])
         ts = jnp.asarray(ts_all[pad])
         olb = jnp.asarray(ol_all[pad])
+        Fb = jnp.asarray(F_all[pad])
         # the systolic runners simulate the last array row's lane (r = BR-1);
         # see their docstrings for why that lane is exactly the array end
         rlast = jnp.asarray((BR[pad] - 1).astype(np.float32))
@@ -307,10 +354,11 @@ def simulate_batched(p: DesignPoint, n_passes) -> SimResult:
             pb = pa + 1
             if key == "ws_b":
                 BRf = jnp.asarray(BR[pad], jnp.float32)
-                ea, eb = _JIT_RUNNERS["ws_b"](tc, ts, BRf, olb, pa, pb, lsl, P)
+                ea, eb = _JIT_RUNNERS["ws_b"](
+                    tc, ts, BRf, olb, Fb, pa, pb, lsl, P)
             else:
                 ea, eb = _JIT_RUNNERS["ws_s"](
-                    tc, ts, rlast, olb, pa, pb, lsl, P)
+                    tc, ts, rlast, olb, Fb, pa, pb, lsl, P)
         else:
             C = _bucket(-(-int(rb[pad].max()) // _CHUNK))
             # snapshots compare against the int32 round counter
@@ -318,11 +366,13 @@ def simulate_batched(p: DesignPoint, n_passes) -> SimResult:
             rbi = jnp.asarray(rb[pad], jnp.int32)
             if key == "os_b":
                 BRf = jnp.asarray(BR[pad], jnp.float32)
-                ea, eb = _JIT_RUNNERS["os_b"](tc, ts, BRf, olb, rai, rbi, C)
+                ea, eb = _JIT_RUNNERS["os_b"](
+                    tc, ts, BRf, olb, Fb, rai, rbi, C)
             elif key == "os_s_ol":
-                ea, eb = _JIT_RUNNERS["os_s_ol"](tc, ts, rlast, rai, rbi, C)
+                ea, eb = _JIT_RUNNERS["os_s_ol"](tc, ts, rlast, Fb, rai, rbi, C)
             else:
-                ea, eb = _JIT_RUNNERS["os_s_nol"](tc, ts, rlast, rai, rbi, C)
+                ea, eb = _JIT_RUNNERS["os_s_nol"](
+                    tc, ts, rlast, Fb, rai, rbi, C)
         end_a[idx] = np.asarray(ea)[: len(idx)]
         end_b[idx] = np.asarray(eb)[: len(idx)]
 
@@ -342,11 +392,12 @@ def simulate_batched(p: DesignPoint, n_passes) -> SimResult:
     )
 
 
-def simulate(p: DesignPoint, n_passes: int) -> SimResult:
+def simulate(p: DesignPoint, n_passes: int,
+             mem: MemoryConfig | None = None) -> SimResult:
     """Scalar-point convenience wrapper returning python floats, API-matched
     to ``cycle_sim.simulate`` (the numpy reference this module is tested
     against)."""
-    r = simulate_batched(p, n_passes)
+    r = simulate_batched(p, n_passes, mem=mem)
     return SimResult(
         total_cycles=float(r.total_cycles),
         per_pass_steady=float(r.per_pass_steady),
@@ -354,15 +405,21 @@ def simulate(p: DesignPoint, n_passes: int) -> SimResult:
     )
 
 
-def steady_state_passes(p: DesignPoint, min_passes: int = 3) -> np.ndarray:
+def steady_state_passes(p: DesignPoint, min_passes: int = 3,
+                        mem: MemoryConfig | None = None) -> np.ndarray:
     """Per-point block-pass counts sufficient for ``per_pass_steady`` to
     measure true steady state (scalar or batched, elementwise).
 
     Fill transients last ~BR rounds; the OS-Systolic-OL arrival chain
     additionally stays arrival-dominated for ~BR*T_s/(T_c-T_s) rounds when
-    compute outpaces the hops (capped at 4096 rounds). Shared by
-    ``dse.fidelity_sweep`` and the property tests so the CI gate and the
-    test suite agree on what "reached steady state" means.
+    compute outpaces the hops (capped at 4096 rounds). With a memory model,
+    the fetch gate's affine term (j+1)*F crosses the on-chip event times
+    after ~transient_intercept / |F - round_c| rounds when F and the
+    on-chip round cost are close (all quantities are integers, so the gap
+    is at least 1 when they differ at all); the same 4096-round cap
+    applies. Shared by ``dse.fidelity_sweep`` and the property tests so
+    the CI gate and the test suite agree on what "reached steady state"
+    means.
     """
     BR = np.asarray(p.BR, np.int64)
     LSL = np.asarray(p.LSL, np.int64)
@@ -376,15 +433,25 @@ def steady_state_passes(p: DesignPoint, min_passes: int = 3) -> np.ndarray:
     need = np.where(
         os_s_ol, np.maximum(need, np.minimum(cross, 4096).astype(np.int64) + 2),
         need)
+    if mem is not None:
+        F = np.asarray(round_fetch_cycles(p, mem), np.float64)
+        rc = np.asarray(_round_cycles(p), np.float64)
+        intercept = (BR + LSL + 2) * (tc + 2 * ts) + F
+        gap_m = np.maximum(np.abs(F - rc), 1.0)
+        cross_m = np.where(F > 0, np.ceil(intercept / gap_m), 0.0)
+        need = np.maximum(need, np.minimum(cross_m, 4096).astype(np.int64) + 2)
     return np.maximum(min_passes, -(-need // LSL) + 1)
 
 
-def fill_drain_slack(p: DesignPoint) -> np.ndarray:
-    """Generous bound on fill/drain cycles: (BR + LSL + 2) * (T_c + 2*T_s).
-    End-to-end totals must stay within this of n_passes x the closed-form
-    steady pass cost (scalar or batched, elementwise)."""
+def fill_drain_slack(p: DesignPoint,
+                     mem: MemoryConfig | None = None) -> np.ndarray:
+    """Generous bound on fill/drain cycles: (BR + LSL + 2) * (T_c + 2*T_s),
+    plus the same multiple of the per-round fetch F when a memory model
+    delays the fill. End-to-end totals must stay within this of n_passes x
+    the closed-form steady pass cost (scalar or batched, elementwise)."""
     BR = np.asarray(p.BR, np.float64)
     LSL = np.asarray(p.LSL, np.float64)
     tc = np.asarray(_t_c(p), np.float64)
     ts = np.asarray(_t_s(p), np.float64)
-    return (BR + LSL + 2) * (tc + 2 * ts)
+    F = 0.0 if mem is None else np.asarray(round_fetch_cycles(p, mem), np.float64)
+    return (BR + LSL + 2) * (tc + 2 * ts + F)

@@ -42,6 +42,13 @@ Array organizations (derived from the paper's Section 3.2 prose):
 Fill/drain: systolic staggering adds (BR-1) stagger steps per tile pass and
 PL pipeline-fill cycles per block; both are modeled (and are what the cycle
 simulator checks beyond steady state).
+
+Off-chip memory (``mem`` argument, see ``memory.py``): weight/activation
+streaming stops being free in time. The steady round time becomes
+roofline-style max(compute round, streamed bits per round / DRAM BW); at
+GEMM level that is total = max(rounds * round_c, streamed_bits / BW) + fill.
+``mem=None`` (and the infinite-bandwidth ``memory.IDEAL``) reproduce the
+pre-memory numbers bit-exactly.
 """
 from __future__ import annotations
 
@@ -49,8 +56,9 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from .design_space import (BROADCAST, IBW, KAPPA, OS, SYSTOLIC, WBW, WS,
+from .design_space import (BROADCAST, IBW, KAPPA, SYSTOLIC, WBW, WS,
                            DesignPoint)
+from .memory import MemoryConfig, round_fetch_cycles
 
 
 class Gemm(NamedTuple):
@@ -72,6 +80,10 @@ class DataflowTiming(NamedTuple):
     weight_bits: jnp.ndarray       # weight traffic into the array (bits)
     act_bits: jnp.ndarray          # activation traffic into the array (bits)
     rounds: jnp.ndarray            # number of (row-compute + update) rounds
+    dram_cycles: jnp.ndarray       # cycles to stream all traffic at DRAM BW
+                                   # (0 without a memory model; the design is
+                                   # memory-bound where this exceeds the
+                                   # compute-side round cycles)
 
 
 def t_c(p: DesignPoint) -> jnp.ndarray:
@@ -89,9 +101,12 @@ def block_cycles_macro(p: DesignPoint) -> jnp.ndarray:
     return jnp.where(p.OL > 0.5, p.LSL * jnp.maximum(tc, ts), p.LSL * (tc + ts))
 
 
-def round_cycles(p: DesignPoint) -> jnp.ndarray:
+def round_cycles(p: DesignPoint, mem: MemoryConfig | None = None) -> jnp.ndarray:
     """Steady-state cycles of one (compute one weight row + make its update
-    happen) round, per the 8-variant table above."""
+    happen) round, per the 8-variant table above. With a memory model the
+    DRAM port must also deliver the round's weight bits: the steady round
+    is max(on-chip round, per-round fetch cycles) — the roofline the event
+    simulators reproduce once their fetch gate binds."""
     tc, ts = t_c(p), t_s(p)
     ws_b = jnp.where(p.OL > 0.5, jnp.maximum(tc, p.BR * ts), tc + p.BR * ts)
     ws_s = jnp.where(p.OL > 0.5, jnp.maximum(tc, ts), tc + ts)
@@ -101,14 +116,18 @@ def round_cycles(p: DesignPoint) -> jnp.ndarray:
     os_s = jnp.where(p.OL > 0.5, jnp.maximum(tc, ts), tc + fwd * ts)
     ws = jnp.where(p.interconnect == BROADCAST, ws_b, ws_s)
     os = jnp.where(p.interconnect == BROADCAST, os_b, os_s)
-    return jnp.where(p.dataflow == WS, ws, os)
+    base = jnp.where(p.dataflow == WS, ws, os)
+    if mem is None:
+        return base
+    return jnp.maximum(base, round_fetch_cycles(p, mem))
 
 
-def steady_pass_cycles(p: DesignPoint) -> jnp.ndarray:
+def steady_pass_cycles(p: DesignPoint, mem: MemoryConfig | None = None) -> jnp.ndarray:
     """Closed-form steady-state cost of one block pass (LSL rounds) — the
     quantity the cycle simulators' ``per_pass_steady`` is validated against
-    (see cycle_sim.py for the three-level fidelity chain)."""
-    return p.LSL * round_cycles(p)
+    (see cycle_sim.py for the three-level fidelity chain), in both the
+    infinite-bandwidth and the bandwidth-bound (``mem``) regimes."""
+    return p.LSL * round_cycles(p, mem)
 
 
 # backwards-compatible private alias (pre-fidelity-suite name)
@@ -126,11 +145,18 @@ def array_macs_per_cycle(p: DesignPoint) -> jnp.ndarray:
     return p.BR * p.BC * p.PC * p.AL / (IBW / 2)
 
 
-def gemm_timing(p: DesignPoint, g: Gemm) -> DataflowTiming:
+def gemm_timing(p: DesignPoint, g: Gemm,
+                mem: MemoryConfig | None = None) -> DataflowTiming:
     """End-to-end cycle count of GEMM (M,K,N) on the array described by p.
 
     All tile counts are ceilings — edge-tile waste shows up as utilization
     loss exactly as it would on silicon.
+
+    With ``mem``, the streamed weight + activation traffic must also cross
+    the DRAM port: the steady portion becomes the roofline
+    max(rounds * round_c, streamed_bits / BW) — bandwidth-bound designs
+    report utilization < 1 against the same ideal_cycles floor. The
+    infinite-bandwidth limit is bit-exact with ``mem=None``.
     """
     tc = t_c(p)
     round_c = round_cycles(p)
@@ -142,7 +168,6 @@ def gemm_timing(p: DesignPoint, g: Gemm) -> DataflowTiming:
     ws_nm = jnp.ceil(g.M / p.TL)
     ws_tiles = ws_nk * ws_nn * ws_nm
     ws_rounds = ws_tiles * p.LSL
-    ws_total = ws_rounds * round_c + ws_nk * ws_nn * ws_nm * fill
     # traffic: weights restream per activation block (streaming regime);
     # activations restream per N tile.
     ws_wbits = ws_nm * jnp.minimum(ws_nk * p.BR * p.AL, g.K) * \
@@ -154,7 +179,6 @@ def gemm_timing(p: DesignPoint, g: Gemm) -> DataflowTiming:
     os_nn = jnp.ceil(g.N / (p.BC * p.PC))
     os_kr = jnp.ceil(g.K / p.AL)
     os_rounds = os_nm * os_nn * os_kr
-    os_total = os_rounds * round_c + os_nm * os_nn * fill
     # traffic: weights restream per M tile (column-shared: one copy per col);
     # activations restream per N tile (row-distinct blocks).
     os_wbits = os_nm * jnp.minimum(os_kr * p.AL, g.K) * \
@@ -163,10 +187,19 @@ def gemm_timing(p: DesignPoint, g: Gemm) -> DataflowTiming:
 
     is_ws = p.dataflow == WS
     rounds = jnp.where(is_ws, ws_rounds, os_rounds)
-    total = jnp.where(is_ws, ws_total, os_total) * g.count
+    fill_part = jnp.where(is_ws, ws_tiles, os_nm * os_nn) * fill
+    wbits = jnp.where(is_ws, ws_wbits, os_wbits)
+    abits = jnp.where(is_ws, ws_abits, os_abits)
+
+    steady = rounds * round_c
+    if mem is None:
+        dram = jnp.zeros_like(steady)
+    else:
+        # roofline: the streamed traffic must cross the DRAM port
+        dram = (wbits + abits) / mem.dram_bw_bits_per_cycle
+        steady = jnp.maximum(steady, dram)
+    total = (steady + fill_part) * g.count
     compute = rounds * tc * g.count
-    wbits = jnp.where(is_ws, ws_wbits, os_wbits) * g.count
-    abits = jnp.where(is_ws, ws_abits, os_abits) * g.count
 
     ideal = g.macs / array_macs_per_cycle(p)
     return DataflowTiming(
@@ -174,15 +207,17 @@ def gemm_timing(p: DesignPoint, g: Gemm) -> DataflowTiming:
         ideal_cycles=ideal,
         utilization=ideal / jnp.maximum(total, 1.0),
         compute_cycles=compute,
-        weight_bits=wbits,
-        act_bits=abits,
+        weight_bits=wbits * g.count,
+        act_bits=abits * g.count,
         rounds=rounds * g.count,
+        dram_cycles=dram * g.count,
     )
 
 
-def workload_timing(p: DesignPoint, gemms: list[Gemm]) -> DataflowTiming:
+def workload_timing(p: DesignPoint, gemms: list[Gemm],
+                    mem: MemoryConfig | None = None) -> DataflowTiming:
     """Sum a list of GEMMs (a model's layer workload) on one design point."""
-    parts = [gemm_timing(p, g) for g in gemms]
+    parts = [gemm_timing(p, g, mem) for g in gemms]
     tot = sum(t.total_cycles for t in parts)
     ideal = sum(t.ideal_cycles for t in parts)
     return DataflowTiming(
@@ -193,6 +228,7 @@ def workload_timing(p: DesignPoint, gemms: list[Gemm]) -> DataflowTiming:
         weight_bits=sum(t.weight_bits for t in parts),
         act_bits=sum(t.act_bits for t in parts),
         rounds=sum(t.rounds for t in parts),
+        dram_cycles=sum(t.dram_cycles for t in parts),
     )
 
 

@@ -89,7 +89,7 @@ def point_rows(p: DesignPoint) -> list[DesignPoint]:
 # Validity
 # ----------------------------------------------------------------------------
 
-def is_valid(p: DesignPoint) -> jnp.ndarray:
+def is_valid(p: DesignPoint, mem=None) -> jnp.ndarray:
     """Structural validity of a design point (vectorized, differentiable-safe).
 
     Rules:
@@ -97,7 +97,10 @@ def is_valid(p: DesignPoint) -> jnp.ndarray:
       * macro compute capacity bounded by the macro compiler's 4-TOPS-class
         limit (paper §4.3: PC*AL*WBW <= 512K bitwise multipliers per macro
         is the compiler max, i.e. PC*AL <= 65536);
-      * LSL >= 2 (ping-pong weight row needed by the streaming schedule).
+      * LSL >= 2 (ping-pong weight row needed by the streaming schedule);
+      * with a memory model (``mem``): one array tile's resident weight /
+        activation working set must fit the global staging buffers
+        (``memory.fits_buffers``) — below that no legal tiling exists.
     """
     ok = jnp.ones(jnp.shape(p.AL), dtype=bool)
     ok &= (p.AL >= min(AL_CHOICES)) & (p.AL <= max(AL_CHOICES))
@@ -107,6 +110,10 @@ def is_valid(p: DesignPoint) -> jnp.ndarray:
     ok &= (p.BR >= 1) & (p.BR <= 64) & (p.BC >= 1) & (p.BC <= 64)
     ok &= (p.TL >= min(TL_CHOICES)) & (p.TL <= max(TL_CHOICES))
     ok &= p.PC * p.AL <= 65536
+    if mem is not None:
+        from .memory import fits_buffers  # local import: memory imports this module
+
+        ok &= fits_buffers(p, mem)
     return ok
 
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Callable, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,8 @@ from . import bayesopt, cycle_sim_jax, design_space as ds
 from .dataflow import Gemm, steady_pass_cycles
 from .design_space import DesignPoint
 from .mapper import constrained_objective, evaluate_model
-from .pareto import pareto_front, pareto_mask
+from .memory import MemoryConfig
+from .pareto import pareto_front
 from .ppa import evaluate_peak, evaluate_workload
 
 
@@ -45,15 +46,16 @@ ALL_DATAFLOWS = [
 ]
 
 
-def evaluate_population(pop: DesignPoint, gemms: Sequence[Gemm] | None):
+def evaluate_population(pop: DesignPoint, gemms: Sequence[Gemm] | None,
+                        mem: MemoryConfig | None = None):
     """Jitted closed-form evaluation of a whole population.
 
     gemms=None -> peak-throughput mode (paper §4.1 'absence of a specific
-    application')."""
+    application'). ``mem`` enables the off-chip bandwidth/energy model."""
     if gemms is None:
         fn = jax.jit(evaluate_peak)
         return fn(pop)
-    fn = jax.jit(partial(evaluate_workload, gemms=list(gemms)))
+    fn = jax.jit(partial(evaluate_workload, gemms=list(gemms), mem=mem))
     return fn(pop)
 
 
@@ -63,17 +65,21 @@ def dataflow_pareto_sweep(
     n_samples: int = 8192,
     objectives: tuple[str, str] = ("latency_s", "area_mm2"),
     dataflows: Sequence[DataflowName] = tuple(ALL_DATAFLOWS),
+    mem: MemoryConfig | None = None,
 ):
     """Fig. 8 machinery: per-dataflow random-population Pareto fronts over
-    (performance, area) and (performance, power)."""
+    (performance, area) and (performance, power) — optionally under a
+    finite off-chip memory model (``mem``), which opens the memory-bound
+    half of the space: bandwidth-starved points pick up latency and
+    capacity-starved points drop out of the valid set."""
     out = {}
     for dfn in dataflows:
         key, k = jax.random.split(key)
         pop = ds.sample_random(
             k, n_samples, dataflow=dfn.dataflow, interconnect=dfn.interconnect, OL=dfn.ol
         )
-        valid = np.asarray(ds.is_valid(pop))
-        ppa = evaluate_population(pop, gemms)
+        valid = np.asarray(ds.is_valid(pop, mem))
+        ppa = evaluate_population(pop, gemms, mem)
         objs = np.stack(
             [np.asarray(getattr(ppa, o)) for o in objectives], axis=-1
         )
@@ -89,6 +95,8 @@ def fidelity_sweep(
     n_samples: int = 512,
     min_passes: int = 3,
     dataflows: Sequence[DataflowName] = tuple(ALL_DATAFLOWS),
+    mem: MemoryConfig | None = None,
+    fixed: dict | None = None,
 ):
     """Population-scale cross-validation of the closed forms against the
     batched cycle simulator — the systematic sim-vs-model check the paper's
@@ -108,6 +116,14 @@ def fidelity_sweep(
     utilization of the valid population on that workload, tying the sweep to
     the DSE objective the closed forms feed.
 
+    ``mem`` runs the whole sweep in the bandwidth-bound regime: both
+    simulators gain the DRAM fetch gate, the closed form becomes the
+    roofline LSL * max(round_c, fetch), and the same drift budget applies —
+    the PR 1 sim-vs-model contract extended to the memory-bound half of
+    the space. ``fixed`` pins extra sampling axes (the CI gate pins BC=1 so
+    gated event times stay inside the float32-exact headroom; see
+    cycle_sim_jax's module docstring).
+
     Returns {variant label: {n, max_rel_err, mean_rel_err,
     frac_within_slack[, mean_util]}}.
     """
@@ -116,19 +132,20 @@ def fidelity_sweep(
         key, k = jax.random.split(key)
         pop = ds.sample_random(
             k, n_samples, dataflow=dfn.dataflow, interconnect=dfn.interconnect,
-            OL=dfn.ol,
+            OL=dfn.ol, **(fixed or {}),
         )
-        valid = np.asarray(ds.is_valid(pop))
+        valid = np.asarray(ds.is_valid(pop, mem))
         popv = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[valid]), pop)
 
         # per-point pass counts that reach steady state (see the helper)
-        passes = cycle_sim_jax.steady_state_passes(popv, min_passes=min_passes)
-        sim = cycle_sim_jax.simulate_batched(popv, passes)
-        closed = np.asarray(steady_pass_cycles(popv), np.float64)
+        passes = cycle_sim_jax.steady_state_passes(
+            popv, min_passes=min_passes, mem=mem)
+        sim = cycle_sim_jax.simulate_batched(popv, passes, mem=mem)
+        closed = np.asarray(steady_pass_cycles(popv, mem), np.float64)
         pps = np.asarray(sim.per_pass_steady, np.float64)
         rel = np.abs(pps - closed) / np.maximum(closed, 1.0)
 
-        slack = cycle_sim_jax.fill_drain_slack(popv)
+        slack = cycle_sim_jax.fill_drain_slack(popv, mem=mem)
         total = np.asarray(sim.total_cycles, np.float64)
         within = np.abs(total - passes * closed) <= slack
 
@@ -139,7 +156,7 @@ def fidelity_sweep(
             frac_within_slack=float(within.mean()) if rel.size else 1.0,
         )
         if gemms is not None:
-            ppa = evaluate_population(popv, gemms)
+            ppa = evaluate_population(popv, gemms, mem)
             rep["mean_util"] = float(np.asarray(ppa.utilization).mean())
         out[dfn.label] = rep
     return out
@@ -155,13 +172,15 @@ def optimize_for_model(
     mode: str = "prefill",
     method: str = "bayes",
     fixed: dict | None = None,
+    mem: MemoryConfig | None = None,
     **search_kw,
 ):
     """Table 3 machinery: find the best (dataflow, macro, array, TL) for an
-    LLM inference task under the compute-capacity cap."""
+    LLM inference task under the compute-capacity cap (and, with ``mem``,
+    under finite DRAM bandwidth + buffer capacity)."""
     obj = partial(
         constrained_objective, cfg=cfg, n_cores=n_cores, batch=batch, seq=seq,
-        peak_tops_cap=peak_tops_cap, mode=mode,
+        peak_tops_cap=peak_tops_cap, mode=mode, mem=mem,
     )
     if method == "bayes":
         # hybrid: broad jitted random screen seeds/backstops the GP-EI loop
@@ -174,14 +193,25 @@ def optimize_for_model(
     else:
         best, val, x, y = bayesopt.random_minimize(key, obj, fixed=fixed, **search_kw)
     best = jax.tree.map(lambda v: jnp.reshape(jnp.asarray(v), ()), best)
-    qor = evaluate_model(best, cfg, n_cores=n_cores, batch=batch, seq=seq, mode=mode)
+    qor = evaluate_model(best, cfg, n_cores=n_cores, batch=batch, seq=seq,
+                         mode=mode, mem=mem)
     return best, qor, (x, y)
+
+
+#: Off-chip model for the bandwidth-bound CI fidelity gate: 1024 bits/cycle
+#: is squarely inside the DRAM-bound regime for most of the design grid
+#: (WS points must fetch BR rows/round), so the gate actually exercises the
+#: gated event paths. Populations pin BC=1 so gated event times keep the
+#: float32-exact headroom (see cycle_sim_jax's module docstring).
+SMOKE_MEM = MemoryConfig(dram_bw_bits_per_cycle=1024.0, e_dram_bit=4e-12)
 
 
 def _fidelity_main(argv=None):  # pragma: no cover - exercised by CI smoke run
     """CLI gate: ``python -m repro.core [--smoke]`` runs the fidelity
-    sweep and fails (exit 1) when simulator-vs-closed-form drift exceeds the
-    per-variant error budget — CI's defense against either side rotting."""
+    sweep — once in the paper's infinite-bandwidth regime and once
+    bandwidth-bound under ``SMOKE_MEM`` — and fails (exit 1) when
+    simulator-vs-closed-form drift exceeds the per-variant error budget in
+    either regime — CI's defense against any side rotting."""
     import argparse
 
     ap = argparse.ArgumentParser(description=fidelity_sweep.__doc__)
@@ -192,28 +222,42 @@ def _fidelity_main(argv=None):  # pragma: no cover - exercised by CI smoke run
     ap.add_argument("--budget", type=float, default=1e-4,
                     help="max allowed per-variant max relative error of the "
                          "steady per-pass cost (float32 rounding headroom)")
+    ap.add_argument("--dram-bw", type=float,
+                    default=float(SMOKE_MEM.dram_bw_bits_per_cycle),
+                    help="bits/cycle for the bandwidth-bound sweep "
+                         "(0 skips it)")
     args = ap.parse_args(argv)
 
     n = 64 if args.smoke else args.samples
-    rep = fidelity_sweep(jax.random.key(args.seed), n_samples=n)
-    worst = 0.0
-    print("variant,n,max_rel_err,mean_rel_err,frac_within_slack")
-    for label, r in rep.items():
-        print(f"{label},{r['n']},{r['max_rel_err']:.3e},"
-              f"{r['mean_rel_err']:.3e},{r['frac_within_slack']:.3f}")
-        worst = max(worst, r["max_rel_err"])
-        if r["n"] == 0:
-            # an empty valid population means the variant was not actually
-            # validated — a vacuous pass must not keep CI green
-            print(f"FAIL: {label} sampled no valid points")
+    regimes = [("ideal", None, None)]
+    if args.dram_bw > 0:
+        mem = SMOKE_MEM._replace(dram_bw_bits_per_cycle=args.dram_bw)
+        regimes.append(("dram-bound", mem, dict(BC=1)))
+
+    print("regime,variant,n,max_rel_err,mean_rel_err,frac_within_slack")
+    for regime, mem, fixed in regimes:
+        rep = fidelity_sweep(jax.random.key(args.seed), n_samples=n,
+                             mem=mem, fixed=fixed)
+        worst = 0.0
+        for label, r in rep.items():
+            print(f"{regime},{label},{r['n']},{r['max_rel_err']:.3e},"
+                  f"{r['mean_rel_err']:.3e},{r['frac_within_slack']:.3f}")
+            worst = max(worst, r["max_rel_err"])
+            if r["n"] == 0:
+                # an empty valid population means the variant was not actually
+                # validated — a vacuous pass must not keep CI green
+                print(f"FAIL: [{regime}] {label} sampled no valid points")
+                return 1
+            if r["frac_within_slack"] < 1.0:
+                print(f"FAIL: [{regime}] {label} has points outside "
+                      f"fill/drain slack")
+                return 1
+        if worst > args.budget:
+            print(f"FAIL: [{regime}] max_rel_err {worst:.3e} exceeds budget "
+                  f"{args.budget:.1e}")
             return 1
-        if r["frac_within_slack"] < 1.0:
-            print(f"FAIL: {label} has points outside fill/drain slack")
-            return 1
-    if worst > args.budget:
-        print(f"FAIL: max_rel_err {worst:.3e} exceeds budget {args.budget:.1e}")
-        return 1
-    print(f"OK: worst max_rel_err {worst:.3e} within budget {args.budget:.1e}")
+        print(f"OK: [{regime}] worst max_rel_err {worst:.3e} within budget "
+              f"{args.budget:.1e}")
     return 0
 
 

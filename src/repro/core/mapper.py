@@ -5,16 +5,23 @@ split the token dimension (M) of every GEMM evenly (data-parallel prefill),
 each core runs the same dataflow design, and the engine's latency is the
 per-core latency. Power and area scale by core count; the scalarized QoR is
 latency^2 * power * area (per core, as Table 3 reports per-core power/area).
+
+With a memory model (``mem``, see memory.py), GEMMs are additionally tiled
+so each tile's weight working set fits the global weight buffer
+(``tile_gemms_for_memory``), and the evaluation charges DRAM bandwidth and
+access energy.
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from .dataflow import Gemm
-from .design_space import DesignPoint
+from .design_space import WBW, DesignPoint
+from .memory import MemoryConfig
 from .ppa import ArrayPPA, evaluate_workload, qor_objective
 from .workload import dedupe_gemms, model_gemms
 
@@ -33,6 +40,37 @@ def split_gemms_across_cores(gemms: list[Gemm], n_cores: int) -> list[Gemm]:
     return [Gemm(max(g.M / n_cores, 1.0), g.K, g.N, g.count) for g in gemms]
 
 
+def tile_gemm_for_memory(g: Gemm, mem: MemoryConfig) -> Gemm:
+    """Capacity-aware tiling: split a GEMM along N (and K if a single
+    output column's weight stripe still overflows) until each tile's
+    weight working set K_i * N_j * WBW fits the global weight buffer.
+
+    N splits first — they are free of partial-sum recombination; K splits
+    are the last resort (the recombination adds are charged to the array's
+    existing accumulate path, not modeled separately). Splits are exact
+    fractions so total MACs are conserved identically:
+    M * (K/nk) * (N/nn) * (count*nk*nn) == M*K*N*count.
+    Returns the (possibly identical) tiled GEMM.
+    """
+    cap = float(mem.weight_buf_bits)
+    wbits = g.K * g.N * WBW
+    if not math.isfinite(cap) or wbits <= cap:
+        return g
+    nn = math.ceil(wbits / cap)
+    if nn <= g.N:
+        return Gemm(g.M, g.K, g.N / nn, g.count * nn)
+    # even single columns overflow: one column per tile, split K too
+    nn = max(int(g.N), 1)
+    nk = max(math.ceil(g.K * WBW / cap), 1)
+    return Gemm(g.M, g.K / nk, g.N / nn, g.count * nn * nk)
+
+
+def tile_gemms_for_memory(gemms: list[Gemm], mem: MemoryConfig | None) -> list[Gemm]:
+    if mem is None:
+        return gemms
+    return [tile_gemm_for_memory(g, mem) for g in gemms]
+
+
 def evaluate_model(
     p: DesignPoint,
     cfg: ArchConfig,
@@ -41,11 +79,13 @@ def evaluate_model(
     seq: int = 1024,
     mode: str = "prefill",
     include_attention: bool = False,
+    mem: MemoryConfig | None = None,
 ) -> EngineQoR:
     gemms = dedupe_gemms(model_gemms(cfg, mode=mode, batch=batch, seq=seq,
                                      include_attention=include_attention))
-    per_core = split_gemms_across_cores(gemms, n_cores)
-    ppa: ArrayPPA = evaluate_workload(p, per_core)
+    per_core = tile_gemms_for_memory(
+        split_gemms_across_cores(gemms, n_cores), mem)
+    ppa: ArrayPPA = evaluate_workload(p, per_core, mem)
     return EngineQoR(
         latency_s=ppa.latency_s,
         power_w=ppa.power_w,
@@ -65,12 +105,15 @@ def constrained_objective(
     seq: int,
     peak_tops_cap: float = 20.0,
     mode: str = "prefill",
+    mem: MemoryConfig | None = None,
 ) -> jnp.ndarray:
     """The paper's §4.4 search objective: latency^2*power*area subject to a
-    per-core aggregate compute-capacity upper bound (20 TOPS) and validity.
+    per-core aggregate compute-capacity upper bound (20 TOPS) and validity
+    (including buffer-capacity validity when ``mem`` is given).
     Invalid / over-cap points get +inf (vectorization-safe)."""
     from .design_space import is_valid
 
-    q = evaluate_model(p, cfg, n_cores=n_cores, batch=batch, seq=seq, mode=mode)
-    ok = is_valid(p) & (q.peak_tops <= peak_tops_cap)
+    q = evaluate_model(p, cfg, n_cores=n_cores, batch=batch, seq=seq,
+                       mode=mode, mem=mem)
+    ok = is_valid(p, mem) & (q.peak_tops <= peak_tops_cap)
     return jnp.where(ok, q.objective, jnp.inf)

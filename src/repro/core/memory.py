@@ -1,0 +1,160 @@
+"""Off-chip memory hierarchy model — DRAM bandwidth, global buffers, energy.
+
+AccelCIM's motivating observation (paper §1, §3.1) is that SRAM CIM macros
+hold only a small slice of a large DNN's weights, so the dominant overhead
+of the streaming regime the paper targets is *on/off-chip data movement*:
+weight rows are continuously rewritten from a global weight buffer that is
+itself refilled from DRAM, and activations stream through a global
+activation buffer. The closed forms and cycle simulators in this package
+charge that movement *energy*; this module additionally makes it cost
+*time* and *capacity*, so the memory-bound half of the design space (the
+llama3-70b / gpt3-175b rows of Table 3, where the model cannot possibly be
+array-resident) is evaluated under physical constraints instead of the
+"model fits on-chip" idealization.
+
+Parameter mapping to the paper's on/off-chip discussion:
+
+  ``dram_bw_bits_per_cycle``  sustained DRAM (or off-chip link) bandwidth in
+      bits per array clock cycle. The paper's weight-streaming schedule
+      rewrites one weight row per round (eq. 2's T_s is the *on-chip* write
+      time); this is the *off-chip* supply rate that feeds those rewrites.
+      ``inf`` recovers the paper's idealized arbitrarily-fast supply.
+  ``weight_buf_bits`` / ``act_buf_bits``  capacities of the global weight /
+      activation staging buffers between DRAM and the macro array (the
+      "global buffer" tier of the paper's Fig. 1 system sketch). They bound
+      which GEMM tilings are schedulable: a tile's weight working set must
+      fit the weight buffer (see ``mapper.tile_gemms_for_memory``) and one
+      array tile's resident weights/activations must fit at all
+      (``fits_buffers``, folded into ``design_space.is_valid``).
+  ``e_dram_bit``  DRAM access energy per bit. Charged by
+      ``ppa.evaluate_workload`` on every streamed weight/activation bit —
+      the off-chip term the paper folds into its energy comparisons.
+
+Timing model (threaded through the three-level fidelity chain):
+
+  * Closed forms (``dataflow.py``): roofline-style — the steady round time
+    becomes max(compute round, streamed bits per round / BW).
+  * Event simulators (``cycle_sim.py`` / ``cycle_sim_jax.py``): the DRAM
+    port is an explicit resource that streams each round's weight bits in
+    round order, fully pipelined (a deep-enough prefetch FIFO decouples it
+    from the array): round j's weight rewrite cannot start before
+    (j+1) * ceil(round_weight_bits / BW) cycles. Fill/stall behavior is
+    therefore *simulated*, and ``dse.fidelity_sweep(mem=...)``
+    cross-validates the two at population scale exactly as PR 1 did for
+    the infinite-bandwidth regime.
+
+The infinite-bandwidth / infinite-capacity limit (``IDEAL``, the default
+everywhere) is bit-exact with the pre-memory model: the fetch gate is 0
+cycles, no tiling splits occur, and no DRAM energy is charged.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .design_space import IBW, OS, WBW, DesignPoint
+
+
+class MemoryConfig(NamedTuple):
+    """Off-chip hierarchy: DRAM port + global staging buffers.
+
+    All fields are python floats (or broadcastable jnp arrays); ``inf``
+    disables the corresponding constraint.
+    """
+
+    dram_bw_bits_per_cycle: float = math.inf  # sustained DRAM bits/cycle
+    weight_buf_bits: float = math.inf         # global weight buffer capacity
+    act_buf_bits: float = math.inf            # global activation buffer capacity
+    e_dram_bit: float = 0.0                   # DRAM access energy per bit (J)
+
+
+#: The paper's implicit idealization: infinitely fast / large off-chip tier.
+#: Evaluating with ``mem=IDEAL`` is bit-exact with ``mem=None``.
+IDEAL = MemoryConfig()
+
+#: LPDDR5-class single-channel point: ~51.2 GB/s at a ~1 GHz array clock
+#: rounds to 512 bits/cycle; 8 MB weight + 4 MB activation staging buffers;
+#: ~4 pJ/bit access energy. Used by the Table 3 memory-bound case study.
+LPDDR5 = MemoryConfig(
+    dram_bw_bits_per_cycle=512.0,
+    weight_buf_bits=8 * 8 * 2**20,
+    act_buf_bits=4 * 8 * 2**20,
+    e_dram_bit=4e-12,
+)
+
+
+def make_memory(
+    dram_bytes_per_s: float,
+    frequency_hz: float,
+    weight_buf_bytes: float = math.inf,
+    act_buf_bytes: float = math.inf,
+    e_dram_bit: float = 4e-12,
+) -> MemoryConfig:
+    """Build a MemoryConfig from wall-clock DRAM bandwidth at a given array
+    clock (the closed forms and simulators work in cycles, so bandwidth is
+    specified per cycle)."""
+    return MemoryConfig(
+        dram_bw_bits_per_cycle=8.0 * dram_bytes_per_s / frequency_hz,
+        weight_buf_bits=8.0 * weight_buf_bytes,
+        act_buf_bits=8.0 * act_buf_bytes,
+        e_dram_bit=e_dram_bit,
+    )
+
+
+# ---------------------------------------------------------------------------
+# DRAM port timing
+# ---------------------------------------------------------------------------
+
+def round_weight_bits(p: DesignPoint) -> jnp.ndarray:
+    """Weight bits the DRAM port must deliver per (compute + update) round,
+    for the whole BR x BC array.
+
+    WS: every macro rewrites one distinct row per round -> BR*BC rows.
+    OS: the BR macros of a column share one row -> BC rows.
+    (One row = PC banks x AL cols x WBW bits; columns hold disjoint
+    N-chunks, so their weights are distinct and share the single port.)
+    """
+    row_bits = p.PC * p.AL * WBW
+    rows = jnp.where(p.dataflow == OS, p.BC, p.BR * p.BC)
+    return rows * row_bits
+
+
+def round_fetch_cycles(p: DesignPoint, mem: MemoryConfig) -> jnp.ndarray:
+    """Cycles the DRAM port needs to deliver one round's weight bits —
+    the per-round fetch latency F gating the event simulators and the
+    bandwidth term of the closed-form steady round max(round_c, F).
+
+    Integer-valued (ceil) so event times stay exactly representable in the
+    float32 batched simulator; 0 when bandwidth is infinite.
+    """
+    return jnp.ceil(round_weight_bits(p) / mem.dram_bw_bits_per_cycle)
+
+
+# ---------------------------------------------------------------------------
+# Buffer capacity
+# ---------------------------------------------------------------------------
+
+def resident_weight_bits(p: DesignPoint) -> jnp.ndarray:
+    """Weight bits resident in the array for one tile pass (= the macro
+    storage actually holding distinct values). WS holds BR*BC distinct
+    macro images; OS columns share rows across their BR macros."""
+    per_macro = p.PC * p.LSL * p.AL * WBW
+    images = jnp.where(p.dataflow == OS, p.BC, p.BR * p.BC)
+    return images * per_macro
+
+
+def resident_act_bits(p: DesignPoint) -> jnp.ndarray:
+    """Activation bits staged for one tile pass: a TL-column block against
+    the tile's K-chunk (WS: TL x BR*AL; OS: BR*TL x AL — same product)."""
+    return p.TL * p.BR * p.AL * IBW
+
+
+def fits_buffers(p: DesignPoint, mem: MemoryConfig) -> jnp.ndarray:
+    """Capacity validity: one array tile's weight/activation working set
+    must fit the global staging buffers — below this no legal tiling
+    exists, so the design point cannot run at all."""
+    ok = resident_weight_bits(p) <= mem.weight_buf_bits
+    ok &= resident_act_bits(p) <= mem.act_buf_bits
+    return ok

@@ -20,8 +20,9 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 from . import macro_model as mm
-from .design_space import BROADCAST, SYSTOLIC, DesignPoint, WBW
-from .dataflow import DataflowTiming, Gemm, gemm_timing, workload_timing
+from .design_space import BROADCAST, DesignPoint
+from .dataflow import DataflowTiming, Gemm, workload_timing
+from .memory import MemoryConfig
 
 
 class ArrayPPA(NamedTuple):
@@ -80,16 +81,22 @@ def _act_delivery_energy_per_bit(p: DesignPoint) -> jnp.ndarray:
     return 15e-15 * wire
 
 
-def evaluate_workload(p: DesignPoint, gemms: list[Gemm]) -> ArrayPPA:
+def evaluate_workload(p: DesignPoint, gemms: list[Gemm],
+                      mem: MemoryConfig | None = None) -> ArrayPPA:
     """End-to-end QoRs of design point p running a GEMM workload.
 
     Power integrates (as the paper does from simulation traces):
       compute dynamic energy      = E/MAC * #MACs
       weight-update energy        = write energy * streamed weight bits
       activation delivery energy  = wire energy * streamed act bits
+      DRAM access energy          = mem.e_dram_bit * streamed bits (mem only)
       leakage                     = P_leak * latency
+
+    ``mem`` additionally bounds the timing by DRAM bandwidth (see
+    ``dataflow.gemm_timing``); the infinite-bandwidth zero-energy limit is
+    bit-exact with ``mem=None``.
     """
-    timing: DataflowTiming = workload_timing(p, gemms)
+    timing: DataflowTiming = workload_timing(p, gemms, mem)
     f = mm.frequency(p)
     latency = timing.total_cycles / f
 
@@ -101,6 +108,10 @@ def evaluate_workload(p: DesignPoint, gemms: list[Gemm]) -> ArrayPPA:
     e_leak = mm.leakage_power(p) * n_macros(p) * latency
     e_dyn = e_compute + e_weights + e_acts
     e_total = (e_dyn * (1.0 + array_power_overhead_frac(p))) + e_leak
+    if mem is not None:
+        # off-chip term: every streamed bit crosses the DRAM interface
+        # (outside the on-chip array overhead multiplier)
+        e_total = e_total + (timing.weight_bits + timing.act_bits) * mem.e_dram_bit
 
     power = e_total / jnp.maximum(latency, 1e-12)
     area = array_area_mm2(p)

@@ -16,7 +16,6 @@ from typing import Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ArchConfig
 

@@ -21,7 +21,6 @@ tests/test_collective_matmul.py on a host mesh.
 """
 from __future__ import annotations
 
-import functools
 import inspect
 
 import jax

@@ -14,7 +14,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 #       --shape train_4k --mesh single --out results/dryrun
 
 import argparse
-import functools
 import json
 import re
 import time

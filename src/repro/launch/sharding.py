@@ -35,7 +35,6 @@ _REP1D = {"scale", "bias", "A_log", "D", "dt_bias", "lambda", "conv_b",
 
 def _rule_for(path_names: list[str], ndim_base: int, dp) -> P | None:
     name = path_names[-1]
-    parents = set(path_names[:-1])
     if name in _REP1D:
         return P(*([None] * ndim_base))
     if name == "embed":

@@ -7,8 +7,6 @@ moment factoring keeps the 671B dry-run within HBM) and AdamW otherwise.
 """
 from __future__ import annotations
 
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 

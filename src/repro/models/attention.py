@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..pspec import DP, TP, hint
-from .layers import Params, apply_mrope, apply_rope, dense_init, rmsnorm, rmsnorm_init, softcap
+from .layers import Params, apply_mrope, apply_rope, dense_init, rmsnorm, rmsnorm_init
 
 NEG_INF = -2.0**30
 
@@ -292,12 +292,9 @@ def cross_attn_apply(params: Params, cfg: ArchConfig, x, enc_kv: KVCache):
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = (x @ params["wq"]).reshape(B, S, H, hd)
     k, v = enc_kv.k, enc_kv.v
-    q_pos = jnp.arange(S)
-    k_pos = jnp.zeros((k.shape[1],), jnp.int32)  # no causality across modalities
     mask = jnp.ones((S, k.shape[1]), bool)
     o = _dense_attend(q.reshape(B, S, Hkv, H // Hkv, hd), k, v, mask,
                       1.0 / jnp.sqrt(hd).astype(jnp.float32))
-    del q_pos, k_pos
     return o.reshape(B, S, H * hd) @ params["wo"]
 
 

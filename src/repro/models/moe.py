@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ArchConfig, MoEConfig
+from ..configs.base import ArchConfig
 from ..pspec import CONFIG as PSPEC_CONFIG, DP, TP, hint
 from .layers import Params, activation, dense_init
 

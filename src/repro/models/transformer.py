@@ -17,22 +17,20 @@ Every model exposes the same API (ModelApi):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from ..pspec import CONFIG as PSPEC_CONFIG, DP, TP, hint, residual_hint
+from ..pspec import DP, TP, hint, residual_hint
 from . import attention as attn
 from . import moe as moe_mod
 from . import recurrent as rec_mod
 from . import ssm as ssm_mod
 from .attention import KVCache, MLACache
-from .layers import (Params, activation, dense_init, embed_init, layernorm,
-                     layernorm_init, mlp, mlp_init, rmsnorm, rmsnorm_init,
-                     softcap)
+from .layers import (Params, dense_init, embed_init, mlp, mlp_init,
+                     rmsnorm, rmsnorm_init, softcap)
 
 AUX_LOSS_WEIGHT = 1e-3
 

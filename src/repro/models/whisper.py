@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from ..configs.base import ArchConfig
 from . import attention as attn
 from .attention import KVCache
-from .layers import (dense_init, embed_init, layernorm, layernorm_init, mlp,
+from .layers import (embed_init, layernorm, layernorm_init, mlp,
                      mlp_init)
 from .transformer import ModelApi, _ce_loss, scan_stack, stack_init
 
@@ -50,7 +50,6 @@ def _dec_block_init(key, cfg):
 
 def _enc_block_apply(p, cfg, x):
     B, S, _ = x.shape
-    pos = jnp.arange(S)
     h = layernorm(p["attn_norm"], x)
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = (h @ p["attn"]["wq"]).reshape(B, S, H, hd)
@@ -61,7 +60,6 @@ def _enc_block_apply(p, cfg, x):
                            1.0 / jnp.sqrt(hd).astype(jnp.float32))
     x = x + o.reshape(B, S, H * hd) @ p["attn"]["wo"]
     x = x + mlp(p["mlp"], layernorm(p["mlp_norm"], x), cfg.act)
-    del pos
     return x
 
 

@@ -25,7 +25,6 @@ from pathlib import Path
 from typing import Any, Callable
 
 import jax
-import numpy as np
 
 from ..checkpoint import AsyncCheckpointer, latest_step, load_checkpoint
 from ..data import DataState

@@ -1,6 +1,4 @@
 """Dataflow timing model: paper equations, cycle-sim equivalence, properties."""
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

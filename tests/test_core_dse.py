@@ -6,7 +6,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import PAPER_MODELS, get_config
-from repro.core import (Gemm, bayesopt, evaluate_model, pareto_front,
+from repro.core import (bayesopt, evaluate_model, pareto_front,
                         pareto_mask, sample_random)
 from repro.core.mapper import constrained_objective
 from repro.core.workload import (dedupe_gemms, model_flops, model_gemms,

@@ -1,5 +1,4 @@
 """Macro PPA model: the paper's Fig. 2/3/10 trends must hold by construction."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st

@@ -1,0 +1,127 @@
+"""Mapper / workload coverage: core splitting, dedupe, capacity tiling.
+
+Satellite coverage from ISSUE 2: ``split_gemms_across_cores`` M-floor
+behavior, ``dedupe_gemms`` count merging, and property tests that
+capacity-aware tiling conserves total MACs (and actually fits the buffer)
+and that the infinite-bandwidth memory model is bit-identical to the
+pre-memory closed forms for all 8 dataflow variants.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import Gemm, workload_timing
+from repro.core.design_space import BROADCAST, OS, SYSTOLIC, WBW, WS, make_point
+from repro.core.mapper import (split_gemms_across_cores, tile_gemm_for_memory,
+                               tile_gemms_for_memory)
+from repro.core.memory import IDEAL, MemoryConfig
+from repro.core.workload import dedupe_gemms, total_macs
+
+VARIANTS = [(df, ic, ol) for df in (WS, OS) for ic in (BROADCAST, SYSTOLIC)
+            for ol in (0, 1)]
+
+
+# ---------------------------------------------------------------------------
+# split_gemms_across_cores
+# ---------------------------------------------------------------------------
+
+def test_split_across_cores_divides_m():
+    out = split_gemms_across_cores([Gemm(4096, 512, 1024, 3)], 4)
+    assert out == [Gemm(1024.0, 512, 1024, 3)]
+
+
+def test_split_across_cores_m_floor():
+    """M never drops below one token row per core — tiny-M GEMMs (decode,
+    MoE stragglers) are replicated rather than sliced into fractions."""
+    out = split_gemms_across_cores([Gemm(2, 512, 1024)], 8)
+    assert out[0].M == 1.0
+    # K, N, count untouched by the core split
+    assert (out[0].K, out[0].N, out[0].count) == (512, 1024, 1.0)
+
+
+@given(M=st.floats(1, 1e6), n_cores=st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_split_across_cores_floor_property(M, n_cores):
+    (out,) = split_gemms_across_cores([Gemm(M, 64, 64)], n_cores)
+    assert out.M == max(M / n_cores, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# dedupe_gemms
+# ---------------------------------------------------------------------------
+
+def test_dedupe_merges_counts():
+    g = [Gemm(8, 16, 32, 2), Gemm(8, 16, 32, 3), Gemm(8, 16, 64, 1)]
+    d = dedupe_gemms(g)
+    assert len(d) == 2
+    merged = {(x.M, x.K, x.N): x.count for x in d}
+    assert merged[(8.0, 16.0, 32.0)] == 5.0
+    assert merged[(8.0, 16.0, 64.0)] == 1.0
+    assert total_macs(d) == pytest.approx(total_macs(g))
+
+
+@given(
+    shapes=st.lists(
+        st.tuples(st.sampled_from([8, 64]), st.sampled_from([16, 32]),
+                  st.sampled_from([32, 128]), st.floats(0.5, 8)),
+        min_size=1, max_size=12),
+)
+@settings(max_examples=30, deadline=None)
+def test_dedupe_conserves_macs_and_shrinks(shapes):
+    g = [Gemm(m, k, n, c) for m, k, n, c in shapes]
+    d = dedupe_gemms(g)
+    assert len(d) <= len(g)
+    assert len({(x.M, x.K, x.N) for x in d}) == len(d)  # keys now unique
+    assert total_macs(d) == pytest.approx(total_macs(g))
+
+
+# ---------------------------------------------------------------------------
+# Capacity-aware tiling
+# ---------------------------------------------------------------------------
+
+@given(
+    K=st.integers(64, 16384),
+    N=st.integers(64, 16384),
+    count=st.floats(1, 16),
+    cap_kb=st.sampled_from([8, 64, 512, 4096]),
+)
+@settings(max_examples=60, deadline=None)
+def test_tiling_conserves_macs_and_fits(K, N, count, cap_kb):
+    g = Gemm(1024, float(K), float(N), count)
+    mem = MemoryConfig(weight_buf_bits=cap_kb * 1024 * 8)
+    t = tile_gemm_for_memory(g, mem)
+    assert t.macs == pytest.approx(g.macs, rel=1e-9)   # MACs conserved
+    assert t.K * t.N * WBW <= mem.weight_buf_bits + 1e-6  # tile fits
+    assert t.M == g.M  # K/N split only
+
+
+def test_tiling_noop_when_fits_or_ideal():
+    g = Gemm(1024, 256, 256)
+    assert tile_gemm_for_memory(g, IDEAL) is g
+    big = MemoryConfig(weight_buf_bits=10 * 256 * 256 * WBW)
+    assert tile_gemm_for_memory(g, big) is g
+    assert tile_gemms_for_memory([g], None) == [g]
+
+
+def test_tiling_splits_k_when_single_column_overflows():
+    g = Gemm(16, 65536, 4, 1)
+    mem = MemoryConfig(weight_buf_bits=1024 * WBW)  # one column needs 64x that
+    t = tile_gemm_for_memory(g, mem)
+    assert t.K * t.N * WBW <= float(mem.weight_buf_bits)
+    assert t.macs == pytest.approx(g.macs, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Infinite-bandwidth memory model == pre-memory closed forms, all 8 variants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+def test_ideal_memory_workload_bit_identical(df, ic, ol):
+    p = make_point(AL=64, PC=16, LSL=4, PL=2, OL=ol, BR=4, BC=4, TL=64,
+                   dataflow=df, interconnect=ic)
+    gemms = [Gemm(8192, 4096, 4096), Gemm(100.5, 777, 333, 3)]
+    t0 = workload_timing(p, gemms)
+    t1 = workload_timing(p, tile_gemms_for_memory(gemms, IDEAL), mem=IDEAL)
+    for f in t0._fields:
+        assert np.array_equal(np.asarray(getattr(t0, f)),
+                              np.asarray(getattr(t1, f))), (f, df, ic, ol)

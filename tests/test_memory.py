@@ -1,0 +1,235 @@
+"""Off-chip memory hierarchy model (core/memory.py) and its threading.
+
+Contract under test (ISSUE 2 acceptance):
+  * the infinite-bandwidth / infinite-capacity limit (memory.IDEAL) is
+    bit-exact with the pre-memory closed forms and simulators for all 8
+    dataflow variants;
+  * under finite DRAM bandwidth the numpy and JAX event simulators stay
+    bit-identical, and their measured steady state equals the closed-form
+    roofline LSL * max(round_c, fetch);
+  * the GEMM-level closed forms become bandwidth-bound (utilization < 1)
+    when streamed traffic exceeds the port rate, monotonically in BW;
+  * buffer capacities gate validity and drive capacity-aware tiling;
+  * DRAM access energy is charged on streamed bits.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cycle_sim, cycle_sim_jax, dataflow as dfm, memory
+from repro.core import design_space as ds
+from repro.core.dataflow import Gemm, gemm_timing
+from repro.core.design_space import BROADCAST, OS, SYSTOLIC, WS, make_point
+from repro.core.dse import fidelity_sweep
+from repro.core.mapper import evaluate_model
+from repro.core.memory import MemoryConfig
+from repro.core.ppa import evaluate_workload
+
+VARIANTS = [(df, ic, ol) for df in (WS, OS) for ic in (BROADCAST, SYSTOLIC)
+            for ol in (0, 1)]
+
+FINITE_BWS = [64.0, 256.0, 1024.0, 4096.0, 65536.0]
+
+
+# ---------------------------------------------------------------------------
+# Infinite-bandwidth / infinite-capacity limit is bit-exact (all 8 variants)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+def test_ideal_memory_bit_exact_closed_forms(df, ic, ol):
+    p = make_point(AL=64, PC=8, LSL=4, PL=2, OL=ol, BR=3, BC=2, TL=32,
+                   dataflow=df, interconnect=ic)
+    g = Gemm(8192, 4096, 4096)
+    t0 = gemm_timing(p, g)
+    t1 = gemm_timing(p, g, mem=memory.IDEAL)
+    for f in t0._fields:
+        assert np.array_equal(np.asarray(getattr(t0, f)),
+                              np.asarray(getattr(t1, f))), f
+    assert float(dfm.steady_pass_cycles(p, memory.IDEAL)) == \
+        float(dfm.steady_pass_cycles(p))
+
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+def test_ideal_memory_bit_exact_simulators(df, ic, ol):
+    p = make_point(AL=64, PC=8, LSL=4, PL=2, OL=ol, BR=3, BC=2, TL=32,
+                   dataflow=df, interconnect=ic)
+    ref = cycle_sim.simulate(p, n_passes=5)
+    for sim in (cycle_sim.simulate(p, 5, mem=memory.IDEAL),
+                cycle_sim_jax.simulate(p, 5, mem=memory.IDEAL)):
+        assert sim.total_cycles == ref.total_cycles
+        assert sim.per_pass_steady == ref.per_pass_steady
+
+
+def test_ideal_memory_bit_exact_population():
+    pop = ds.sample_random(jax.random.key(2), 256)
+    r0 = cycle_sim_jax.simulate_batched(pop, 3)
+    r1 = cycle_sim_jax.simulate_batched(pop, 3, mem=memory.IDEAL)
+    assert np.array_equal(np.asarray(r0.total_cycles), np.asarray(r1.total_cycles))
+    assert np.array_equal(np.asarray(r0.per_pass_steady),
+                          np.asarray(r1.per_pass_steady))
+    g = [Gemm(8192, 4096, 4096)]
+    a = evaluate_workload(pop, g)
+    b = evaluate_workload(pop, g, mem=memory.IDEAL)
+    for f in a._fields:
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), f
+
+
+# ---------------------------------------------------------------------------
+# Finite bandwidth: numpy == JAX exactly, steady == roofline closed form
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+@given(
+    BR=st.integers(1, 6),
+    LSL=st.sampled_from([2, 4, 8]),
+    TL=st.sampled_from([8, 32, 128]),
+    PC=st.sampled_from([2, 8, 32]),
+    BC=st.sampled_from([1, 3]),
+    bw=st.sampled_from(FINITE_BWS),
+)
+@settings(max_examples=20, deadline=None)
+def test_jax_sim_matches_numpy_under_finite_bw(df, ic, ol, BR, LSL, TL, PC, BC, bw):
+    p = make_point(AL=32, PC=PC, LSL=LSL, PL=1, OL=ol, BR=BR, BC=BC, TL=TL,
+                   dataflow=df, interconnect=ic)
+    mem = MemoryConfig(dram_bw_bits_per_cycle=bw)
+    ref = cycle_sim.simulate(p, n_passes=4, mem=mem)
+    got = cycle_sim_jax.simulate(p, n_passes=4, mem=mem)
+    assert got.total_cycles == ref.total_cycles, (df, ic, ol, BR, LSL, bw)
+    assert got.per_pass_steady == ref.per_pass_steady, (df, ic, ol, BR, LSL, bw)
+
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+@given(
+    BR=st.integers(1, 6),
+    LSL=st.sampled_from([2, 4, 8]),
+    TL=st.sampled_from([8, 32, 128]),
+    PC=st.sampled_from([2, 8, 32]),
+    bw=st.sampled_from(FINITE_BWS),
+)
+@settings(max_examples=15, deadline=None)
+def test_sim_steady_state_is_roofline(df, ic, ol, BR, LSL, TL, PC, bw):
+    """The gated event simulator's steady per-pass cost equals the
+    closed-form roofline LSL * max(round_c, fetch) once the design reaches
+    steady state — the bandwidth-bound extension of the PR 1 contract."""
+    p = make_point(AL=32, PC=PC, LSL=LSL, PL=1, OL=ol, BR=BR, BC=1, TL=TL,
+                   dataflow=df, interconnect=ic)
+    mem = MemoryConfig(dram_bw_bits_per_cycle=bw)
+    n = int(cycle_sim_jax.steady_state_passes(p, mem=mem))
+    sim = cycle_sim.simulate(p, n_passes=n, mem=mem)
+    closed = float(dfm.steady_pass_cycles(p, mem))
+    assert sim.per_pass_steady == pytest.approx(closed), (df, ic, ol, BR, bw)
+    slack = float(cycle_sim_jax.fill_drain_slack(p, mem=mem))
+    assert abs(sim.total_cycles - n * closed) <= slack
+
+
+def test_batched_mixed_population_matches_numpy_under_finite_bw():
+    pop = ds.sample_random(jax.random.key(13), 64, BC=1)
+    mem = MemoryConfig(dram_bw_bits_per_cycle=1024.0)
+    res = cycle_sim_jax.simulate_batched(pop, 3, mem=mem)
+    tot = np.asarray(res.total_cycles)
+    pps = np.asarray(res.per_pass_steady)
+    for i, row in enumerate(ds.point_rows(pop)):
+        ref = cycle_sim.simulate(row, 3, mem=mem)
+        assert tot[i] == ref.total_cycles, f"point {i}"
+        assert pps[i] == ref.per_pass_steady, f"point {i}"
+
+
+# ---------------------------------------------------------------------------
+# GEMM-level roofline behavior
+# ---------------------------------------------------------------------------
+
+def test_bandwidth_bound_gemm_reports_low_utilization():
+    p = make_point(AL=64, PC=16, LSL=2, BR=4, BC=4, TL=64)
+    g = Gemm(4096, 4096, 4096)
+    ideal = gemm_timing(p, g)
+    starved = gemm_timing(p, g, mem=MemoryConfig(dram_bw_bits_per_cycle=1.0))
+    assert float(starved.total_cycles) > float(ideal.total_cycles)
+    assert float(starved.utilization) < float(ideal.utilization)
+    assert float(starved.utilization) < 1.0
+    # fully starved: the DRAM port is the bottleneck
+    assert float(starved.dram_cycles) >= \
+        float(starved.total_cycles) - float(ideal.total_cycles)
+
+
+@given(
+    df=st.sampled_from([WS, OS]),
+    ic=st.sampled_from([BROADCAST, SYSTOLIC]),
+    bw_lo=st.sampled_from([8.0, 64.0, 512.0]),
+)
+@settings(max_examples=20, deadline=None)
+def test_gemm_cycles_monotone_in_bandwidth(df, ic, bw_lo):
+    p = make_point(AL=64, PC=16, LSL=2, BR=4, BC=4, TL=64,
+                   dataflow=df, interconnect=ic)
+    g = Gemm(4096, 4096, 4096)
+    lo = gemm_timing(p, g, mem=MemoryConfig(dram_bw_bits_per_cycle=bw_lo))
+    hi = gemm_timing(p, g, mem=MemoryConfig(dram_bw_bits_per_cycle=8 * bw_lo))
+    ideal = gemm_timing(p, g)
+    assert float(lo.total_cycles) >= float(hi.total_cycles)
+    assert float(hi.total_cycles) >= float(ideal.total_cycles)
+
+
+# ---------------------------------------------------------------------------
+# Capacity: validity + DRAM energy + end-to-end model evaluation
+# ---------------------------------------------------------------------------
+
+def test_capacity_validity_gates_design_points():
+    p = make_point(AL=256, PC=64, LSL=8, BR=8, BC=8)
+    resident = float(memory.resident_weight_bits(p))
+    fits = MemoryConfig(weight_buf_bits=2 * resident)
+    tight = MemoryConfig(weight_buf_bits=resident / 2)
+    assert bool(ds.is_valid(p, fits))
+    assert not bool(ds.is_valid(p, tight))
+    assert bool(ds.is_valid(p))  # no memory model: unchanged rules
+
+
+def test_act_buffer_validity():
+    p = make_point(TL=512, BR=8, AL=256)
+    resident = float(memory.resident_act_bits(p))
+    assert not bool(ds.is_valid(p, MemoryConfig(act_buf_bits=resident / 2)))
+    assert bool(ds.is_valid(p, MemoryConfig(act_buf_bits=2 * resident)))
+
+
+def test_dram_energy_charged():
+    p = make_point(AL=64, PC=16, LSL=2, BR=4, BC=4, TL=64)
+    g = [Gemm(4096, 4096, 4096)]
+    base = evaluate_workload(p, g)
+    mem = MemoryConfig(e_dram_bit=4e-12)  # infinite BW: timing identical
+    withm = evaluate_workload(p, g, mem=mem)
+    assert float(withm.latency_s) == float(base.latency_s)
+    assert float(withm.energy_j) > float(base.energy_j)
+    t = dfm.workload_timing(p, g)
+    expected = (float(t.weight_bits) + float(t.act_bits)) * 4e-12
+    assert float(withm.energy_j) - float(base.energy_j) == pytest.approx(expected)
+
+
+def test_evaluate_model_memory_bound_case_study():
+    """llama3-70b-class prefill under LPDDR5-class bandwidth is slower and
+    memory-bound (utilization < 1) vs the paper's ideal-memory evaluation."""
+    from repro.configs import PAPER_MODELS
+
+    p = make_point(AL=256, PC=16, LSL=2, PL=4, OL=1, BR=2, BC=4, TL=32,
+                   dataflow=1, interconnect=1)
+    cfg = PAPER_MODELS["llama3-70b"]
+    q0 = evaluate_model(p, cfg, n_cores=8, batch=1, seq=2048)
+    q1 = evaluate_model(p, cfg, n_cores=8, batch=1, seq=2048, mem=memory.LPDDR5)
+    assert float(q1.latency_s) >= float(q0.latency_s)
+    assert float(q1.utilization) <= float(q0.utilization)
+    assert float(q1.utilization) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Population-scale fidelity in the bandwidth-bound regime (the CI gate's
+# contract, in-suite at small scale)
+# ---------------------------------------------------------------------------
+
+def test_fidelity_sweep_bandwidth_bound_smoke():
+    mem = MemoryConfig(dram_bw_bits_per_cycle=1024.0)
+    rep = fidelity_sweep(jax.random.key(0), n_samples=24, mem=mem,
+                         fixed=dict(BC=1))
+    assert len(rep) == 8
+    for label, r in rep.items():
+        assert r["n"] > 0, label
+        assert r["max_rel_err"] <= 1e-4, (label, r)
+        assert r["frac_within_slack"] == 1.0, (label, r)

@@ -5,7 +5,6 @@ claim of the paper against our calibrated models, at reduced budget so the
 suite stays fast. The full-budget versions live in benchmarks/.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -13,7 +12,7 @@ from repro.configs import PAPER_MODELS
 from repro.core import (ALL_DATAFLOWS, Gemm, dataflow_pareto_sweep,
                         evaluate_workload, make_point)
 from repro.core import design_space as ds
-from repro.core.dse import DataflowName, optimize_for_model
+from repro.core.dse import optimize_for_model
 from repro.core.pareto import hypervolume_2d
 
 PAPER_GEMM = Gemm(8192, 4096, 4096)

@@ -127,7 +127,7 @@ def test_pareto_sweep_all_invalid_population(monkeypatch):
     sweep must still return a well-formed (degenerate) front, not crash."""
     monkeypatch.setattr(
         dse.ds, "is_valid",
-        lambda p: np.zeros(np.shape(np.asarray(p.AL)), dtype=bool))
+        lambda p, mem=None: np.zeros(np.shape(np.asarray(p.AL)), dtype=bool))
     out = dse.dataflow_pareto_sweep(
         jax.random.key(0), GEMMS, n_samples=64,
         dataflows=[dse.DataflowName(ds.WS, ds.SYSTOLIC, 0)])

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from repro.checkpoint import (AsyncCheckpointer, latest_step, load_checkpoint,
                               restore_to_shardings, save_checkpoint)
 from repro.configs.smoke import smoke_config
-from repro.data import DataState, SyntheticLMDataset
+from repro.data import SyntheticLMDataset
 from repro.launch.steps import make_train_step
 from repro.models import build_model
 from repro.optim import adafactor, adamw, compress_int8, decompress_int8, error_feedback_update
