@@ -21,12 +21,14 @@ from . import design_space as ds
 from .design_space import DesignPoint
 
 # Encoding: continuous unit-cube vector -> snapped grid design point.
-_ENC_FIELDS = ("AL", "LSL", "PC", "PL", "OL", "BR", "BC", "TL", "dataflow", "interconnect")
+_ENC_FIELDS = ("AL", "LSL", "PC", "PL", "OL", "BR", "BC", "TL", "dataflow",
+               "interconnect", "PF")
 _GRIDS = {
     "AL": ds.AL_CHOICES, "LSL": ds.LSL_CHOICES, "PC": ds.PC_CHOICES,
     "PL": ds.PL_CHOICES, "OL": ds.OL_CHOICES, "BR": ds.BR_CHOICES,
     "BC": ds.BC_CHOICES, "TL": ds.TL_CHOICES,
     "dataflow": ds.DATAFLOW_CHOICES, "interconnect": ds.INTERCONNECT_CHOICES,
+    "PF": ds.PF_CHOICES,
 }
 DIM = len(_ENC_FIELDS)
 
@@ -49,8 +51,12 @@ def encode(p: DesignPoint) -> jnp.ndarray:
     cols = []
     for name in _ENC_FIELDS:
         grid = np.asarray(_GRIDS[name], dtype=np.float32)
-        v = np.asarray(getattr(p, name), dtype=np.float32)
-        idx = np.argmin(np.abs(v[..., None] - grid[None, :]), axis=-1)
+        v = np.broadcast_to(np.asarray(getattr(p, name), dtype=np.float32),
+                            np.shape(p.AL))
+        with np.errstate(invalid="ignore"):
+            d = np.abs(v[..., None] - grid[None, :])
+        d = np.where(np.isnan(d), 0.0, d)  # inf - inf: exact match (PF grid)
+        idx = np.argmin(d, axis=-1)
         cols.append((idx + 0.5) / len(grid))
     return jnp.asarray(np.stack(cols, axis=-1))
 

@@ -48,17 +48,32 @@ per-pass cost equals the closed form exactly and totals match within
 fill/drain slack.
 
 Off-chip memory (``mem``, see memory.py): the DRAM port is a sixth explicit
-resource. It streams each round's weight bits in round order, fully
-pipelined and never blocked by the array (a deep-enough prefetch FIFO), so
-round j's weight rewrite gains one extra gate: it cannot start before
-fetch(j) = (j+1) * F, F = ceil(round_weight_bits / BW). BC columns share
-the port, which is why F covers the whole array's bits per round — the
-uniform gate keeps the columns in lockstep, preserving the single-column
-simulation argument. F = 0 (mem=None or infinite BW) is bit-exact with the
-pre-memory event rules.
+resource. It streams round *bundles* — each round's weight bits plus its
+activation share (``memory.round_fetch_cycles``: F = ceil(bits / BW)) — in
+round order into a prefetch FIFO of ``p.PF`` round-bundles. Fetch of
+bundle j completes at
+
+    ready(j) = max(ready(j-1), free(j-PF)) + F
+
+where free(k) is round k's last consumption event (the bundle's slot only
+then recycles): the bus-wave end for WS-Broadcast, the last row's
+weight-port end for WS-Systolic, and the last row's compute end for the OS
+variants. PF = inf removes the feedback term, recovering the unbounded
+gate ready(j) = (j+1) * F bit-exactly; PF = 1 serializes each fetch behind
+the previous round's full use. BC columns share the port, which is why F
+covers the whole array's bits per round — the uniform gate keeps the
+columns in lockstep, preserving the single-column simulation argument.
+F = 0 (mem=None or infinite BW) disables the port AND the FIFO (instant
+refill can never bind) and is bit-exact with the pre-memory event rules.
+
+Finite PF makes the steady state periodic over PF rounds, not 1, so the
+steady per-pass cost is measured over m block passes with m*LSL a multiple
+of PF (``measure_passes``; PF and LSL are powers of two, so m = PF /
+gcd(PF, LSL) and the /m normalization is float-exact).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 import numpy as np
@@ -75,35 +90,71 @@ class SimResult:
     compute_busy: float  # sum of compute-busy cycles across the BR x BC array
 
 
+def fifo_depth(p: DesignPoint, F: float) -> int | None:
+    """Effective prefetch-FIFO depth in rounds: None when the FIFO cannot
+    bind (no port gate, or unbounded depth)."""
+    if F <= 0.0:
+        return None
+    D = float(np.asarray(p.PF))
+    return None if math.isinf(D) else max(int(D), 1)
+
+
+def measure_passes(LSL: int, D: int | None) -> int:
+    """Block passes per steady-state measurement window: the smallest m
+    with m*LSL divisible by the FIFO period D, so the measured window
+    spans whole max-plus periods (1 whenever the FIFO cannot bind)."""
+    if D is None:
+        return 1
+    return D // math.gcd(D, LSL)
+
+
 def simulate(p: DesignPoint, n_passes: int,
              mem: MemoryConfig | None = None) -> SimResult:
     BR, BC, LSL = int(p.BR), int(p.BC), int(p.LSL)
     tc, ts = float(_t_c(p)), float(_t_s(p))
     df, ic, ol = int(p.dataflow), int(p.interconnect), bool(int(p.OL))
     F = 0.0 if mem is None else float(round_fetch_cycles(p, mem))
-    a = _run(BR, LSL, tc, ts, df, ic, ol, n_passes, F)
-    b = _run(BR, LSL, tc, ts, df, ic, ol, n_passes + 1, F)
+    D = fifo_depth(p, F)
+    m = measure_passes(LSL, D)
+    a = _run(BR, LSL, tc, ts, df, ic, ol, n_passes, F, D)
+    b = _run(BR, LSL, tc, ts, df, ic, ol, n_passes + m, F, D)
     return SimResult(
         total_cycles=a,
-        per_pass_steady=b - a,
+        per_pass_steady=(b - a) / m,
         compute_busy=n_passes * LSL * tc * BR * BC,
     )
 
 
-def _run(BR, LSL, tc, ts, df, ic, ol, n_passes, F=0.0) -> float:
+def _run(BR, LSL, tc, ts, df, ic, ol, n_passes, F=0.0, D=None) -> float:
     rounds = n_passes * LSL
     avail = np.zeros(BR)              # macro busy-until
     wready = np.zeros((BR, LSL))      # weight slot ready time (per macro)
     bus_free = 0.0                    # column weight bus / buffer port
     end = 0.0
 
+    # DRAM port + prefetch FIFO state. frees[k] is round k's last
+    # consumption event (when bundle k's FIFO slot recycles); ready is the
+    # port's last fetch completion. fetch(i) must be called exactly once
+    # per bundle, in increasing i order (the port is strictly in-order).
+    frees: list[float] = []
+    ready = 0.0
+
+    def fetch(i: int) -> float:
+        nonlocal ready
+        if D is None:
+            return (i + 1) * F        # unbounded FIFO: fully pipelined port
+        dep = frees[i - D] if i >= D else 0.0
+        ready = max(ready, dep) + F
+        return ready
+
     if df == WS and ic == BROADCAST:
         for j in range(rounds):
             s = j % LSL
+            rdy = fetch(j)
             start = max(avail.max(), wready[:, s].max())
             cend = start + tc
             avail[:] = cend
-            t = max(bus_free, cend, (j + 1) * F)
+            t = max(bus_free, cend, rdy)
             for r in range(BR):
                 uend = t + ts
                 wready[r, s] = uend
@@ -111,6 +162,7 @@ def _run(BR, LSL, tc, ts, df, ic, ol, n_passes, F=0.0) -> float:
                     avail[r] = uend
                 t = uend
             bus_free = t
+            frees.append(bus_free)    # slot recycles after the bus wave
             end = max(end, cend, bus_free)
 
     elif df == WS and ic == SYSTOLIC:
@@ -118,30 +170,36 @@ def _run(BR, LSL, tc, ts, df, ic, ol, n_passes, F=0.0) -> float:
         port_free = np.zeros(BR)  # each macro's weight-I/O port is serial
         for j in range(rounds):
             s = j % LSL
+            rdy = fetch(j)
+            last_use = 0.0
             for r in range(BR):
                 start = max(avail[r], wready[r, s], first[r] if j == 0 else 0.0)
                 cend = start + tc
-                ustart = max(cend, port_free[r], (j + 1) * F)
+                ustart = max(cend, port_free[r], rdy)
                 uend = ustart + ts         # rewrite own row (own link segment)
                 port_free[r] = uend
                 wready[r, s] = uend
                 avail[r] = cend if ol else uend
+                last_use = max(last_use, uend)
                 end = max(end, uend)
+            frees.append(last_use)    # slot recycles after every row's rewrite
 
     elif df == OS and ic == BROADCAST:
         # wready indexed by round parity slot: row j's weights broadcast once
-        nxt = F + ts  # first row fetched at F, its broadcast completes at +ts
+        nxt = fetch(0) + ts  # first row fetched at ready(0), broadcast +ts
         bus_free = nxt
         for j in range(rounds):
             cstart = max(avail.max(), nxt)
             cend = cstart + tc
             avail[:] = cend
-            # the round-j broadcast loads row j+1, fetched at (j+2)*F
+            frees.append(cend)        # compute is bundle j's last consumer
+            # the round-j broadcast loads row j+1, fetched at ready(j+1)
+            rdy = fetch(j + 1)
             if ol:
-                bstart = max(bus_free, cstart, (j + 2) * F)  # prefetch during compute
+                bstart = max(bus_free, cstart, rdy)  # prefetch during compute
                 nxt = bstart + ts
             else:
-                bstart = max(bus_free, cend, (j + 2) * F)    # port busy blocks macros
+                bstart = max(bus_free, cend, rdy)    # port busy blocks macros
                 nxt = bstart + ts
                 avail[:] = nxt                        # macros take part in I/O
             bus_free = nxt
@@ -152,42 +210,49 @@ def _run(BR, LSL, tc, ts, df, ic, ol, n_passes, F=0.0) -> float:
             # Dedicated in/out links pipeline one weight row per T_s hop;
             # transfers hide under compute. arrive(j, r) = when row j is
             # fully written into macro r.
-            arrive_prev = np.array([F + (r + 1) * ts for r in range(BR)])  # row 0
+            f0 = fetch(0)
+            arrive_prev = np.array([f0 + (r + 1) * ts for r in range(BR)])
             cend_prev = np.zeros(BR)
             for j in range(rounds):
                 if j == 0:
                     arrive = arrive_prev
                 else:
+                    rdy = fetch(j)
                     arrive = np.zeros(BR)
                     # buffer pushes next row once its bits are fetched
-                    up = max(arrive_prev[0], (j + 1) * F) + ts
+                    up = max(arrive_prev[0], rdy) + ts
                     for r in range(BR):
                         # link (r-1 -> r) free after it moved row j-1
                         arrive[r] = max(up, arrive_prev[r] + ts)
                         up = arrive[r] + ts
                 cstart = np.maximum(cend_prev, arrive)
                 cend = cstart + tc
+                frees.append(float(cend.max()))  # last row's compute end
                 end = max(end, float(cend.max()))
                 cend_prev, arrive_prev = cend, arrive
         else:
             # Compute-first, single shared I/O port: per row a macro
             # receives (T_s), computes (T_c), then serves its downstream
             # neighbor's receive (T_s) -> steady round = T_c + 2*T_s.
-            free = np.zeros(BR)   # macro busy with compute OR a transfer
+            busy = np.zeros(BR)   # macro busy with compute OR a transfer
             have = np.zeros(BR)   # when macro got the current row
             buf_free = 0.0
             for j in range(rounds):
+                rdy = fetch(j)
+                last_use = 0.0
                 for r in range(BR):
-                    src_free = buf_free if r == 0 else free[r - 1]
-                    src_have = (j + 1) * F if r == 0 else have[r - 1]
-                    xs = max(src_have, src_free, free[r])
+                    src_free = buf_free if r == 0 else busy[r - 1]
+                    src_have = rdy if r == 0 else have[r - 1]
+                    xs = max(src_have, src_free, busy[r])
                     xe = xs + ts
                     if r == 0:
                         buf_free = xe
                     else:
-                        free[r - 1] = xe
+                        busy[r - 1] = xe
                     have[r] = xe
                     cend = xe + tc
-                    free[r] = cend
+                    busy[r] = cend
+                    last_use = max(last_use, cend)
                     end = max(end, cend)
+                frees.append(last_use)
     return end

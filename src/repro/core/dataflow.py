@@ -44,11 +44,25 @@ PL pipeline-fill cycles per block; both are modeled (and are what the cycle
 simulator checks beyond steady state).
 
 Off-chip memory (``mem`` argument, see ``memory.py``): weight/activation
-streaming stops being free in time. The steady round time becomes
-roofline-style max(compute round, streamed bits per round / DRAM BW); at
-GEMM level that is total = max(rounds * round_c, streamed_bits / BW) + fill.
-``mem=None`` (and the infinite-bandwidth ``memory.IDEAL``) reproduce the
-pre-memory numbers bit-exactly.
+streaming stops being free in time. Each round's bundle (weight bits + the
+round's activation share) crosses the DRAM port in F =
+``memory.round_fetch_cycles`` cycles, through a prefetch FIFO of
+``DesignPoint.PF`` round-bundles. The steady round time is the max-plus
+critical-circuit mean
+
+    round = max(on-chip round, F, (F + L) / PF)
+
+where L = ``round_port_latency`` is the variant's data-ready -> slot-free
+latency (the FIFO circuit: a bundle's slot frees only after its round's
+last consumption event, PF rounds of slots exist, and refilling one takes
+F). PF = inf drops the FIFO term (the PR 2 unbounded-FIFO model); PF = 1
+serializes fetch behind use (round = max(on-chip, F + L)). At GEMM level
+the steady portion accumulates per round — total = rounds * round + fill —
+matching what the event simulators measure round by round (NOT the old
+continuous GEMM-total division streamed_bits / BW, which under-charged
+ceil rounding and mis-shared the port). ``mem=None`` (and the
+infinite-bandwidth ``memory.IDEAL``) reproduce the pre-memory numbers
+bit-exactly.
 """
 from __future__ import annotations
 
@@ -80,10 +94,11 @@ class DataflowTiming(NamedTuple):
     weight_bits: jnp.ndarray       # weight traffic into the array (bits)
     act_bits: jnp.ndarray          # activation traffic into the array (bits)
     rounds: jnp.ndarray            # number of (row-compute + update) rounds
-    dram_cycles: jnp.ndarray       # cycles to stream all traffic at DRAM BW
-                                   # (0 without a memory model; the design is
-                                   # memory-bound where this exceeds the
-                                   # compute-side round cycles)
+    dram_cycles: jnp.ndarray       # cycles the DRAM port is busy streaming
+                                   # round bundles (rounds * ceil'd per-round
+                                   # fetch; 0 without a memory model; the
+                                   # design is memory-bound where this
+                                   # exceeds the compute-side round cycles)
 
 
 def t_c(p: DesignPoint) -> jnp.ndarray:
@@ -101,12 +116,37 @@ def block_cycles_macro(p: DesignPoint) -> jnp.ndarray:
     return jnp.where(p.OL > 0.5, p.LSL * jnp.maximum(tc, ts), p.LSL * (tc + ts))
 
 
+def round_port_latency(p: DesignPoint) -> jnp.ndarray:
+    """L: cycles from a round bundle becoming data-ready (fetch complete)
+    to its FIFO slot freeing (the round's last consumption event), when
+    the port is the binding resource. Per variant (derivations in the
+    cycle_sim.py event rules — the path ready(j) -> free(j)):
+
+      WS-Broadcast   the column bus wave rewrites BR macros serially:
+                     free = ready + BR*T_s.
+      WS-Systolic    each macro rewrites its own row: free = ready + T_s.
+      OS-Broadcast   broadcast (T_s) then the row's compute (T_c):
+                     free = ready + T_s + T_c.
+      OS-Systolic-OL the row pipelines through BR hops, then the last
+                     row computes: free = ready + BR*T_s + T_c.
+      OS-Systolic-NOL each hop serializes receive + compute:
+                     free = ready + BR*(T_c + T_s).
+    """
+    tc, ts = t_c(p), t_s(p)
+    ws = jnp.where(p.interconnect == BROADCAST, p.BR * ts, ts)
+    os_b = tc + ts
+    os_s = jnp.where(p.OL > 0.5, p.BR * ts + tc, p.BR * (tc + ts))
+    os = jnp.where(p.interconnect == BROADCAST, os_b, os_s)
+    return jnp.where(p.dataflow == WS, ws, os)
+
+
 def round_cycles(p: DesignPoint, mem: MemoryConfig | None = None) -> jnp.ndarray:
     """Steady-state cycles of one (compute one weight row + make its update
     happen) round, per the 8-variant table above. With a memory model the
-    DRAM port must also deliver the round's weight bits: the steady round
-    is max(on-chip round, per-round fetch cycles) — the roofline the event
-    simulators reproduce once their fetch gate binds."""
+    DRAM port must also deliver the round's bundle (weight + act bits)
+    through the PF-deep prefetch FIFO: the steady round is the max-plus
+    critical-circuit mean max(on-chip round, F, (F + L) / PF) — the
+    roofline the event simulators reproduce once their fetch gate binds."""
     tc, ts = t_c(p), t_s(p)
     ws_b = jnp.where(p.OL > 0.5, jnp.maximum(tc, p.BR * ts), tc + p.BR * ts)
     ws_s = jnp.where(p.OL > 0.5, jnp.maximum(tc, ts), tc + ts)
@@ -119,7 +159,17 @@ def round_cycles(p: DesignPoint, mem: MemoryConfig | None = None) -> jnp.ndarray
     base = jnp.where(p.dataflow == WS, ws, os)
     if mem is None:
         return base
-    return jnp.maximum(base, round_fetch_cycles(p, mem))
+    F = round_fetch_cycles(p, mem)
+    # FIFO feedback circuit: refetch a slot (F) + drain it (L) every PF
+    # rounds. PF is a power of two so the division is float-exact; the
+    # whole term vanishes at F = 0 (infinite BW: the port never gates, so
+    # a finite FIFO cannot bind either — bit-exact with mem=None).
+    fifo = jnp.where(
+        F > 0.0,
+        (F + round_port_latency(p)) / jnp.maximum(jnp.asarray(p.PF, F.dtype), 1.0),
+        0.0,
+    )
+    return jnp.maximum(base, jnp.maximum(F, fifo))
 
 
 def steady_pass_cycles(p: DesignPoint, mem: MemoryConfig | None = None) -> jnp.ndarray:
@@ -152,14 +202,17 @@ def gemm_timing(p: DesignPoint, g: Gemm,
     All tile counts are ceilings — edge-tile waste shows up as utilization
     loss exactly as it would on silicon.
 
-    With ``mem``, the streamed weight + activation traffic must also cross
-    the DRAM port: the steady portion becomes the roofline
-    max(rounds * round_c, streamed_bits / BW) — bandwidth-bound designs
-    report utilization < 1 against the same ideal_cycles floor. The
-    infinite-bandwidth limit is bit-exact with ``mem=None``.
+    With ``mem``, each round's bundle (weight + act bits) must also cross
+    the DRAM port through the PF-deep prefetch FIFO: the steady portion
+    accumulates the per-round roofline, rounds * max(round_c, F, (F+L)/PF)
+    — exactly what the event simulators charge round by round, so
+    ``steady_pass_cycles`` and this GEMM total agree on the modeled
+    quantity. Bandwidth-bound designs report utilization < 1 against the
+    same ideal_cycles floor. The infinite-bandwidth limit is bit-exact
+    with ``mem=None``.
     """
     tc = t_c(p)
-    round_c = round_cycles(p)
+    round_c = round_cycles(p, mem)
     fill = _fill_cycles(p)
 
     # ---- WS mapping: rows->K (AL each), cols->N (PC*LSL each), M->TL blocks.
@@ -191,13 +244,12 @@ def gemm_timing(p: DesignPoint, g: Gemm,
     wbits = jnp.where(is_ws, ws_wbits, os_wbits)
     abits = jnp.where(is_ws, ws_abits, os_abits)
 
-    steady = rounds * round_c
+    steady = rounds * round_c  # round_c already includes the port roofline
     if mem is None:
         dram = jnp.zeros_like(steady)
     else:
-        # roofline: the streamed traffic must cross the DRAM port
-        dram = (wbits + abits) / mem.dram_bw_bits_per_cycle
-        steady = jnp.maximum(steady, dram)
+        # port-busy cycles: every round's bundle crosses the DRAM port
+        dram = rounds * round_fetch_cycles(p, mem)
     total = (steady + fill_part) * g.count
     compute = rounds * tc * g.count
 

@@ -34,6 +34,12 @@ BC_CHOICES = tuple(range(1, 65))
 DATAFLOW_CHOICES = (WS, OS)
 INTERCONNECT_CHOICES = (BROADCAST, SYSTOLIC)
 TL_CHOICES = (8, 16, 32, 64, 128, 256, 512)
+# Prefetch-FIFO depth in round-bundles between the DRAM port and the array
+# (memory.py's timing rules). Powers of two so that the FIFO feedback period
+# always divides an integer number of block passes (LSL is also a power of
+# two), keeping the measured steady per-pass cost exactly representable;
+# inf = the unbounded-FIFO idealization of the PR 2 memory model.
+PF_CHOICES = (1.0, 2.0, 4.0, 8.0, float("inf"))
 
 WBW = 8  # weight bitwidth (paper: fixed 8)
 IBW = 8  # input bitwidth (paper: fixed 8)
@@ -53,6 +59,9 @@ class DesignPoint(NamedTuple):
     TL: jnp.ndarray  # activation tile length (schedule)
     dataflow: jnp.ndarray  # WS / OS
     interconnect: jnp.ndarray  # BROADCAST / SYSTOLIC
+    # prefetch_rounds: DRAM-side prefetch FIFO depth in round-bundles
+    # (inf = unbounded). Only observable under a finite memory model.
+    PF: jnp.ndarray = float("inf")
 
     @property
     def batch_shape(self):
@@ -66,11 +75,13 @@ class DesignPoint(NamedTuple):
 
 
 def make_point(
-    AL=64, LSL=2, PC=32, PL=3, OL=0, BR=2, BC=4, TL=64, dataflow=WS, interconnect=SYSTOLIC
+    AL=64, LSL=2, PC=32, PL=3, OL=0, BR=2, BC=4, TL=64, dataflow=WS, interconnect=SYSTOLIC,
+    PF=float("inf"),
 ) -> DesignPoint:
     f = lambda v: jnp.asarray(v, dtype=jnp.float32)
     return DesignPoint(
-        f(AL), f(LSL), f(PC), f(PL), f(OL), f(BR), f(BC), f(TL), f(dataflow), f(interconnect)
+        f(AL), f(LSL), f(PC), f(PL), f(OL), f(BR), f(BC), f(TL), f(dataflow), f(interconnect),
+        f(PF),
     )
 
 
@@ -109,6 +120,12 @@ def is_valid(p: DesignPoint, mem=None) -> jnp.ndarray:
     ok &= (p.PL >= 0) & (p.PL <= max(PL_CHOICES))
     ok &= (p.BR >= 1) & (p.BR <= 64) & (p.BC >= 1) & (p.BC <= 64)
     ok &= (p.TL >= min(TL_CHOICES)) & (p.TL <= max(TL_CHOICES))
+    # PF: a power of two >= 1, or inf (unbounded). The steady-measurement
+    # normalization and the (F+L)/PF roofline are float-exact only for
+    # power-of-two depths (LSL is also one), so other values are invalid.
+    pf_fin = jnp.where(jnp.isfinite(p.PF), jnp.maximum(p.PF, 1.0), 1.0)
+    pf_pow2 = pf_fin == jnp.exp2(jnp.round(jnp.log2(pf_fin)))
+    ok &= (p.PF >= 1) & (jnp.isinf(p.PF) | pf_pow2)
     ok &= p.PC * p.AL <= 65536
     if mem is not None:
         from .memory import fits_buffers  # local import: memory imports this module
@@ -132,6 +149,7 @@ _GRIDS = {
     "TL": TL_CHOICES,
     "dataflow": DATAFLOW_CHOICES,
     "interconnect": INTERCONNECT_CHOICES,
+    "PF": PF_CHOICES,
 }
 
 
@@ -162,6 +180,9 @@ def enumerate_grid(**fixed) -> DesignPoint:
     coarse = dict(_GRIDS)
     coarse["BR"] = (1, 2, 4, 8, 12, 16, 24, 32, 48, 64)
     coarse["BC"] = (1, 2, 4, 8, 12, 16, 24, 32, 48, 64)
+    # prefetch depth only matters under a finite memory model; keep the
+    # exhaustive walk at the two extremes unless explicitly pinned wider
+    coarse["PF"] = (1.0, float("inf"))
     axes = []
     names = list(coarse.keys())
     for name in names:

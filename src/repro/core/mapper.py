@@ -7,9 +7,11 @@ per-core latency. Power and area scale by core count; the scalarized QoR is
 latency^2 * power * area (per core, as Table 3 reports per-core power/area).
 
 With a memory model (``mem``, see memory.py), GEMMs are additionally tiled
-so each tile's weight working set fits the global weight buffer
-(``tile_gemms_for_memory``), and the evaluation charges DRAM bandwidth and
-access energy.
+so each tile's weight working set fits the global weight buffer and its
+activation working set fits the global activation buffer
+(``tile_gemms_for_memory``), and the evaluation charges DRAM bandwidth
+(weight + activation round bundles through the prefetch FIFO) and access
+energy.
 """
 from __future__ import annotations
 
@@ -20,7 +22,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from .dataflow import Gemm
-from .design_space import WBW, DesignPoint
+from .design_space import IBW, WBW, DesignPoint
 from .memory import MemoryConfig
 from .ppa import ArrayPPA, evaluate_workload, qor_objective
 from .workload import dedupe_gemms, model_gemms
@@ -41,28 +43,52 @@ def split_gemms_across_cores(gemms: list[Gemm], n_cores: int) -> list[Gemm]:
 
 
 def tile_gemm_for_memory(g: Gemm, mem: MemoryConfig) -> Gemm:
-    """Capacity-aware tiling: split a GEMM along N (and K if a single
-    output column's weight stripe still overflows) until each tile's
-    weight working set K_i * N_j * WBW fits the global weight buffer.
+    """Capacity-aware tiling: split a GEMM until each tile's weight working
+    set K_i * N_j * WBW fits the global weight buffer AND its activation
+    working set M_i * K_i * IBW fits the global activation buffer.
 
-    N splits first — they are free of partial-sum recombination; K splits
-    are the last resort (the recombination adds are charged to the array's
-    existing accumulate path, not modeled separately). Splits are exact
-    fractions so total MACs are conserved identically:
-    M * (K/nk) * (N/nn) * (count*nk*nn) == M*K*N*count.
+    Weight buffer: N splits first — they are free of partial-sum
+    recombination; K splits are the last resort (the recombination adds are
+    charged to the array's existing accumulate path, not modeled
+    separately). When even a single output column overflows, ``nk`` is
+    recomputed against the *actual* tile width N/nn (upstream splits can
+    leave a fractional N, so one "column tile" may be wider than one
+    column). Activation buffer: M splits first (free — tokens are
+    independent), K splits as the last resort; a K split for activations
+    also shrinks the weight tile, never growing it.
+
+    Splits are exact fractions so total MACs are conserved identically:
+    (M/nm) * (K/nk) * (N/nn) * (count*nm*nk*nn) == M*K*N*count.
     Returns the (possibly identical) tiled GEMM.
     """
-    cap = float(mem.weight_buf_bits)
-    wbits = g.K * g.N * WBW
-    if not math.isfinite(cap) or wbits <= cap:
+    wcap = float(mem.weight_buf_bits)
+    K, N = g.K, g.N
+    nn = nk = 1
+    wbits = K * N * WBW
+    if math.isfinite(wcap) and wbits > wcap:
+        nn = math.ceil(wbits / wcap)
+        if nn > N:
+            # even single columns overflow: one column per tile, then split
+            # K sized for the actual tile width (N/nn may exceed one column
+            # when N is fractional from upstream splits)
+            nn = max(math.ceil(N), 1)
+            nk = max(math.ceil(K * (N / nn) * WBW / wcap), 1)
+
+    acap = float(mem.act_buf_bits)
+    M, nm = g.M, 1
+    abits = M * (K / nk) * IBW
+    if math.isfinite(acap) and abits > acap:
+        nm = math.ceil(abits / acap)
+        if nm > M:
+            # even single token rows overflow: one row per tile, deepen the
+            # K split for the actual tile height M/nm
+            nm = max(math.ceil(M), 1)
+            nk2 = max(math.ceil((M / nm) * (K / nk) * IBW / acap), 1)
+            nk *= nk2
+
+    if nn == nk == nm == 1:
         return g
-    nn = math.ceil(wbits / cap)
-    if nn <= g.N:
-        return Gemm(g.M, g.K, g.N / nn, g.count * nn)
-    # even single columns overflow: one column per tile, split K too
-    nn = max(int(g.N), 1)
-    nk = max(math.ceil(g.K * WBW / cap), 1)
-    return Gemm(g.M, g.K / nk, g.N / nn, g.count * nn * nk)
+    return Gemm(M / nm, K / nk, N / nn, g.count * nm * nk * nn)
 
 
 def tile_gemms_for_memory(gemms: list[Gemm], mem: MemoryConfig | None) -> list[Gemm]:

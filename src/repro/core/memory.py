@@ -32,20 +32,33 @@ Parameter mapping to the paper's on/off-chip discussion:
 
 Timing model (threaded through the three-level fidelity chain):
 
-  * Closed forms (``dataflow.py``): roofline-style — the steady round time
-    becomes max(compute round, streamed bits per round / BW).
-  * Event simulators (``cycle_sim.py`` / ``cycle_sim_jax.py``): the DRAM
-    port is an explicit resource that streams each round's weight bits in
-    round order, fully pipelined (a deep-enough prefetch FIFO decouples it
-    from the array): round j's weight rewrite cannot start before
-    (j+1) * ceil(round_weight_bits / BW) cycles. Fill/stall behavior is
-    therefore *simulated*, and ``dse.fidelity_sweep(mem=...)``
-    cross-validates the two at population scale exactly as PR 1 did for
-    the infinite-bandwidth regime.
+  * The DRAM port streams *round bundles* in round order: each round's
+    weight bits (``round_weight_bits``) AND its share of the activation
+    traffic (``round_act_bits``) cross the same port, so the per-round
+    fetch latency is F = ceil((weight + act bits) / BW)
+    (``round_fetch_cycles``). Activations are therefore a first-class
+    port resource, not a free rider — the regime where the memory-bound
+    Table 3 rows get their numbers.
+  * The port fills a prefetch FIFO of ``DesignPoint.PF`` round-bundles
+    (the ``prefetch_rounds`` design axis). Fetching bundle j cannot start
+    before bundle j-PF's slot frees, i.e. before round j-PF's last
+    consumption event. PF = inf recovers the unbounded-FIFO gate
+    fetch(j) = (j+1) * F bit-exactly; PF = 1 serializes each fetch behind
+    the previous round's use.
+  * Closed forms (``dataflow.py``): the steady round time is the max-plus
+    critical-circuit mean max(compute round, F, (F + L) / PF) where L is
+    the variant's data-ready -> slot-free latency
+    (``dataflow.round_port_latency``).
+  * Event simulators (``cycle_sim.py`` / ``cycle_sim_jax.py``): the port +
+    FIFO are explicit event resources executing exactly the rules above,
+    bit-exact numpy vs JAX; ``dse.fidelity_sweep(mem=...)`` cross-validates
+    simulators vs closed forms at population scale in the ideal,
+    weight-bandwidth-bound, activation-bound, and shallow-prefetch regimes.
 
 The infinite-bandwidth / infinite-capacity limit (``IDEAL``, the default
 everywhere) is bit-exact with the pre-memory model: the fetch gate is 0
-cycles, no tiling splits occur, and no DRAM energy is charged.
+cycles, the FIFO never binds, no tiling splits occur, and no DRAM energy
+is charged.
 """
 from __future__ import annotations
 
@@ -121,15 +134,31 @@ def round_weight_bits(p: DesignPoint) -> jnp.ndarray:
     return rows * row_bits
 
 
+def round_act_bits(p: DesignPoint) -> jnp.ndarray:
+    """Activation bits the DRAM port must deliver per round — the act
+    traffic of one tile pass spread over the rounds that consume it.
+
+    OS: K advances by AL every round, so each round streams a fresh
+    TL x AL block for each of the BR row-macros (= ``resident_act_bits``).
+    WS: the TL x (BR*AL) activation block is shared by the LSL rounds of a
+    block pass, so each round carries 1/LSL of it. TL*AL*IBW is a power of
+    two >= 512 and LSL <= 64, so the WS share is always integer-valued.
+    """
+    per_pass = p.TL * p.BR * p.AL * IBW
+    return jnp.where(p.dataflow == OS, per_pass, per_pass / p.LSL)
+
+
 def round_fetch_cycles(p: DesignPoint, mem: MemoryConfig) -> jnp.ndarray:
-    """Cycles the DRAM port needs to deliver one round's weight bits —
-    the per-round fetch latency F gating the event simulators and the
-    bandwidth term of the closed-form steady round max(round_c, F).
+    """Cycles the DRAM port needs to deliver one round's bundle (weight
+    bits + the round's activation share) — the per-round fetch latency F
+    gating the event simulators and the bandwidth term of the closed-form
+    steady round max(round_c, F, (F + L) / PF).
 
     Integer-valued (ceil) so event times stay exactly representable in the
     float32 batched simulator; 0 when bandwidth is infinite.
     """
-    return jnp.ceil(round_weight_bits(p) / mem.dram_bw_bits_per_cycle)
+    bits = round_weight_bits(p) + round_act_bits(p)
+    return jnp.ceil(bits / mem.dram_bw_bits_per_cycle)
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,8 @@ class ArrayPPA(NamedTuple):
     eff_tops: jnp.ndarray         # effective throughput on the workload
     tops_per_watt: jnp.ndarray
     tops_per_mm2: jnp.ndarray
+    dram_cycles: jnp.ndarray = 0.0  # DRAM-port busy cycles streaming round
+                                    # bundles (0 without a memory model)
 
 
 def n_macros(p: DesignPoint) -> jnp.ndarray:
@@ -92,9 +94,11 @@ def evaluate_workload(p: DesignPoint, gemms: list[Gemm],
       DRAM access energy          = mem.e_dram_bit * streamed bits (mem only)
       leakage                     = P_leak * latency
 
-    ``mem`` additionally bounds the timing by DRAM bandwidth (see
-    ``dataflow.gemm_timing``); the infinite-bandwidth zero-energy limit is
-    bit-exact with ``mem=None``.
+    ``mem`` additionally bounds the timing by DRAM bandwidth and prefetch
+    depth — every round's weight + activation bundle crosses the port
+    through the PF-deep FIFO (see ``dataflow.gemm_timing``) — and reports
+    the port-busy cycles as ``dram_cycles``; the infinite-bandwidth
+    zero-energy limit is bit-exact with ``mem=None``.
     """
     timing: DataflowTiming = workload_timing(p, gemms, mem)
     f = mm.frequency(p)
@@ -129,6 +133,7 @@ def evaluate_workload(p: DesignPoint, gemms: list[Gemm],
         eff_tops=eff,
         tops_per_watt=eff / jnp.maximum(power, 1e-12),
         tops_per_mm2=eff / jnp.maximum(area, 1e-12),
+        dram_cycles=timing.dram_cycles,
     )
 
 
@@ -148,6 +153,7 @@ def evaluate_peak(p: DesignPoint) -> ArrayPPA:
         utilization=one, eff_tops=peak,
         tops_per_watt=peak / jnp.maximum(power, 1e-12),
         tops_per_mm2=peak / jnp.maximum(area, 1e-12),
+        dram_cycles=jnp.zeros_like(f),
     )
 
 
