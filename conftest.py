@@ -1,19 +1,28 @@
 """Repo-level pytest config.
 
 The tier-1 suite uses hypothesis for property-based tests. Hermetic
-containers may not have it; rather than letting 4 of 9 test modules die at
+containers may not have it; rather than letting test modules die at
 collection with ``ModuleNotFoundError``, install a minimal deterministic
-shim into ``sys.modules`` that supports the exact subset the suite uses:
+shim into ``sys.modules`` that supports the exact subset the suite (and
+``tests/strategies.py``, the shared strategy toolkit) uses:
 
     from hypothesis import given, settings, strategies as st
     @given(st.sampled_from([...]), x=st.integers(lo, hi),
-           xs=st.lists(st.tuples(...), min_size=..., max_size=...))
+           xs=st.lists(st.tuples(...), min_size=..., max_size=...),
+           p=st.one_of(st.just(a), st.sampled_from(b)).map(f))
     @settings(max_examples=N, deadline=None)
 
 The shim enumerates the cartesian product of finite strategies when it fits
 inside ``max_examples`` and otherwise draws deterministically from a
 per-test seeded PRNG, so runs are reproducible. With the real hypothesis
 installed (``pip install -r requirements-dev.txt``) the shim is inert.
+
+The documented per-strategy semantics (draw bounds, enumerate_finite
+behavior, determinism, the given/settings contract) are pinned by
+``tests/test_conftest_shim.py`` so the shim cannot silently diverge from
+real hypothesis as the suites grow; ``_build_hypothesis_shim`` is separate
+from the installer so that parity suite can exercise the shim even when
+real hypothesis is present.
 """
 from __future__ import annotations
 
@@ -25,7 +34,10 @@ import types
 import zlib
 
 
-def _install_hypothesis_shim() -> None:
+def _build_hypothesis_shim() -> tuple[types.ModuleType, types.ModuleType]:
+    """Construct (hypothesis, hypothesis.strategies) shim modules without
+    touching ``sys.modules`` (see ``_install_hypothesis_shim``)."""
+
     class _Strategy:
         def draw(self, rng):  # pragma: no cover - interface
             raise NotImplementedError
@@ -33,6 +45,22 @@ def _install_hypothesis_shim() -> None:
         def enumerate_finite(self):
             """Return the finite choice list, or None if too large/infinite."""
             return None
+
+        def map(self, fn):
+            """Real-hypothesis parity: strategy.map(f) draws x and yields
+            f(x); a finite enumeration maps through f elementwise."""
+            return _Mapped(self, fn)
+
+    class _Mapped(_Strategy):
+        def __init__(self, inner, fn):
+            self.inner, self.fn = inner, fn
+
+        def draw(self, rng):
+            return self.fn(self.inner.draw(rng))
+
+        def enumerate_finite(self):
+            inner = self.inner.enumerate_finite()
+            return None if inner is None else [self.fn(x) for x in inner]
 
     class _SampledFrom(_Strategy):
         def __init__(self, elements):
@@ -45,6 +73,34 @@ def _install_hypothesis_shim() -> None:
 
         def enumerate_finite(self):
             return self.elements
+
+    class _Just(_Strategy):
+        def __init__(self, value):
+            self.value = value
+
+        def draw(self, rng):
+            return self.value
+
+        def enumerate_finite(self):
+            return [self.value]
+
+    class _OneOf(_Strategy):
+        def __init__(self, *parts):
+            if not parts:
+                raise ValueError("one_of requires at least one strategy")
+            self.parts = list(parts)
+
+        def draw(self, rng):
+            return rng.choice(self.parts).draw(rng)
+
+        def enumerate_finite(self):
+            out = []
+            for p in self.parts:
+                e = p.enumerate_finite()
+                if e is None:
+                    return None
+                out.extend(e)
+            return out
 
     class _Integers(_Strategy):
         def __init__(self, min_value, max_value):
@@ -167,6 +223,8 @@ def _install_hypothesis_shim() -> None:
     st_mod.floats = _Floats
     st_mod.tuples = _Tuples
     st_mod.lists = _Lists
+    st_mod.just = _Just
+    st_mod.one_of = _OneOf
 
     hyp_mod = types.ModuleType("hypothesis")
     hyp_mod.given = given
@@ -178,7 +236,11 @@ def _install_hypothesis_shim() -> None:
     )
     hyp_mod.__version__ = "0.0.0-shim"
     hyp_mod.__shim__ = True
+    return hyp_mod, st_mod
 
+
+def _install_hypothesis_shim() -> None:
+    hyp_mod, st_mod = _build_hypothesis_shim()
     sys.modules["hypothesis"] = hyp_mod
     sys.modules["hypothesis.strategies"] = st_mod
 

@@ -4,12 +4,15 @@ dataflow for LLaMA-3-8B prefill with Bayesian optimization.
 
     PYTHONPATH=src python examples/dse_llama3.py [--model llama3-8b]
         [--cores 4] [--seq 8192] [--budget small]
+        [--mem lpddr5 --schedule]   # per-GEMM prefetch-depth scheduling
 """
 import argparse
 
 import jax
+import numpy as np
 
 from repro.configs import REGISTRY, get_config
+from repro.core import memory as core_memory
 from repro.core.dse import DataflowName, optimize_for_model
 
 
@@ -22,17 +25,27 @@ def main():
     ap.add_argument("--seq", type=int, default=8192)
     ap.add_argument("--tops-cap", type=float, default=40.0)
     ap.add_argument("--budget", default="small", choices=["small", "full"])
+    ap.add_argument("--mem", default="ideal", choices=["ideal", "lpddr5"],
+                    help="off-chip hierarchy: ideal (the paper's "
+                         "idealization) or the LPDDR5-class preset")
+    ap.add_argument("--schedule", action="store_true",
+                    help="score candidates with per-GEMM effective prefetch "
+                         "depths under their PF capacity (schedule layer)")
     args = ap.parse_args()
 
     cfg = get_config(args.model)
+    mem = core_memory.LPDDR5 if args.mem == "lpddr5" else None
     bo = (dict(n_init=48, n_iters=10, acq_batch=4, pool=512) if args.budget == "small"
           else dict(n_init=128, n_iters=32, acq_batch=8, pool=2048))
 
     print(f"optimizing {args.model} prefill (seq={args.seq}, {args.cores} cores, "
-          f"<= {args.tops_cap} TOPS/core), objective latency^2*power*area ...")
+          f"<= {args.tops_cap} TOPS/core, mem={args.mem}"
+          f"{', per-GEMM scheduled' if args.schedule else ''}), "
+          f"objective latency^2*power*area ...")
     best, qor, (x, y) = optimize_for_model(
         jax.random.key(0), cfg, n_cores=args.cores, batch=1, seq=args.seq,
-        peak_tops_cap=args.tops_cap, method="bayes", **bo)
+        peak_tops_cap=args.tops_cap, method="bayes", mem=mem,
+        schedule=args.schedule, **bo)
 
     dfn = DataflowName(int(best.dataflow), int(best.interconnect), int(best.OL))
     print(f"\nbest dataflow: {dfn.label}")
@@ -42,6 +55,20 @@ def main():
     print(f"area     {float(qor.area_mm2):10.3f} mm^2 (per core)")
     print(f"util     {float(qor.utilization):10.2%}")
     print(f"{int((y < 1e30).sum())} of {y.shape[0]} evaluated points were feasible")
+
+    if args.schedule:
+        # report the per-GEMM effective depths the schedule layer chose for
+        # the best design (PF is the FIFO capacity; pf_g <= PF per GEMM)
+        from repro.core.mapper import per_core_gemms
+        from repro.core.schedule import schedule_gemms
+
+        gemms = per_core_gemms(cfg, n_cores=args.cores, batch=1,
+                               seq=args.seq, mode="prefill", mem=mem)
+        sched = schedule_gemms(best, gemms, mem)
+        print(f"\nPF capacity {float(best.PF):g}; scheduled per-GEMM depths:")
+        for g, pf in zip(gemms, np.asarray(sched.pf)):
+            print(f"  M={g.M:>9.1f} K={g.K:>9.1f} N={g.N:>9.1f} "
+                  f"x{g.count:<6.1f} -> pf={pf:g}")
     print("\npaper's Table 3 row for reference: llama3-8b @8192, 4 cores ->"
           " OS-Systolic-OL, 886.272 ms, 0.994 W, 2.824 mm^2")
 

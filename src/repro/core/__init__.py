@@ -1,31 +1,36 @@
 """AccelCIM core: the paper's dataflow design space, evaluators, and DSE."""
 from . import (bayesopt, cycle_sim, cycle_sim_jax, dataflow, design_space,
-               dse, macro_model, mapper, memory, pareto, ppa, workload)
+               dse, macro_model, mapper, memory, pareto, ppa, schedule,
+               workload)
 from .cycle_sim import SimResult
 from .cycle_sim_jax import simulate_batched
-from .dataflow import (DataflowTiming, Gemm, gemm_timing, round_cycles,
-                       steady_pass_cycles, workload_timing)
+from .dataflow import (DataflowTiming, Gemm, gemm_rounds, gemm_timing,
+                       round_cycles, steady_pass_cycles, workload_timing)
 from .design_space import (BROADCAST, OS, SYSTOLIC, WS, DesignPoint,
                            enumerate_grid, is_valid, make_point, sample_random)
 from .dse import (ALL_DATAFLOWS, DataflowName, dataflow_pareto_sweep,
-                  fidelity_sweep, optimize_for_model)
+                  fidelity_sweep, optimize_for_model,
+                  scheduled_fidelity_sweep)
 from .mapper import EngineQoR, evaluate_model, tile_gemms_for_memory
 from .memory import IDEAL, LPDDR5, MemoryConfig, make_memory
 from .pareto import pareto_front, pareto_mask
 from .ppa import ArrayPPA, evaluate_peak, evaluate_workload, qor_objective
+from .schedule import Schedule, schedule_gemms, scheduled_workload_timing
 
 __all__ = [
     "bayesopt", "cycle_sim", "cycle_sim_jax", "dataflow", "design_space",
-    "dse", "macro_model", "mapper", "memory", "pareto", "ppa", "workload",
+    "dse", "macro_model", "mapper", "memory", "pareto", "ppa", "schedule",
+    "workload",
     "SimResult", "simulate_batched",
-    "DataflowTiming", "Gemm", "gemm_timing", "round_cycles",
+    "DataflowTiming", "Gemm", "gemm_rounds", "gemm_timing", "round_cycles",
     "steady_pass_cycles", "workload_timing",
     "BROADCAST", "OS", "SYSTOLIC", "WS", "DesignPoint", "enumerate_grid",
     "is_valid", "make_point", "sample_random",
     "ALL_DATAFLOWS", "DataflowName", "dataflow_pareto_sweep",
-    "fidelity_sweep", "optimize_for_model",
+    "fidelity_sweep", "optimize_for_model", "scheduled_fidelity_sweep",
     "EngineQoR", "evaluate_model", "tile_gemms_for_memory",
     "IDEAL", "LPDDR5", "MemoryConfig", "make_memory",
     "pareto_front", "pareto_mask",
     "ArrayPPA", "evaluate_peak", "evaluate_workload", "qor_objective",
+    "Schedule", "schedule_gemms", "scheduled_workload_timing",
 ]

@@ -70,6 +70,11 @@ Finite PF makes the steady state periodic over PF rounds, not 1, so the
 steady per-pass cost is measured over m block passes with m*LSL a multiple
 of PF (``measure_passes``; PF and LSL are powers of two, so m = PF /
 gcd(PF, LSL) and the /m normalization is float-exact).
+
+Per-GEMM prefetch-depth schedules (``schedule.py``) reuse these exact
+rules unchanged: ``simulate_scheduled`` runs one segment per GEMM at that
+GEMM's effective depth and stitches the totals, the port and array
+draining at each GEMM boundary.
 """
 from __future__ import annotations
 
@@ -106,6 +111,31 @@ def measure_passes(LSL: int, D: int | None) -> int:
     if D is None:
         return 1
     return D // math.gcd(D, LSL)
+
+
+def simulate_scheduled(p: DesignPoint, depths, n_passes,
+                       mem: MemoryConfig | None = None) -> SimResult:
+    """Per-GEMM prefetch depths (the schedule layer's contract): run one
+    segment per GEMM at its own FIFO depth and stitch the totals — the
+    array and the DRAM port drain at GEMM boundaries, so fill/drain is
+    charged per segment, exactly the accumulation
+    ``schedule.scheduled_workload_timing`` performs on the closed forms.
+
+    ``depths`` is a sequence of per-GEMM depths (floats; inf = unbounded);
+    ``n_passes`` is an int (shared) or a matching sequence of per-GEMM
+    block-pass counts. ``per_pass_steady`` is the *sum* of the segments'
+    steady per-pass costs (one block pass of every GEMM), validated
+    against sum_g LSL * round_cycles(p at pf_g)."""
+    depths = list(depths)
+    if np.ndim(n_passes) == 0:
+        n_passes = [int(n_passes)] * len(depths)
+    tot = pps = busy = 0.0
+    for pf, n in zip(depths, n_passes):
+        r = simulate(p._replace(PF=float(pf)), int(n), mem=mem)
+        tot += r.total_cycles
+        pps += r.per_pass_steady
+        busy += r.compute_busy
+    return SimResult(total_cycles=tot, per_pass_steady=pps, compute_busy=busy)
 
 
 def simulate(p: DesignPoint, n_passes: int,

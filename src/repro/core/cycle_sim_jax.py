@@ -560,6 +560,34 @@ def simulate_batched(p: DesignPoint, n_passes,
     )
 
 
+def simulate_scheduled(p: DesignPoint, depths, n_passes,
+                       mem: MemoryConfig | None = None) -> SimResult:
+    """Batched per-GEMM prefetch-depth schedules: GEMM g's segment is
+    dispatched to the static-depth-specialized runners at depth
+    ``depths[g]`` (``simulate_batched`` already buckets a mixed-depth
+    population per distinct depth) and the totals stitched — the array
+    and DRAM port drain at GEMM boundaries, mirroring
+    ``cycle_sim.simulate_scheduled`` bit-exactly.
+
+    ``depths``: (n_gemms,) or (n_gemms, *batch) effective depths (e.g. a
+    ``schedule.Schedule.pf``). ``n_passes``: int, (n_gemms,), or
+    (n_gemms, *batch) block-pass counts. ``per_pass_steady`` sums the
+    segments' steady per-pass costs (one block pass of every GEMM)."""
+    depths = np.asarray(depths, dtype=np.float32)
+    n_gemms = depths.shape[0]
+    passes = np.asarray(n_passes)
+    if passes.ndim == 0:
+        passes = np.broadcast_to(passes, (n_gemms,))
+    tot = pps = busy = None
+    for gi in range(n_gemms):
+        r = simulate_batched(p._replace(PF=jnp.asarray(depths[gi])),
+                             passes[gi], mem=mem)
+        tot = r.total_cycles if tot is None else tot + r.total_cycles
+        pps = r.per_pass_steady if pps is None else pps + r.per_pass_steady
+        busy = r.compute_busy if busy is None else busy + r.compute_busy
+    return SimResult(total_cycles=tot, per_pass_steady=pps, compute_busy=busy)
+
+
 def simulate(p: DesignPoint, n_passes: int,
              mem: MemoryConfig | None = None) -> SimResult:
     """Scalar-point convenience wrapper returning python floats, API-matched

@@ -195,6 +195,36 @@ def array_macs_per_cycle(p: DesignPoint) -> jnp.ndarray:
     return p.BR * p.BC * p.PC * p.AL / (IBW / 2)
 
 
+def _gemm_tiles(p: DesignPoint, g: Gemm):
+    """Ceiling tile counts of GEMM (M,K,N) for both mapping families.
+
+    WS: rows split K (AL per row), cols split N (PC*LSL per col), M in TL
+    blocks. OS: rows split M (TL per row), cols split N (PC per col), K
+    temporal in AL chunks. Shared by ``gemm_timing`` and ``gemm_rounds`` so
+    the schedule layer and the timing model can never disagree on the tile
+    math."""
+    ws_nk = jnp.ceil(g.K / (p.BR * p.AL))
+    ws_nn = jnp.ceil(g.N / (p.BC * p.PC * p.LSL))
+    ws_nm = jnp.ceil(g.M / p.TL)
+    os_nm = jnp.ceil(g.M / (p.BR * p.TL))
+    os_nn = jnp.ceil(g.N / (p.BC * p.PC))
+    os_kr = jnp.ceil(g.K / p.AL)
+    return (ws_nk, ws_nn, ws_nm), (os_nm, os_nn, os_kr)
+
+
+def gemm_rounds(p: DesignPoint, g: Gemm) -> jnp.ndarray:
+    """Per-instance (count = 1) round count of GEMM g on design p — the
+    length of the round-bundle stream the DRAM port feeds through the
+    prefetch FIFO. The schedule layer compares this against candidate
+    depths: a GEMM of rounds <= pf never takes the FIFO feedback edge
+    free(j - pf) -> fetch(j), so it executes bit-exactly on the unbounded
+    affine gate (see ``schedule.py``)."""
+    (ws_nk, ws_nn, ws_nm), (os_nm, os_nn, os_kr) = _gemm_tiles(p, g)
+    return jnp.where(p.dataflow == WS,
+                     ws_nk * ws_nn * ws_nm * p.LSL,
+                     os_nm * os_nn * os_kr)
+
+
 def gemm_timing(p: DesignPoint, g: Gemm,
                 mem: MemoryConfig | None = None) -> DataflowTiming:
     """End-to-end cycle count of GEMM (M,K,N) on the array described by p.
@@ -215,10 +245,9 @@ def gemm_timing(p: DesignPoint, g: Gemm,
     round_c = round_cycles(p, mem)
     fill = _fill_cycles(p)
 
+    (ws_nk, ws_nn, ws_nm), (os_nm, os_nn, os_kr) = _gemm_tiles(p, g)
+
     # ---- WS mapping: rows->K (AL each), cols->N (PC*LSL each), M->TL blocks.
-    ws_nk = jnp.ceil(g.K / (p.BR * p.AL))
-    ws_nn = jnp.ceil(g.N / (p.BC * p.PC * p.LSL))
-    ws_nm = jnp.ceil(g.M / p.TL)
     ws_tiles = ws_nk * ws_nn * ws_nm
     ws_rounds = ws_tiles * p.LSL
     # traffic: weights restream per activation block (streaming regime);
@@ -228,9 +257,6 @@ def gemm_timing(p: DesignPoint, g: Gemm,
     ws_abits = ws_nn * g.M * g.K * IBW
 
     # ---- OS mapping: rows->M (TL each), cols->N (PC each), K temporal (AL).
-    os_nm = jnp.ceil(g.M / (p.BR * p.TL))
-    os_nn = jnp.ceil(g.N / (p.BC * p.PC))
-    os_kr = jnp.ceil(g.K / p.AL)
     os_rounds = os_nm * os_nn * os_kr
     # traffic: weights restream per M tile (column-shared: one copy per col);
     # activations restream per N tile (row-distinct blocks).

@@ -34,11 +34,13 @@ BC_CHOICES = tuple(range(1, 65))
 DATAFLOW_CHOICES = (WS, OS)
 INTERCONNECT_CHOICES = (BROADCAST, SYSTOLIC)
 TL_CHOICES = (8, 16, 32, 64, 128, 256, 512)
-# Prefetch-FIFO depth in round-bundles between the DRAM port and the array
-# (memory.py's timing rules). Powers of two so that the FIFO feedback period
-# always divides an integer number of block passes (LSL is also a power of
-# two), keeping the measured steady per-pass cost exactly representable;
-# inf = the unbounded-FIFO idealization of the PR 2 memory model.
+# Prefetch-FIFO *capacity* in round-bundles between the DRAM port and the
+# array (memory.py's timing rules). Powers of two so that the FIFO feedback
+# period always divides an integer number of block passes (LSL is also a
+# power of two), keeping the measured steady per-pass cost exactly
+# representable; inf = the unbounded-FIFO idealization of the PR 2 memory
+# model. The schedule layer (schedule.py) may run each GEMM of a workload
+# at a shallower *effective* depth pf_g <= PF chosen from this same menu.
 PF_CHOICES = (1.0, 2.0, 4.0, 8.0, float("inf"))
 
 WBW = 8  # weight bitwidth (paper: fixed 8)
@@ -59,8 +61,9 @@ class DesignPoint(NamedTuple):
     TL: jnp.ndarray  # activation tile length (schedule)
     dataflow: jnp.ndarray  # WS / OS
     interconnect: jnp.ndarray  # BROADCAST / SYSTOLIC
-    # prefetch_rounds: DRAM-side prefetch FIFO depth in round-bundles
-    # (inf = unbounded). Only observable under a finite memory model.
+    # prefetch_rounds: DRAM-side prefetch FIFO *capacity* in round-bundles
+    # (inf = unbounded). Only observable under a finite memory model; the
+    # schedule layer selects per-GEMM effective depths <= this capacity.
     PF: jnp.ndarray = float("inf")
 
     @property

@@ -22,6 +22,7 @@ from .mapper import constrained_objective, evaluate_model
 from .memory import MemoryConfig
 from .pareto import pareto_front
 from .ppa import evaluate_peak, evaluate_workload
+from .schedule import Schedule, schedule_gemms
 
 
 @dataclass
@@ -46,16 +47,48 @@ ALL_DATAFLOWS = [
 ]
 
 
+#: jitted evaluation wrappers keyed on (gemms, mem, mode) so repeated
+#: evaluate_population calls — in particular re-scoring one population at
+#: many externally chosen Schedules — reuse one trace instead of
+#: recompiling per call (jax.jit caches per wrapped-callable object).
+_POP_EVAL_CACHE: dict = {}
+
+
+def _pop_eval_fn(gemms: tuple, mem, mode: str):
+    key = (gemms, mem, mode)
+    fn = _POP_EVAL_CACHE.get(key)
+    if fn is None:
+        if mode == "schedule_arg":
+            fn = jax.jit(lambda p_, s_: evaluate_workload(
+                p_, list(gemms), mem, schedule=s_))
+        else:
+            fn = jax.jit(partial(
+                evaluate_workload, gemms=list(gemms), mem=mem,
+                schedule=True if mode == "scheduled" else None))
+        _POP_EVAL_CACHE[key] = fn
+    return fn
+
+
 def evaluate_population(pop: DesignPoint, gemms: Sequence[Gemm] | None,
-                        mem: MemoryConfig | None = None):
+                        mem: MemoryConfig | None = None,
+                        schedule: Schedule | bool | None = None):
     """Jitted closed-form evaluation of a whole population.
 
     gemms=None -> peak-throughput mode (paper §4.1 'absence of a specific
-    application'). ``mem`` enables the off-chip bandwidth/energy model."""
+    application'). ``mem`` enables the off-chip bandwidth/energy model.
+    ``schedule=True`` evaluates with per-GEMM effective prefetch depths
+    (PF as the FIFO capacity, see ``schedule.py``); a precomputed
+    ``Schedule`` pytree is threaded through the jitted call as a traced
+    argument, so re-scoring a population at externally chosen depths
+    reuses one cached trace instead of recompiling per schedule."""
     if gemms is None:
         fn = jax.jit(evaluate_peak)
         return fn(pop)
-    fn = jax.jit(partial(evaluate_workload, gemms=list(gemms), mem=mem))
+    if isinstance(schedule, Schedule):
+        fn = _pop_eval_fn(tuple(gemms), mem, "schedule_arg")
+        return fn(pop, schedule)
+    fn = _pop_eval_fn(tuple(gemms), mem,
+                      "scheduled" if schedule else "plain")
     return fn(pop)
 
 
@@ -174,6 +207,83 @@ def fidelity_sweep(
     return out
 
 
+def scheduled_fidelity_sweep(
+    key: jax.Array,
+    gemms: Sequence[Gemm] | None = None,
+    n_samples: int = 512,
+    min_passes: int = 3,
+    dataflows: Sequence[DataflowName] = tuple(ALL_DATAFLOWS),
+    mem: MemoryConfig | None = None,
+    fixed: dict | None = None,
+):
+    """``fidelity_sweep`` extended to per-GEMM prefetch-depth schedules —
+    the fifth ``scheduled`` regime of the CI smoke gate.
+
+    For each dataflow variant, samples a population whose PF axis is the
+    FIFO *capacity* (left free so every capacity is exercised), schedules
+    a mixed-size GEMM list (``SMOKE_SCHED_GEMMS`` by default: a tiny
+    decode-style projection, a mid prefill tile, a large MLP-class GEMM)
+    with ``schedule.schedule_gemms``, then validates the batched JAX
+    simulator *at every scheduled depth* against the closed-form steady
+    pass cost at that depth: each GEMM is dispatched to the
+    static-depth-specialized runner for its pf_g (exactly what
+    ``cycle_sim_jax.simulate_scheduled`` does) and the stitched end-to-end
+    totals must stay within the summed per-GEMM fill/drain slack. Points
+    not steady-measurable at one of their scheduled depths are deferred
+    (as in ``fidelity_sweep``; the float64 numpy oracle pins those in
+    tests). Returns the same report shape as ``fidelity_sweep``.
+    """
+    if mem is None:
+        mem = SMOKE_MEM
+    gemms = list(gemms) if gemms is not None else list(SMOKE_SCHED_GEMMS)
+    out = {}
+    for dfn in dataflows:
+        key, k = jax.random.split(key)
+        pop = ds.sample_random(
+            k, n_samples, dataflow=dfn.dataflow, interconnect=dfn.interconnect,
+            OL=dfn.ol, **(fixed or {}),
+        )
+        valid = np.asarray(ds.is_valid(pop, mem))
+        sched = schedule_gemms(pop, gemms, mem)
+        pf = np.asarray(sched.pf)                       # (n_gemms, n)
+
+        measurable = np.ones_like(valid)
+        for gi in range(len(gemms)):
+            pg = pop._replace(PF=jnp.asarray(pf[gi]))
+            measurable &= np.asarray(cycle_sim_jax.steady_measurable(pg, mem=mem))
+        n_deferred = int((valid & ~measurable).sum())
+        valid = valid & measurable
+        popv = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[valid]), pop)
+        pfv = pf[:, valid]
+
+        nv = int(valid.sum())
+        rel = np.zeros((nv,), np.float64)
+        total = np.zeros((nv,), np.float64)
+        expect = np.zeros((nv,), np.float64)
+        slack = np.zeros((nv,), np.float64)
+        for gi in range(len(gemms)):
+            pg = popv._replace(PF=jnp.asarray(pfv[gi]))
+            passes = cycle_sim_jax.steady_state_passes(
+                pg, min_passes=min_passes, mem=mem)
+            sim = cycle_sim_jax.simulate_batched(pg, passes, mem=mem)
+            closed = np.asarray(steady_pass_cycles(pg, mem), np.float64)
+            pps = np.asarray(sim.per_pass_steady, np.float64)
+            rel = np.maximum(rel, np.abs(pps - closed) / np.maximum(closed, 1.0))
+            total += np.asarray(sim.total_cycles, np.float64)
+            expect += passes * closed
+            slack += cycle_sim_jax.fill_drain_slack(pg, mem=mem)
+        within = np.abs(total - expect) <= slack
+
+        out[dfn.label] = dict(
+            n=nv,
+            n_deferred=n_deferred,
+            max_rel_err=float(rel.max()) if rel.size else 0.0,
+            mean_rel_err=float(rel.mean()) if rel.size else 0.0,
+            frac_within_slack=float(within.mean()) if rel.size else 1.0,
+        )
+    return out
+
+
 def optimize_for_model(
     key: jax.Array,
     cfg: ArchConfig,
@@ -185,14 +295,18 @@ def optimize_for_model(
     method: str = "bayes",
     fixed: dict | None = None,
     mem: MemoryConfig | None = None,
+    schedule: bool = False,
     **search_kw,
 ):
     """Table 3 machinery: find the best (dataflow, macro, array, TL) for an
     LLM inference task under the compute-capacity cap (and, with ``mem``,
-    under finite DRAM bandwidth + buffer capacity)."""
+    under finite DRAM bandwidth + buffer capacity). ``schedule=True``
+    makes the BO objective score candidates with per-GEMM effective
+    prefetch depths under their PF capacity — hardware-mapping
+    co-exploration of the FIFO axis."""
     obj = partial(
         constrained_objective, cfg=cfg, n_cores=n_cores, batch=batch, seq=seq,
-        peak_tops_cap=peak_tops_cap, mode=mode, mem=mem,
+        peak_tops_cap=peak_tops_cap, mode=mode, mem=mem, schedule=schedule,
     )
     if method == "bayes":
         # hybrid: broad jitted random screen seeds/backstops the GP-EI loop
@@ -206,7 +320,7 @@ def optimize_for_model(
         best, val, x, y = bayesopt.random_minimize(key, obj, fixed=fixed, **search_kw)
     best = jax.tree.map(lambda v: jnp.reshape(jnp.asarray(v), ()), best)
     qor = evaluate_model(best, cfg, n_cores=n_cores, batch=batch, seq=seq,
-                         mode=mode, mem=mem)
+                         mode=mode, mem=mem, schedule=schedule)
     return best, qor, (x, y)
 
 
@@ -231,14 +345,27 @@ SMOKE_REGIMES = (
     ("shallow-prefetch", dict(BC=1, PF=1)),
 )
 
+#: Mixed-size GEMM list for the fifth, ``scheduled`` smoke regime: a tiny
+#: decode-style projection whose round stream is a handful of bundles (it
+#: never engages a deep FIFO and schedules shallow), a mid prefill tile,
+#: and a large MLP-class GEMM that needs the full capacity. The scheduler
+#: assigns each its own effective depth; the sweep validates the
+#: simulators at every depth actually chosen.
+SMOKE_SCHED_GEMMS = (
+    Gemm(8.0, 128.0, 128.0),
+    Gemm(512.0, 1024.0, 1024.0),
+    Gemm(8192.0, 4096.0, 4096.0),
+)
+
 
 def _fidelity_main(argv=None):  # pragma: no cover - exercised by CI smoke run
     """CLI gate: ``python -m repro.core [--smoke]`` runs the fidelity
-    sweep — in the paper's infinite-bandwidth regime and in the
+    sweep — in the paper's infinite-bandwidth regime, in the
     weight-bandwidth-bound, activation-bound, and shallow-prefetch regimes
-    under ``SMOKE_MEM`` — and fails (exit 1) when simulator-vs-closed-form
-    drift exceeds the per-variant error budget in any regime — CI's
-    defense against any side rotting."""
+    under ``SMOKE_MEM``, and in the ``scheduled`` regime (per-GEMM
+    prefetch depths over a mixed-size GEMM list) — and fails (exit 1)
+    when simulator-vs-closed-form drift exceeds the per-variant error
+    budget in any regime — CI's defense against any side rotting."""
     import argparse
 
     ap = argparse.ArgumentParser(description=fidelity_sweep.__doc__)
@@ -260,12 +387,17 @@ def _fidelity_main(argv=None):  # pragma: no cover - exercised by CI smoke run
     if args.dram_bw > 0:
         mem = SMOKE_MEM._replace(dram_bw_bits_per_cycle=args.dram_bw)
         regimes += [(name, mem, dict(fixed)) for name, fixed in SMOKE_REGIMES]
+        # fifth regime: per-GEMM prefetch-depth schedules over a mixed-size
+        # GEMM list; PF stays free so every FIFO capacity is sampled
+        regimes += [("scheduled", mem, dict(BC=1))]
 
     print("regime,variant,n,n_deferred,max_rel_err,mean_rel_err,"
           "frac_within_slack")
     for regime, mem, fixed in regimes:
-        rep = fidelity_sweep(jax.random.key(args.seed), n_samples=n,
-                             mem=mem, fixed=fixed)
+        sweep = scheduled_fidelity_sweep if regime == "scheduled" \
+            else fidelity_sweep
+        rep = sweep(jax.random.key(args.seed), n_samples=n,
+                    mem=mem, fixed=fixed)
         worst = 0.0
         for label, r in rep.items():
             print(f"{regime},{label},{r['n']},{r['n_deferred']},"

@@ -11,7 +11,9 @@ so each tile's weight working set fits the global weight buffer and its
 activation working set fits the global activation buffer
 (``tile_gemms_for_memory``), and the evaluation charges DRAM bandwidth
 (weight + activation round bundles through the prefetch FIFO) and access
-energy.
+energy. ``schedule=True`` further runs each (split, tiled) GEMM at its
+own effective prefetch depth <= the design's PF capacity
+(``schedule.scheduled_workload_timing``) — the per-GEMM scheduling layer.
 """
 from __future__ import annotations
 
@@ -97,6 +99,25 @@ def tile_gemms_for_memory(gemms: list[Gemm], mem: MemoryConfig | None) -> list[G
     return [tile_gemm_for_memory(g, mem) for g in gemms]
 
 
+def per_core_gemms(
+    cfg: ArchConfig,
+    n_cores: int = 1,
+    batch: int = 8,
+    seq: int = 1024,
+    mode: str = "prefill",
+    include_attention: bool = False,
+    mem: MemoryConfig | None = None,
+) -> list[Gemm]:
+    """The exact per-core workload ``evaluate_model`` times: model GEMMs,
+    deduped, split across cores, capacity-tiled. The single source of
+    truth for anything reporting per-GEMM facts about that workload (the
+    fig14 depth histograms, the dse_llama3 schedule printout) — so those
+    reports can never drift from the latencies they annotate."""
+    gemms = dedupe_gemms(model_gemms(cfg, mode=mode, batch=batch, seq=seq,
+                                     include_attention=include_attention))
+    return tile_gemms_for_memory(split_gemms_across_cores(gemms, n_cores), mem)
+
+
 def evaluate_model(
     p: DesignPoint,
     cfg: ArchConfig,
@@ -106,12 +127,13 @@ def evaluate_model(
     mode: str = "prefill",
     include_attention: bool = False,
     mem: MemoryConfig | None = None,
+    schedule: bool = False,
 ) -> EngineQoR:
-    gemms = dedupe_gemms(model_gemms(cfg, mode=mode, batch=batch, seq=seq,
-                                     include_attention=include_attention))
-    per_core = tile_gemms_for_memory(
-        split_gemms_across_cores(gemms, n_cores), mem)
-    ppa: ArrayPPA = evaluate_workload(p, per_core, mem)
+    per_core = per_core_gemms(cfg, n_cores=n_cores, batch=batch, seq=seq,
+                              mode=mode, include_attention=include_attention,
+                              mem=mem)
+    ppa: ArrayPPA = evaluate_workload(p, per_core, mem,
+                                      schedule=True if schedule else None)
     return EngineQoR(
         latency_s=ppa.latency_s,
         power_w=ppa.power_w,
@@ -132,14 +154,18 @@ def constrained_objective(
     peak_tops_cap: float = 20.0,
     mode: str = "prefill",
     mem: MemoryConfig | None = None,
+    schedule: bool = False,
 ) -> jnp.ndarray:
     """The paper's §4.4 search objective: latency^2*power*area subject to a
     per-core aggregate compute-capacity upper bound (20 TOPS) and validity
     (including buffer-capacity validity when ``mem`` is given).
-    Invalid / over-cap points get +inf (vectorization-safe)."""
+    Invalid / over-cap points get +inf (vectorization-safe). With
+    ``schedule=True`` the objective scores each point with per-GEMM
+    effective prefetch depths under its PF capacity, so the BO/random
+    search co-explores hardware (PF) and mapping (pf_g) jointly."""
     from .design_space import is_valid
 
     q = evaluate_model(p, cfg, n_cores=n_cores, batch=batch, seq=seq,
-                       mode=mode, mem=mem)
+                       mode=mode, mem=mem, schedule=schedule)
     ok = is_valid(p, mem) & (q.peak_tops <= peak_tops_cap)
     return jnp.where(ok, q.objective, jnp.inf)

@@ -23,6 +23,7 @@ from . import macro_model as mm
 from .design_space import BROADCAST, DesignPoint
 from .dataflow import DataflowTiming, Gemm, workload_timing
 from .memory import MemoryConfig
+from .schedule import Schedule, scheduled_workload_timing
 
 
 class ArrayPPA(NamedTuple):
@@ -84,7 +85,8 @@ def _act_delivery_energy_per_bit(p: DesignPoint) -> jnp.ndarray:
 
 
 def evaluate_workload(p: DesignPoint, gemms: list[Gemm],
-                      mem: MemoryConfig | None = None) -> ArrayPPA:
+                      mem: MemoryConfig | None = None,
+                      schedule: Schedule | bool | None = None) -> ArrayPPA:
     """End-to-end QoRs of design point p running a GEMM workload.
 
     Power integrates (as the paper does from simulation traces):
@@ -99,8 +101,22 @@ def evaluate_workload(p: DesignPoint, gemms: list[Gemm],
     through the PF-deep FIFO (see ``dataflow.gemm_timing``) — and reports
     the port-busy cycles as ``dram_cycles``; the infinite-bandwidth
     zero-energy limit is bit-exact with ``mem=None``.
+
+    ``schedule`` switches the timing to per-GEMM effective prefetch
+    depths (``schedule.scheduled_workload_timing``): ``True`` selects
+    depths internally (PF acts as the FIFO *capacity*), a precomputed
+    ``Schedule`` pytree re-charges the workload at those depths. Latency,
+    dram_cycles, leakage energy, and every latency-derived QoR then
+    reflect the chosen depths; ``None`` keeps the PR 3 single-depth path
+    bit-exactly.
     """
-    timing: DataflowTiming = workload_timing(p, gemms, mem)
+    # falsy (None or False) selects the fixed-depth path; a Schedule pytree
+    # is always truthy (non-empty NamedTuple)
+    if not schedule:
+        timing: DataflowTiming = workload_timing(p, gemms, mem)
+    else:
+        timing = scheduled_workload_timing(
+            p, gemms, mem, schedule if isinstance(schedule, Schedule) else None)
     f = mm.frequency(p)
     latency = timing.total_cycles / f
 

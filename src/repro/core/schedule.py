@@ -1,0 +1,179 @@
+"""Per-GEMM prefetch-depth scheduling: FIFO *capacity* vs *effective depth*.
+
+PR 3 made the prefetch FIFO depth ``DesignPoint.PF`` a first-class timing
+resource, but as a single per-design axis: a llama3 decode workload runs
+its tiny QKV GEMMs and its huge MLP GEMMs at the same depth. This module
+splits the knob in two:
+
+  * ``PF`` stays the **physical capacity** of the prefetch FIFO — an
+    area/search axis, sampled and BO-encoded like every other design axis;
+  * each GEMM g of a workload runs at an **effective depth** pf_g <= PF,
+    selected per GEMM from ``design_space.PF_CHOICES`` by minimizing the
+    closed-form cost of that GEMM.
+
+Derivation (from the PR 3 max-plus model): a GEMM whose round bundles
+stream through a depth-pf FIFO has the steady critical-circuit mean
+
+    round(pf) = max(round_c, F, (F + L) / pf)
+
+with three circuits — the on-chip round (round_c), the port self-loop
+(F), and the FIFO feedback loop fetch(j) -> free(j) -> fetch(j + pf)
+whose mean is (F + L) / pf. The feedback circuit only *exists* when its
+edge free(j - pf) -> fetch(j) is ever taken, i.e. when the GEMM streams
+more than pf bundles (``dataflow.gemm_rounds``): a GEMM of rounds <= pf
+executes bit-exactly on the unbounded affine gate ready(j) = (j+1) * F
+(pinned by the beyond-horizon test in tests/test_prefetch_streaming.py
+and by tests/test_schedule.py). The scheduled per-GEMM cost is therefore
+``dataflow.gemm_timing`` evaluated at the *engaged* effective depth —
+pf where the feedback circuit exists, inf where it does not:
+
+    cost_g(pf) = rounds_g * max(round_c, F, [rounds_g > pf] * (F+L)/pf)
+                 + fill_g                                  (x count_g)
+
+cost_g is non-increasing in pf (the feedback mean shrinks, then the
+circuit vanishes), so the argmin over the allowed menu
+{d in PF_CHOICES : d <= PF} sits at the deepest choice and ties are
+broken toward the **shallowest** depth that already achieves the minimum
+— the minimal sufficient depth. Two GEMMs of one workload genuinely
+differ: a tiny decode GEMM whose stream is <= 2 bundles schedules at
+depth 2 (it can never engage a deeper FIFO), while a large prefill GEMM
+on the same design needs the full capacity before (F + L) / pf drops
+under max(round_c, F). Dominance is structural: every fixed depth
+d <= PF is *in* the candidate menu, so the scheduled cost is <= the
+fixed-d cost GEMM by GEMM — the property tests/test_schedule.py pins and
+the guarantee behind fig14 (scheduled latency <= best fixed depth).
+
+The ``Schedule`` pytree (chosen depths + per-GEMM closed-form costs)
+threads through ``ppa.evaluate_workload(schedule=...)``,
+``mapper.evaluate_model(schedule=True)``, ``dse.evaluate_population`` and
+the BO objective. Both event simulators honor per-GEMM depths
+(``cycle_sim.simulate_scheduled`` / ``cycle_sim_jax.simulate_scheduled``:
+each GEMM is dispatched to its own static-depth-specialized runner and
+the totals stitched, the array and DRAM port draining at GEMM boundaries
+— the same accumulation ``scheduled_workload_timing`` performs on the
+closed forms), and ``dse.scheduled_fidelity_sweep`` extends the
+sim-vs-closed-form CI contract to scheduled mixed-size workloads
+(the fifth ``scheduled`` regime of ``python -m repro.core --smoke``).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .dataflow import DataflowTiming, Gemm, gemm_rounds, gemm_timing
+from .design_space import PF_CHOICES, DesignPoint
+from .memory import MemoryConfig
+
+
+class Schedule(NamedTuple):
+    """Per-GEMM effective prefetch depths for one (batch of) design point(s).
+
+    Fields are stacked over the workload's GEMM list on axis 0, so a
+    population evaluation carries shape (n_gemms, *batch). ``pf`` is the
+    *physical* depth each GEMM runs at (always <= the point's PF capacity);
+    ``cost`` is the closed-form total-cycle cost of each GEMM at that
+    depth, the quantity the argmin selected on."""
+
+    pf: jnp.ndarray
+    cost: jnp.ndarray
+
+
+def engaged_depth(pf, rounds) -> jnp.ndarray:
+    """Effective depth for closed-form charging: the FIFO feedback circuit
+    only exists while the GEMM streams more than ``pf`` round bundles; a
+    shorter stream runs on the unbounded affine gate bit-exactly."""
+    pf = jnp.asarray(pf, jnp.float32)
+    return jnp.where(jnp.asarray(rounds) > pf, pf, jnp.inf)
+
+
+def _timing_at_depth(p: DesignPoint, g: Gemm, pf, rounds,
+                     mem: MemoryConfig | None) -> DataflowTiming:
+    """GEMM timing at effective depth ``pf`` with the engagement rule
+    applied (``pf`` may be a scalar candidate or a per-point array)."""
+    eff = engaged_depth(jnp.broadcast_to(jnp.asarray(pf, jnp.float32),
+                                         jnp.shape(rounds)), rounds)
+    return gemm_timing(p._replace(PF=eff), g, mem)
+
+
+def gemm_depth_menu(p: DesignPoint, g: Gemm,
+                    mem: MemoryConfig | None) -> list[DataflowTiming]:
+    """The candidate timings of GEMM g, one per ``PF_CHOICES`` depth (each
+    charged at its engaged effective depth), in menu (ascending) order."""
+    rounds = gemm_rounds(p, g)
+    menu = []
+    for d in PF_CHOICES:
+        if math.isinf(d):
+            inf = jnp.full(jnp.shape(rounds), jnp.inf, jnp.float32)
+            menu.append(gemm_timing(p._replace(PF=inf), g, mem))
+        else:
+            menu.append(_timing_at_depth(p, g, d, rounds, mem))
+    return menu
+
+
+def schedule_gemm(p: DesignPoint, g: Gemm, mem: MemoryConfig | None):
+    """Select the effective depth of one GEMM: argmin of the closed-form
+    cost over the allowed menu {d in PF_CHOICES : d <= PF}, ties broken
+    toward the shallowest depth (PF_CHOICES is ascending and jnp.argmin
+    returns the first minimum). Returns (pf, DataflowTiming at pf)."""
+    menu = gemm_depth_menu(p, g, mem)
+    depths = jnp.asarray(PF_CHOICES, jnp.float32)
+    costs = jnp.stack([t.total_cycles for t in menu])           # (5, *batch)
+    batch = costs.shape[1:]
+    cap = jnp.broadcast_to(jnp.asarray(p.PF, jnp.float32), batch)
+    allowed = depths.reshape((-1,) + (1,) * len(batch)) <= cap
+    idx = jnp.argmin(jnp.where(allowed, costs, jnp.inf), axis=0)
+    pf = jnp.take(depths, idx)
+
+    def sel(*leaves):
+        stacked = jnp.stack(leaves)
+        return jnp.take_along_axis(stacked, idx[None], axis=0)[0]
+
+    return pf, jax.tree.map(sel, *menu)
+
+
+def schedule_gemms(p: DesignPoint, gemms: Sequence[Gemm],
+                   mem: MemoryConfig | None) -> Schedule:
+    """Schedule a whole workload: one effective depth per GEMM (stacked on
+    axis 0). Without a memory model (or at infinite bandwidth) every depth
+    costs the same and the scheduler picks depth 1 everywhere — the FIFO
+    cannot bind, so the choice is observationally irrelevant."""
+    pfs, costs = [], []
+    for g in gemms:
+        pf, t = schedule_gemm(p, g, mem)
+        pfs.append(pf)
+        costs.append(t.total_cycles)
+    return Schedule(pf=jnp.stack(pfs), cost=jnp.stack(costs))
+
+
+def scheduled_workload_timing(p: DesignPoint, gemms: Sequence[Gemm],
+                              mem: MemoryConfig | None = None,
+                              schedule: Schedule | None = None) -> DataflowTiming:
+    """Accumulate per-GEMM *scheduled* rooflines over a workload — the
+    schedule-aware replacement for ``dataflow.workload_timing``'s single
+    design-wide depth. ``schedule=None`` selects depths internally (the
+    usual path, jit-safe); passing a precomputed ``Schedule`` re-charges
+    the workload at those depths (engagement rule still applied, so the
+    accumulated cost equals ``Schedule.cost`` for a schedule produced by
+    ``schedule_gemms`` on the same point/workload/memory)."""
+    parts = []
+    for i, g in enumerate(gemms):
+        if schedule is None:
+            _, t = schedule_gemm(p, g, mem)
+        else:
+            t = _timing_at_depth(p, g, schedule.pf[i], gemm_rounds(p, g), mem)
+        parts.append(t)
+    tot = sum(t.total_cycles for t in parts)
+    ideal = sum(t.ideal_cycles for t in parts)
+    return DataflowTiming(
+        total_cycles=tot,
+        ideal_cycles=ideal,
+        utilization=ideal / jnp.maximum(tot, 1.0),
+        compute_cycles=sum(t.compute_cycles for t in parts),
+        weight_bits=sum(t.weight_bits for t in parts),
+        act_bits=sum(t.act_bits for t in parts),
+        rounds=sum(t.rounds for t in parts),
+        dram_cycles=sum(t.dram_cycles for t in parts),
+    )

@@ -1,0 +1,147 @@
+"""Shared hypothesis strategy toolkit for the repro test suite.
+
+Consolidates the design-point / ``Gemm`` / ``MemoryConfig`` generators the
+memory, prefetch-streaming, cycle-sim, mapper, and schedule suites used to
+re-declare inline: event-simulator-scale design points (valid by
+construction — every axis draws from a subset of its ``design_space``
+candidate grid, and ``design_points`` additionally asserts
+``design_space.is_valid``), mixed-size GEMM lists, and finite/infinite
+bandwidth, buffer-capacity, and prefetch-depth corners.
+
+Works with real hypothesis AND the deterministic shim conftest.py installs
+in hermetic containers. The subset contract both must honor —
+``sampled_from`` / ``integers`` / ``floats`` / ``tuples`` / ``lists`` /
+``just`` / ``one_of`` / ``.map`` — is pinned by
+tests/test_conftest_shim.py; extend the shim there before using anything
+beyond it here.
+"""
+from hypothesis import strategies as st
+
+from repro.core import design_space as ds
+from repro.core.dataflow import Gemm
+from repro.core.design_space import BROADCAST, OS, SYSTOLIC, WS, make_point
+from repro.core.memory import MemoryConfig
+
+#: All 8 dataflow variants (dataflow, interconnect, OL) — the parametrize
+#: axis the suites cross their property draws with.
+VARIANTS = [(df, ic, ol) for df in (WS, OS) for ic in (BROADCAST, SYSTOLIC)
+            for ol in (0, 1)]
+
+#: Finite DRAM bandwidth corners (bits/cycle), fully starved to barely
+#: binding for the event-sim-scale points below.
+FINITE_BWS = (64.0, 256.0, 1024.0, 4096.0, 65536.0)
+
+#: The prefetch-depth menu including the unbounded corner
+#: (= design_space.PF_CHOICES).
+DEPTHS = (1, 2, 4, 8, float("inf"))
+
+# Event-simulator-scale defaults: small enough that the numpy event loop's
+# per-round python iteration stays fast, while still exercising staggers
+# (BR), slot reuse (LSL), and both compute- and update-dominated rounds
+# (TL vs PC tips T_c vs T_s). Every entry is a subset of the corresponding
+# design_space grid, so any combination is structurally valid.
+_SIM_AXES = dict(
+    BR=(1, 2, 3, 4, 5, 6),
+    LSL=(2, 4, 8),
+    TL=(8, 32, 128),
+    PC=(2, 8, 32),
+    BC=(1,),
+    AL=(32,),
+    PL=(1,),
+)
+
+
+def _axes(overrides, base):
+    axes = dict(base)
+    for k, v in overrides.items():
+        axes[k] = tuple(v) if isinstance(v, (tuple, list)) else (v,)
+    return axes
+
+
+def point_params(**overrides):
+    """Strategy of ``make_point`` kwarg dicts over event-sim-scale grids.
+
+    Overrides replace an axis' choice tuple (a scalar pins it). The
+    variant axes (dataflow/interconnect/OL) are deliberately absent — the
+    suites cross those via ``pytest.mark.parametrize(VARIANTS)`` and pass
+    them to ``make_point`` alongside the drawn dict."""
+    axes = _axes(overrides, _SIM_AXES)
+    names = tuple(axes)
+    return st.tuples(*(st.sampled_from(tuple(axes[k])) for k in names)).map(
+        lambda t: dict(zip(names, t)))
+
+
+def design_points(**overrides):
+    """Full ``DesignPoint`` strategy, valid by construction, with the
+    variant axes (and PF capacity) drawn too. Overrides as in
+    ``point_params``."""
+    base = dict(_SIM_AXES, dataflow=(WS, OS),
+                interconnect=(BROADCAST, SYSTOLIC), OL=(0, 1), PF=DEPTHS)
+    axes = _axes(overrides, base)
+    names = tuple(axes)
+
+    def build(t):
+        p = make_point(**dict(zip(names, t)))
+        assert bool(ds.is_valid(p)), dict(zip(names, t))
+        return p
+
+    return st.tuples(*(st.sampled_from(tuple(axes[k])) for k in names)).map(build)
+
+
+def gemms(M=(16, 65536), K=(64, 16384), N=(64, 16384), count=(1.0, 16.0)):
+    """Single random ``Gemm``: integer M/K/N drawn from the given ranges,
+    float count — the tiling/property-test shape."""
+    return st.tuples(st.integers(*M), st.integers(*K), st.integers(*N),
+                     st.floats(*count)).map(
+        lambda t: Gemm(float(t[0]), float(t[1]), float(t[2]), float(t[3])))
+
+
+def gemm_shape_lists(Ms=(8, 64), Ks=(16, 32), Ns=(32, 128),
+                     counts=(0.5, 8.0), min_size=1, max_size=12):
+    """Lists of small GEMMs with colliding shapes — the dedupe workload."""
+    row = st.tuples(st.sampled_from(tuple(Ms)), st.sampled_from(tuple(Ks)),
+                    st.sampled_from(tuple(Ns)), st.floats(*counts))
+    return st.lists(row, min_size=min_size, max_size=max_size).map(
+        lambda rows: [Gemm(float(m), float(k), float(n), float(c))
+                      for m, k, n, c in rows])
+
+
+#: The size spectrum a scheduled workload mixes: decode-tiny projections
+#: whose round streams are a handful of bundles, up to prefill-huge MLP
+#: GEMMs that need the full FIFO capacity.
+MIXED_GEMMS = (
+    Gemm(8.0, 128.0, 128.0),
+    Gemm(64.0, 512.0, 256.0),
+    Gemm(1024.0, 2048.0, 2048.0),
+    Gemm(8192.0, 4096.0, 4096.0),
+)
+
+
+def mixed_gemm_lists(min_size=2, max_size=4):
+    """Mixed-size GEMM lists spanning decode-tiny to prefill-huge — the
+    workload shape the per-GEMM schedule layer targets."""
+    return st.lists(st.one_of(*(st.just(g) for g in MIXED_GEMMS)),
+                    min_size=min_size, max_size=max_size)
+
+
+def memory_configs(bws=FINITE_BWS, include_infinite=False):
+    """``MemoryConfig`` strategy over DRAM-bandwidth corners (bits/cycle);
+    ``include_infinite`` adds the unbounded-port corner (F = 0, where the
+    FIFO can never bind)."""
+    corners = tuple(bws) + ((float("inf"),) if include_infinite else ())
+    return st.sampled_from(corners).map(
+        lambda bw: MemoryConfig(dram_bw_bits_per_cycle=bw))
+
+
+def buffer_configs(wcaps_kb=(8, 512, 4096), acaps_kb=(8, 512, 4096)):
+    """``MemoryConfig`` strategy over staging-buffer capacity corners (kB;
+    ``float('inf')`` entries leave that buffer unbounded)."""
+    return st.tuples(st.sampled_from(tuple(wcaps_kb)),
+                     st.sampled_from(tuple(acaps_kb))).map(
+        lambda t: MemoryConfig(weight_buf_bits=t[0] * 1024 * 8,
+                               act_buf_bits=t[1] * 1024 * 8))
+
+
+def prefetch_depths():
+    """The effective/capacity depth menu, shallow first."""
+    return st.sampled_from(DEPTHS)

@@ -1,0 +1,233 @@
+"""Parity tests for the conftest.py hypothesis shim.
+
+The shim stands in for real hypothesis in hermetic containers, so the
+tier-1 suite's property tests silently run on it — which means any
+divergence between the shim's strategy semantics and the documented
+subset contract (conftest.py's module docstring, used by
+tests/strategies.py) would skew what the suite actually covers. This
+suite pins those semantics by constructing the shim directly
+(``conftest._build_hypothesis_shim`` — no ``sys.modules`` mutation), so
+it runs identically whether the active ``hypothesis`` is real or the
+shim itself:
+
+  * per-strategy draw ranges/types and ``enumerate_finite`` behavior,
+    including the ``just`` / ``one_of`` / ``.map`` combinators
+    tests/strategies.py builds on;
+  * the ``given``/``settings`` contract: exhaustive enumeration when the
+    finite cartesian product fits ``max_examples``, deterministic seeded
+    draws otherwise, and strategy parameters hidden from the wrapper's
+    signature (so pytest keeps driving parametrize/fixture args);
+  * ``assume`` raising on a falsy condition.
+"""
+import inspect
+import itertools
+import random
+
+import conftest
+import pytest
+
+
+@pytest.fixture(scope="module")
+def shim():
+    hyp, st = conftest._build_hypothesis_shim()
+    return hyp, st
+
+
+def _rng():
+    return random.Random(1234)
+
+
+# ---------------------------------------------------------------------------
+# Base strategies
+# ---------------------------------------------------------------------------
+
+def test_sampled_from(shim):
+    _, st = shim
+    s = st.sampled_from([3, 1, 2])
+    assert s.enumerate_finite() == [3, 1, 2]  # declaration order preserved
+    r = _rng()
+    assert all(s.draw(r) in (1, 2, 3) for _ in range(50))
+    with pytest.raises(ValueError):
+        st.sampled_from([])
+
+
+def test_integers(shim):
+    _, st = shim
+    small = st.integers(2, 9)           # span 8: enumerable
+    assert small.enumerate_finite() == list(range(2, 10))
+    big = st.integers(0, 8)             # span 9: draws only
+    assert big.enumerate_finite() is None
+    r = _rng()
+    assert all(0 <= big.draw(r) <= 8 for _ in range(100))
+    assert all(isinstance(big.draw(r), int) for _ in range(5))
+
+
+def test_booleans_and_floats(shim):
+    _, st = shim
+    assert st.booleans().enumerate_finite() == [False, True]
+    f = st.floats(1.5, 2.5)
+    assert f.enumerate_finite() is None
+    r = _rng()
+    assert all(1.5 <= f.draw(r) <= 2.5 for _ in range(100))
+
+
+def test_tuples_and_lists(shim):
+    _, st = shim
+    t = st.tuples(st.integers(0, 1), st.sampled_from("ab"))
+    r = _rng()
+    for _ in range(20):
+        a, b = t.draw(r)
+        assert a in (0, 1) and b in "ab"
+    lst = st.lists(st.integers(0, 3), min_size=2, max_size=5)
+    for _ in range(20):
+        xs = lst.draw(r)
+        assert 2 <= len(xs) <= 5
+        assert all(0 <= x <= 3 for x in xs)
+
+
+# ---------------------------------------------------------------------------
+# Combinators the shared strategy toolkit needs (tests/strategies.py)
+# ---------------------------------------------------------------------------
+
+def test_just(shim):
+    _, st = shim
+    sentinel = object()
+    s = st.just(sentinel)
+    assert s.enumerate_finite() == [sentinel]
+    assert s.draw(_rng()) is sentinel
+
+
+def test_one_of(shim):
+    _, st = shim
+    s = st.one_of(st.just(1), st.sampled_from([2, 3]))
+    assert s.enumerate_finite() == [1, 2, 3]  # concatenated, in order
+    r = _rng()
+    assert all(s.draw(r) in (1, 2, 3) for _ in range(50))
+    # one infinite branch poisons enumeration but not drawing
+    mixed = st.one_of(st.just(0), st.floats(0.0, 1.0))
+    assert mixed.enumerate_finite() is None
+    assert all(0 <= mixed.draw(r) <= 1 for _ in range(20))
+    with pytest.raises(ValueError):
+        st.one_of()
+
+
+def test_map(shim):
+    _, st = shim
+    s = st.sampled_from([1, 2, 3]).map(lambda x: x * 10)
+    assert s.enumerate_finite() == [10, 20, 30]
+    assert s.draw(_rng()) in (10, 20, 30)
+    # mapping an unenumerable strategy stays unenumerable but draws mapped
+    f = st.floats(0.0, 1.0).map(lambda x: ("v", x))
+    assert f.enumerate_finite() is None
+    tag, v = f.draw(_rng())
+    assert tag == "v" and 0.0 <= v <= 1.0
+    # chained maps compose
+    chained = st.just(2).map(lambda x: x + 1).map(lambda x: x * x)
+    assert chained.enumerate_finite() == [9]
+
+
+def test_tuples_of_enumerables_do_not_enumerate(shim):
+    """The shim deliberately leaves tuples/lists unenumerated (their
+    product explodes); given() then falls back to seeded draws."""
+    _, st = shim
+    t = st.tuples(st.integers(0, 1), st.integers(0, 1))
+    assert t.enumerate_finite() is None
+
+
+# ---------------------------------------------------------------------------
+# given / settings contract
+# ---------------------------------------------------------------------------
+
+def test_given_enumerates_when_product_fits(shim):
+    hyp, st = shim
+    seen = []
+
+    @hyp.given(a=st.sampled_from([1, 2]), b=st.booleans())
+    @hyp.settings(max_examples=10, deadline=None)
+    def probe(a, b):
+        seen.append((a, b))
+
+    probe()
+    assert seen == list(itertools.product([1, 2], [False, True]))
+
+
+def test_given_draws_when_product_exceeds_max_examples(shim):
+    hyp, st = shim
+    seen = []
+
+    @hyp.given(a=st.sampled_from(list(range(10))), b=st.booleans())
+    @hyp.settings(max_examples=7, deadline=None)
+    def probe(a, b):
+        seen.append((a, b))
+
+    probe()
+    assert len(seen) == 7                   # exactly max_examples draws
+    assert all(a in range(10) and isinstance(b, bool) for a, b in seen)
+
+
+def test_given_is_deterministic_across_runs(shim):
+    hyp, st = shim
+    runs = []
+    for _ in range(2):
+        seen = []
+
+        @hyp.given(x=st.integers(0, 10 ** 6))
+        @hyp.settings(max_examples=12, deadline=None)
+        def probe(x):
+            seen.append(x)
+
+        probe()
+        runs.append(seen)
+    assert runs[0] == runs[1]               # per-test seeded PRNG
+
+
+def test_given_positional_strategies_bind_in_order(shim):
+    hyp, st = shim
+    seen = []
+
+    @hyp.given(st.just("a"), st.just("b"))
+    def probe(first, second):
+        seen.append((first, second))
+
+    probe()
+    assert seen == [("a", "b")]
+
+
+def test_given_hides_strategy_params_from_signature(shim):
+    hyp, st = shim
+
+    @hyp.given(x=st.booleans())
+    def probe(fixture_like, x):
+        pass
+
+    params = list(inspect.signature(probe).parameters)
+    assert params == ["fixture_like"]       # pytest still sees the rest
+    assert probe.hypothesis.inner_test is not None
+
+
+def test_default_max_examples_is_25(shim):
+    hyp, st = shim
+    seen = []
+
+    @hyp.given(x=st.integers(0, 10 ** 6))   # no @settings at all
+    def probe(x):
+        seen.append(x)
+
+    probe()
+    assert len(seen) == 25
+
+
+def test_assume(shim):
+    hyp, _ = shim
+    assert hyp.assume(True) is True
+    with pytest.raises(Exception):
+        hyp.assume(False)
+
+
+def test_shim_module_markers(shim):
+    hyp, st = shim
+    assert hyp.__shim__ is True
+    assert hyp.strategies is st
+    # settings profile hooks exist (real-hypothesis API surface)
+    hyp.settings.register_profile("x")
+    hyp.settings.load_profile("x")

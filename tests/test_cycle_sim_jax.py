@@ -15,11 +15,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import cycle_sim, cycle_sim_jax, dataflow as dfm
 from repro.core import design_space as ds
-from repro.core.design_space import (BROADCAST, OS, SYSTOLIC, WS, make_point,
-                                     point_rows)
-
-VARIANTS = [(df, ic, ol) for df in (WS, OS) for ic in (BROADCAST, SYSTOLIC)
-            for ol in (0, 1)]
+from repro.core.design_space import make_point, point_rows
+from tests.strategies import VARIANTS, point_params
 
 
 # ---------------------------------------------------------------------------
@@ -29,40 +26,29 @@ VARIANTS = [(df, ic, ol) for df in (WS, OS) for ic in (BROADCAST, SYSTOLIC)
 
 @pytest.mark.parametrize("df,ic,ol", VARIANTS)
 @given(
-    BR=st.integers(1, 6),
-    LSL=st.sampled_from([2, 4, 8]),
-    TL=st.sampled_from([8, 32, 128]),     # T_c = TL * IBW/2
-    PC=st.sampled_from([2, 8, 32]),       # T_s = kappa * PC * WBW
-    BC=st.sampled_from([1, 3]),
+    kw=point_params(BC=(1, 3)),  # T_c = TL * IBW/2, T_s = kappa * PC * WBW
     n_passes=st.sampled_from([3, 5]),
 )
 @settings(max_examples=20, deadline=None)
-def test_jax_sim_matches_numpy_exactly(df, ic, ol, BR, LSL, TL, PC, BC, n_passes):
-    p = make_point(AL=32, PC=PC, LSL=LSL, PL=1, OL=ol, BR=BR, BC=BC, TL=TL,
-                   dataflow=df, interconnect=ic)
+def test_jax_sim_matches_numpy_exactly(df, ic, ol, kw, n_passes):
+    p = make_point(OL=ol, dataflow=df, interconnect=ic, **kw)
     ref = cycle_sim.simulate(p, n_passes=n_passes)
     got = cycle_sim_jax.simulate(p, n_passes=n_passes)
     assert got.total_cycles == ref.total_cycles, (
-        f"total mismatch df={df} ic={ic} ol={ol} BR={BR} LSL={LSL}")
+        f"total mismatch df={df} ic={ic} ol={ol} {kw}")
     assert got.per_pass_steady == ref.per_pass_steady, (
-        f"steady mismatch df={df} ic={ic} ol={ol} BR={BR} LSL={LSL}")
+        f"steady mismatch df={df} ic={ic} ol={ol} {kw}")
     assert got.compute_busy == ref.compute_busy
 
 
 @pytest.mark.parametrize("df,ic,ol", VARIANTS)
-@given(
-    BR=st.integers(1, 6),
-    LSL=st.sampled_from([2, 4, 8]),
-    TL=st.sampled_from([8, 32, 128]),
-    PC=st.sampled_from([2, 8, 32]),
-)
+@given(kw=point_params())
 @settings(max_examples=15, deadline=None)
-def test_jax_sim_matches_closed_form_within_slack(df, ic, ol, BR, LSL, TL, PC):
+def test_jax_sim_matches_closed_form_within_slack(df, ic, ol, kw):
     """Level 2: the batched sim's totals stay within fill/drain slack of
     n_passes x the closed-form steady pass cost, and the steady per-pass cost
     itself matches the closed form once the design reaches steady state."""
-    p = make_point(AL=32, PC=PC, LSL=LSL, PL=1, OL=ol, BR=BR, BC=1, TL=TL,
-                   dataflow=df, interconnect=ic)
+    p = make_point(OL=ol, dataflow=df, interconnect=ic, **kw)
     # the same steady-state pass counts and slack bound the CI fidelity gate
     # uses (cycle_sim_jax helpers) — test and gate must agree on both
     n_passes = int(cycle_sim_jax.steady_state_passes(p))

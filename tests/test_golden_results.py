@@ -1,0 +1,175 @@
+"""Golden-fixture regression tests: results/paper CSVs vs the checked-in code.
+
+The figure/table CSVs under results/paper/ are committed artifacts that
+downstream docs and the perf-trajectory tooling read; nothing previously
+re-derived them, so a change to src/ could silently strand them. These
+tests regenerate each fixture from the current code and assert row-wise
+agreement within a stated tolerance:
+
+  * fig13 / fig14 are deterministic closed-form grids — regenerated in
+    full via the ``fig13_rows`` / ``fig14_rows`` helpers (split from CSV
+    emission exactly for this suite) and compared at 1e-4 relative
+    (float32 closed forms are bit-deterministic on one platform; the
+    tolerance absorbs BLAS/platform variation across CI runners).
+  * table3 rows come from a Bayesian-optimization search — re-running the
+    search at reduced budget would not reproduce the same optima, so the
+    regression instead re-evaluates the *checked-in* optimum design of
+    every row with ``evaluate_model`` and asserts the ideal-memory QoR
+    columns at 1e-4 relative. The LPDDR5 columns depend on the searched
+    PF axis (not recorded in the CSV), so they are pinned by the depth
+    monotonicity bounds instead: PF=inf latency <= csv <= PF=1 latency.
+
+A failure here means results/ and src/ have drifted: regenerate the CSV
+via ``python -m benchmarks.run --only <name>`` and commit it with the
+code change that moved it, or fix the regression.
+"""
+import csv
+import math
+from pathlib import Path
+
+import pytest
+
+from repro.core import design_space as ds
+from repro.core import memory as core_memory
+from repro.core.design_space import make_point
+from repro.core.mapper import evaluate_model
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "paper"
+
+REL_TOL = 1e-4
+
+
+def _read_csv(name):
+    with open(RESULTS / name, newline="") as f:
+        rows = list(csv.reader(f))
+    return rows[0], rows[1:]
+
+
+def _close(a, b, tol=REL_TOL):
+    a, b = float(a), float(b)
+    if math.isnan(a) or math.isnan(b):
+        return math.isnan(a) and math.isnan(b)
+    return abs(a - b) <= tol * max(abs(a), abs(b), 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# fig13: bandwidth x prefetch-depth sensitivity grid
+# ---------------------------------------------------------------------------
+
+def test_fig13_csv_matches_code():
+    from benchmarks.paper_figures import fig13_rows
+
+    header, rows = _read_csv("fig13_memory_sensitivity.csv")
+    assert header == ["dram_bw_bits_per_cycle", "prefetch_rounds",
+                      "latency_ms", "utilization", "dram_cycles"]
+    regen = fig13_rows()
+    assert len(rows) == len(regen)
+    for got, want in zip(rows, regen):
+        assert float(got[0]) == want[0] and float(got[1]) == want[1], \
+            (got, want)  # grid keys identical, in order
+        for gi, wi in zip(got[2:], want[2:]):
+            assert _close(gi, wi), (got, want)
+
+
+# ---------------------------------------------------------------------------
+# fig14: per-GEMM scheduling vs fixed depths
+# ---------------------------------------------------------------------------
+
+def test_fig14_csv_matches_code():
+    from benchmarks.paper_figures import fig14_rows
+
+    header, rows = _read_csv("fig14_schedule_vs_fixed.csv")
+    assert header == ["model", "design", "mode", "policy", "latency_ms",
+                      "utilization", "pf_hist"]
+    regen = fig14_rows()
+    assert len(rows) == len(regen)
+    for got, want in zip(rows, regen):
+        assert got[:4] == [str(w) for w in want[:4]], (got, want)
+        assert _close(got[4], want[4]) and _close(got[5], want[5]), \
+            (got, want)
+        assert got[6] == str(want[6]), (got, want)
+
+
+def test_fig14_scheduled_dominates_best_fixed():
+    """The acceptance criterion: scheduled latency <= the best fixed-PF
+    latency on both Table-3 LLM workloads, prefill and decode, for every
+    design class in the figure."""
+    _, rows = _read_csv("fig14_schedule_vs_fixed.csv")
+    by = {}
+    for model, design, mode, policy, lat, _u, _h in rows:
+        by.setdefault((model, design, mode), {})[policy] = float(lat)
+    assert {m for m, _d, _mo in by} == {"llama3-70b", "gpt3-175b"}
+    assert {mo for _m, _d, mo in by} == {"prefill", "decode"}
+    for key, d in by.items():
+        best_fixed = min(v for k, v in d.items() if k.startswith("fixed"))
+        assert d["scheduled"] <= best_fixed * (1 + REL_TOL), (key, d)
+
+
+# ---------------------------------------------------------------------------
+# table3: the LLM case-study optima
+# ---------------------------------------------------------------------------
+
+_LABELS = {"WS": ds.WS, "OS": ds.OS,
+           "Broadcast": ds.BROADCAST, "Systolic": ds.SYSTOLIC}
+
+
+def _point_from_row(dataflow_label, tuple_str):
+    df, ic, ol = dataflow_label.split("-")
+    lsl, al, pc, pl, bc, br, tl = eval(tuple_str)  # trusted checked-in CSV
+    return make_point(LSL=lsl, AL=al, PC=pc, PL=pl, BC=bc, BR=br, TL=tl,
+                      OL=1 if ol == "OL" else 0, dataflow=_LABELS[df],
+                      interconnect=_LABELS[ic])
+
+
+@pytest.fixture(scope="module")
+def table3_rows():
+    header, rows = _read_csv("table3_llm_case_study.csv")
+    assert header[:5] == ["model", "seq", "n_cores", "dataflow",
+                          "(LSL,AL,PC,PL,BC,BR,TL)"]
+    return rows
+
+
+def test_table3_ideal_columns_reeval(table3_rows):
+    """Re-evaluate every checked-in optimum under the ideal hierarchy: the
+    latency/power/area/utilization columns are pure functions of the
+    recorded design and must match the CSV (they do not depend on the
+    unrecorded PF axis — PF is only observable under finite memory)."""
+    from repro.configs import PAPER_MODELS
+
+    for row in table3_rows:
+        model, seq, n_cores, label, tup = row[:5]
+        p = _point_from_row(label, tup)
+        q = evaluate_model(p, PAPER_MODELS[model], n_cores=int(n_cores),
+                           batch=1, seq=int(seq))
+        got = dict(latency_ms=float(q.latency_s) * 1e3,
+                   power_w=float(q.power_w), area_mm2=float(q.area_mm2),
+                   utilization=float(q.utilization))
+        want = dict(zip(["latency_ms", "power_w", "area_mm2", "utilization"],
+                        row[5:9]))
+        for k in got:
+            assert _close(got[k], want[k]), (model, seq, k, got[k], want[k])
+
+
+def test_table3_memory_columns_bounded_by_depth_extremes(table3_rows):
+    """The mem_* columns were produced at the searched (unrecorded) PF:
+    depth monotonicity bounds them between the PF=inf and PF=1 evaluations
+    of the same design under LPDDR5. NaN rows (designs whose resident tile
+    overflows the LPDDR5 staging buffers) must still be invalid."""
+    from repro.configs import PAPER_MODELS
+
+    for row in table3_rows:
+        model, seq, n_cores, label, tup = row[:5]
+        mem_lat = float(row[9])
+        p = _point_from_row(label, tup)
+        if math.isnan(mem_lat):
+            assert not bool(ds.is_valid(p, core_memory.LPDDR5)), row
+            continue
+        kw = dict(n_cores=int(n_cores), batch=1, seq=int(seq),
+                  mem=core_memory.LPDDR5)
+        cfg = PAPER_MODELS[model]
+        lo = float(evaluate_model(
+            p._replace(PF=float("inf")), cfg, **kw).latency_s) * 1e3
+        hi = float(evaluate_model(
+            p._replace(PF=1.0), cfg, **kw).latency_s) * 1e3
+        assert lo * (1 - REL_TOL) <= mem_lat <= hi * (1 + REL_TOL), \
+            (model, seq, lo, mem_lat, hi)

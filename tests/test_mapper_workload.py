@@ -11,14 +11,13 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dataflow import Gemm, workload_timing
-from repro.core.design_space import BROADCAST, OS, SYSTOLIC, WBW, WS, make_point
+from repro.core.design_space import WBW, make_point
 from repro.core.mapper import (split_gemms_across_cores, tile_gemm_for_memory,
                                tile_gemms_for_memory)
 from repro.core.memory import IDEAL, MemoryConfig
 from repro.core.workload import dedupe_gemms, total_macs
-
-VARIANTS = [(df, ic, ol) for df in (WS, OS) for ic in (BROADCAST, SYSTOLIC)
-            for ol in (0, 1)]
+from tests.strategies import (VARIANTS, buffer_configs, gemm_shape_lists,
+                              gemms)
 
 
 # ---------------------------------------------------------------------------
@@ -60,15 +59,9 @@ def test_dedupe_merges_counts():
     assert total_macs(d) == pytest.approx(total_macs(g))
 
 
-@given(
-    shapes=st.lists(
-        st.tuples(st.sampled_from([8, 64]), st.sampled_from([16, 32]),
-                  st.sampled_from([32, 128]), st.floats(0.5, 8)),
-        min_size=1, max_size=12),
-)
+@given(g=gemm_shape_lists())
 @settings(max_examples=30, deadline=None)
-def test_dedupe_conserves_macs_and_shrinks(shapes):
-    g = [Gemm(m, k, n, c) for m, k, n, c in shapes]
+def test_dedupe_conserves_macs_and_shrinks(g):
     d = dedupe_gemms(g)
     assert len(d) <= len(g)
     assert len({(x.M, x.K, x.N) for x in d}) == len(d)  # keys now unique
@@ -80,15 +73,12 @@ def test_dedupe_conserves_macs_and_shrinks(shapes):
 # ---------------------------------------------------------------------------
 
 @given(
-    K=st.integers(64, 16384),
-    N=st.integers(64, 16384),
-    count=st.floats(1, 16),
-    cap_kb=st.sampled_from([8, 64, 512, 4096]),
+    g=gemms(M=(1024, 1024)),  # fixed M: the act buffer stays unbounded below
+    mem=buffer_configs(wcaps_kb=(8, 64, 512, 4096),
+                       acaps_kb=(float("inf"),)),
 )
 @settings(max_examples=60, deadline=None)
-def test_tiling_conserves_macs_and_fits(K, N, count, cap_kb):
-    g = Gemm(1024, float(K), float(N), count)
-    mem = MemoryConfig(weight_buf_bits=cap_kb * 1024 * 8)
+def test_tiling_conserves_macs_and_fits(g, mem):
     t = tile_gemm_for_memory(g, mem)
     assert t.macs == pytest.approx(g.macs, rel=1e-9)   # MACs conserved
     assert t.K * t.N * WBW <= mem.weight_buf_bits + 1e-6  # tile fits

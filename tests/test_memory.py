@@ -25,11 +25,7 @@ from repro.core.dse import fidelity_sweep
 from repro.core.mapper import evaluate_model
 from repro.core.memory import MemoryConfig
 from repro.core.ppa import evaluate_workload
-
-VARIANTS = [(df, ic, ol) for df in (WS, OS) for ic in (BROADCAST, SYSTOLIC)
-            for ol in (0, 1)]
-
-FINITE_BWS = [64.0, 256.0, 1024.0, 4096.0, 65536.0]
+from tests.strategies import VARIANTS, memory_configs, point_params
 
 
 # ---------------------------------------------------------------------------
@@ -81,45 +77,28 @@ def test_ideal_memory_bit_exact_population():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("df,ic,ol", VARIANTS)
-@given(
-    BR=st.integers(1, 6),
-    LSL=st.sampled_from([2, 4, 8]),
-    TL=st.sampled_from([8, 32, 128]),
-    PC=st.sampled_from([2, 8, 32]),
-    BC=st.sampled_from([1, 3]),
-    bw=st.sampled_from(FINITE_BWS),
-)
+@given(kw=point_params(BC=(1, 3)), mem=memory_configs())
 @settings(max_examples=20, deadline=None)
-def test_jax_sim_matches_numpy_under_finite_bw(df, ic, ol, BR, LSL, TL, PC, BC, bw):
-    p = make_point(AL=32, PC=PC, LSL=LSL, PL=1, OL=ol, BR=BR, BC=BC, TL=TL,
-                   dataflow=df, interconnect=ic)
-    mem = MemoryConfig(dram_bw_bits_per_cycle=bw)
+def test_jax_sim_matches_numpy_under_finite_bw(df, ic, ol, kw, mem):
+    p = make_point(OL=ol, dataflow=df, interconnect=ic, **kw)
     ref = cycle_sim.simulate(p, n_passes=4, mem=mem)
     got = cycle_sim_jax.simulate(p, n_passes=4, mem=mem)
-    assert got.total_cycles == ref.total_cycles, (df, ic, ol, BR, LSL, bw)
-    assert got.per_pass_steady == ref.per_pass_steady, (df, ic, ol, BR, LSL, bw)
+    assert got.total_cycles == ref.total_cycles, (df, ic, ol, kw, mem)
+    assert got.per_pass_steady == ref.per_pass_steady, (df, ic, ol, kw, mem)
 
 
 @pytest.mark.parametrize("df,ic,ol", VARIANTS)
-@given(
-    BR=st.integers(1, 6),
-    LSL=st.sampled_from([2, 4, 8]),
-    TL=st.sampled_from([8, 32, 128]),
-    PC=st.sampled_from([2, 8, 32]),
-    bw=st.sampled_from(FINITE_BWS),
-)
+@given(kw=point_params(), mem=memory_configs())
 @settings(max_examples=15, deadline=None)
-def test_sim_steady_state_is_roofline(df, ic, ol, BR, LSL, TL, PC, bw):
+def test_sim_steady_state_is_roofline(df, ic, ol, kw, mem):
     """The gated event simulator's steady per-pass cost equals the
     closed-form roofline LSL * max(round_c, fetch) once the design reaches
     steady state — the bandwidth-bound extension of the PR 1 contract."""
-    p = make_point(AL=32, PC=PC, LSL=LSL, PL=1, OL=ol, BR=BR, BC=1, TL=TL,
-                   dataflow=df, interconnect=ic)
-    mem = MemoryConfig(dram_bw_bits_per_cycle=bw)
+    p = make_point(OL=ol, dataflow=df, interconnect=ic, **kw)
     n = int(cycle_sim_jax.steady_state_passes(p, mem=mem))
     sim = cycle_sim.simulate(p, n_passes=n, mem=mem)
     closed = float(dfm.steady_pass_cycles(p, mem))
-    assert sim.per_pass_steady == pytest.approx(closed), (df, ic, ol, BR, bw)
+    assert sim.per_pass_steady == pytest.approx(closed), (df, ic, ol, kw, mem)
     slack = float(cycle_sim_jax.fill_drain_slack(p, mem=mem))
     assert abs(sim.total_cycles - n * closed) <= slack
 

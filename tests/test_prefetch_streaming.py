@@ -18,7 +18,7 @@ import math
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
 
 from repro.core import cycle_sim, cycle_sim_jax, dataflow as dfm, memory
 from repro.core import design_space as ds
@@ -27,11 +27,8 @@ from repro.core.design_space import (BROADCAST, IBW, OS, SYSTOLIC, WBW, WS,
                                      make_point)
 from repro.core.mapper import tile_gemm_for_memory
 from repro.core.memory import MemoryConfig
-
-VARIANTS = [(df, ic, ol) for df in (WS, OS) for ic in (BROADCAST, SYSTOLIC)
-            for ol in (0, 1)]
-
-DEPTHS = [1, 2, 4, 8, float("inf")]
+from tests.strategies import (DEPTHS, VARIANTS, buffer_configs, gemms,
+                              memory_configs, point_params)
 
 
 # ---------------------------------------------------------------------------
@@ -90,22 +87,17 @@ def test_act_bound_design_is_port_limited():
 
 @pytest.mark.parametrize("df,ic,ol", VARIANTS)
 @given(
-    BR=st.integers(1, 5),
-    LSL=st.sampled_from([2, 4, 8]),
-    TL=st.sampled_from([8, 128, 512]),
-    PC=st.sampled_from([2, 32]),
-    PF=st.sampled_from(DEPTHS),
-    bw=st.sampled_from([64.0, 1024.0, 65536.0]),
+    kw=point_params(BR=(1, 2, 3, 4, 5), TL=(8, 128, 512), PC=(2, 32),
+                    PF=DEPTHS),
+    mem=memory_configs(bws=(64.0, 1024.0, 65536.0)),
 )
 @settings(max_examples=20, deadline=None)
-def test_jax_matches_numpy_with_depth(df, ic, ol, BR, LSL, TL, PC, PF, bw):
-    p = make_point(AL=32, PC=PC, LSL=LSL, PL=1, OL=ol, BR=BR, BC=1, TL=TL,
-                   dataflow=df, interconnect=ic, PF=PF)
-    mem = MemoryConfig(dram_bw_bits_per_cycle=bw)
+def test_jax_matches_numpy_with_depth(df, ic, ol, kw, mem):
+    p = make_point(OL=ol, dataflow=df, interconnect=ic, **kw)
     ref = cycle_sim.simulate(p, n_passes=4, mem=mem)
     got = cycle_sim_jax.simulate(p, n_passes=4, mem=mem)
-    assert got.total_cycles == ref.total_cycles, (df, ic, ol, BR, PF, bw)
-    assert got.per_pass_steady == ref.per_pass_steady, (df, ic, ol, BR, PF, bw)
+    assert got.total_cycles == ref.total_cycles, (df, ic, ol, kw, mem)
+    assert got.per_pass_steady == ref.per_pass_steady, (df, ic, ol, kw, mem)
 
 
 def test_batched_mixed_depth_population_matches_numpy():
@@ -177,22 +169,17 @@ def test_infinite_bw_finite_depth_is_ideal():
 
 @pytest.mark.parametrize("df,ic,ol", VARIANTS)
 @given(
-    BR=st.integers(1, 5),
-    LSL=st.sampled_from([2, 4, 8]),
-    TL=st.sampled_from([8, 128, 512]),
-    PC=st.sampled_from([2, 32]),
-    PF=st.sampled_from(DEPTHS),
-    bw=st.sampled_from([64.0, 1024.0, 65536.0]),
+    kw=point_params(BR=(1, 2, 3, 4, 5), TL=(8, 128, 512), PC=(2, 32),
+                    PF=DEPTHS),
+    mem=memory_configs(bws=(64.0, 1024.0, 65536.0)),
 )
 @settings(max_examples=15, deadline=None)
-def test_sim_steady_state_is_depth_roofline(df, ic, ol, BR, LSL, TL, PC, PF, bw):
-    p = make_point(AL=32, PC=PC, LSL=LSL, PL=1, OL=ol, BR=BR, BC=1, TL=TL,
-                   dataflow=df, interconnect=ic, PF=PF)
-    mem = MemoryConfig(dram_bw_bits_per_cycle=bw)
+def test_sim_steady_state_is_depth_roofline(df, ic, ol, kw, mem):
+    p = make_point(OL=ol, dataflow=df, interconnect=ic, **kw)
     n = int(cycle_sim_jax.steady_state_passes(p, mem=mem))
     sim = cycle_sim.simulate(p, n_passes=n, mem=mem)
     closed = float(dfm.steady_pass_cycles(p, mem))
-    assert sim.per_pass_steady == pytest.approx(closed), (df, ic, ol, BR, PF)
+    assert sim.per_pass_steady == pytest.approx(closed), (df, ic, ol, kw)
     slack = float(cycle_sim_jax.fill_drain_slack(p, mem=mem))
     assert abs(sim.total_cycles - n * closed) <= slack
 
@@ -246,20 +233,9 @@ def test_gemm_timing_monotone_in_depth():
 # Tiling respects both buffer capacities
 # ---------------------------------------------------------------------------
 
-@given(
-    M=st.integers(16, 65536),
-    K=st.integers(64, 16384),
-    N=st.integers(64, 16384),
-    count=st.floats(1, 16),
-    wcap_kb=st.sampled_from([8, 512, 4096]),
-    acap_kb=st.sampled_from([8, 512, 4096]),
-)
+@given(g=gemms(), mem=buffer_configs())
 @settings(max_examples=60, deadline=None)
-def test_tiling_fits_both_buffers_and_conserves_macs(M, K, N, count,
-                                                     wcap_kb, acap_kb):
-    g = Gemm(float(M), float(K), float(N), count)
-    mem = MemoryConfig(weight_buf_bits=wcap_kb * 1024 * 8,
-                       act_buf_bits=acap_kb * 1024 * 8)
+def test_tiling_fits_both_buffers_and_conserves_macs(g, mem):
     t = tile_gemm_for_memory(g, mem)
     assert t.macs == pytest.approx(g.macs, rel=1e-9)
     assert t.K * t.N * WBW <= float(mem.weight_buf_bits) + 1e-6

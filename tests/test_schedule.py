@@ -1,0 +1,323 @@
+"""Per-GEMM prefetch-depth schedule layer (core/schedule.py).
+
+Contract under test (ISSUE 4 tentpole + satellites):
+  * capacity: every chosen effective depth pf_g <= the design's PF;
+  * dominance: the scheduled workload cost <= the PR 3 fixed-depth cost at
+    EVERY fixed depth d <= PF (every fixed depth is in the candidate menu);
+  * a PF=inf capacity reproduces the PR 3 unbounded-FIFO behavior
+    bit-exactly (and mem=None / infinite BW schedules are observationally
+    no-ops);
+  * engagement: a GEMM whose round stream is <= pf bundles executes
+    bit-exactly as unbounded in BOTH event simulators — the physical fact
+    behind the scheduler's engaged-depth cost model and its
+    shallowest-sufficient tie-break;
+  * numpy == JAX bit-exact on stitched per-GEMM depth schedules across all
+    8 dataflow variants;
+  * MAC conservation through the mapper's tiled + scheduled path;
+  * the scheduled fidelity sweep (the CI gate's fifth regime) stays inside
+    the 1e-4 budget in-suite.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cycle_sim, cycle_sim_jax, design_space as ds
+from repro.core.dataflow import (Gemm, gemm_rounds, gemm_timing,
+                                 workload_timing)
+from repro.core.design_space import OS, PF_CHOICES, SYSTOLIC, make_point
+from repro.core.dse import (SMOKE_MEM, evaluate_population,
+                            scheduled_fidelity_sweep)
+from repro.core.mapper import (evaluate_model, split_gemms_across_cores,
+                               tile_gemms_for_memory)
+from repro.core.memory import IDEAL, LPDDR5, MemoryConfig
+from repro.core.schedule import (Schedule, schedule_gemm, schedule_gemms,
+                                 scheduled_workload_timing)
+from repro.core.workload import dedupe_gemms, model_gemms, total_macs
+from tests.strategies import (DEPTHS, VARIANTS, design_points,
+                              memory_configs, mixed_gemm_lists, point_params,
+                              prefetch_depths)
+
+MEM = MemoryConfig(dram_bw_bits_per_cycle=1024.0)
+
+
+# ---------------------------------------------------------------------------
+# Capacity + dominance (the schedule layer's structural guarantees)
+# ---------------------------------------------------------------------------
+
+@given(p=design_points(), gs=mixed_gemm_lists(), mem=memory_configs())
+@settings(max_examples=30, deadline=None)
+def test_capacity_respected(p, gs, mem):
+    sched = schedule_gemms(p, gs, mem)
+    assert np.all(np.asarray(sched.pf) <= float(p.PF))
+    assert np.all(np.isin(np.asarray(sched.pf), np.asarray(PF_CHOICES)))
+
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+@given(kw=point_params(PF=DEPTHS), gs=mixed_gemm_lists(),
+       mem=memory_configs())
+@settings(max_examples=10, deadline=None)
+def test_dominance_vs_every_fixed_depth(df, ic, ol, kw, gs, mem):
+    """Scheduled cost <= the PR 3 single-depth cost at every fixed depth
+    within capacity — each fixed depth is in the candidate menu, and the
+    engagement rule only ever removes a roofline term."""
+    p = make_point(OL=ol, dataflow=df, interconnect=ic, **kw)
+    sched_total = float(scheduled_workload_timing(p, gs, mem).total_cycles)
+    for d in PF_CHOICES:
+        if d > float(p.PF):
+            continue
+        fixed = float(workload_timing(p._replace(PF=d), gs, mem).total_cycles)
+        assert sched_total <= fixed, (d, kw)
+
+
+def test_capacity_masks_deeper_menu_entries():
+    """A PF=1 capacity leaves exactly the depth-1 candidate: the scheduled
+    cost must equal the fixed depth-1 cost (no deeper escape hatch)."""
+    gs = [Gemm(8192, 4096, 4096), Gemm(8, 128, 128)]
+    for df, ic, ol in VARIANTS:
+        p = make_point(AL=32, PC=8, LSL=4, OL=ol, BR=3, BC=1, TL=64,
+                       dataflow=df, interconnect=ic, PF=1)
+        sched = schedule_gemms(p, gs, MEM)
+        assert np.all(np.asarray(sched.pf) == 1.0)
+
+
+# ---------------------------------------------------------------------------
+# PF=inf capacity == PR 3 behavior bit-exactly; no-memory no-op
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+def test_inf_capacity_bit_exact_pr3(df, ic, ol):
+    gs = [Gemm(8192, 4096, 4096), Gemm(100.5, 777, 333, 3), Gemm(8, 128, 128)]
+    p = make_point(AL=64, PC=16, LSL=4, PL=2, OL=ol, BR=4, BC=1, TL=64,
+                   dataflow=df, interconnect=ic, PF=float("inf"))
+    t0 = workload_timing(p, gs, MEM)
+    t1 = scheduled_workload_timing(p, gs, MEM)
+    for f in t0._fields:
+        assert np.array_equal(np.asarray(getattr(t0, f)),
+                              np.asarray(getattr(t1, f))), (f, df, ic, ol)
+
+
+def test_inf_capacity_bit_exact_population():
+    pop = ds.sample_random(jax.random.key(3), 128, PF=float("inf"))
+    a = evaluate_population(pop, [Gemm(8192, 4096, 4096)], mem=MEM)
+    b = evaluate_population(pop, [Gemm(8192, 4096, 4096)], mem=MEM,
+                            schedule=True)
+    # physical quantities are bit-exact; the ratio fields (utilization,
+    # eff_tops, tops_per_*) may wiggle one ulp because the two jitted
+    # graphs differ and XLA fuses the final divisions differently
+    exact = {"peak_tops", "frequency_hz", "area_mm2", "power_w",
+             "latency_s", "energy_j", "dram_cycles"}
+    for f in a._fields:
+        av, bv = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        if f in exact:
+            assert np.array_equal(av, bv), f
+        else:
+            assert np.allclose(av, bv, rtol=1e-6, atol=0), f
+
+
+def test_schedule_false_is_the_fixed_depth_path():
+    """schedule=False (the natural falsy 'no schedule') must take the PR 3
+    fixed-depth path, bit-identical to schedule=None — not the scheduled
+    one (regression: the old guard tested ``schedule is None``)."""
+    from repro.core.ppa import evaluate_workload
+
+    p = make_point(AL=64, PC=16, LSL=2, OL=1, BR=4, BC=1, TL=32,
+                   dataflow=OS, interconnect=SYSTOLIC, PF=1)
+    gs = [Gemm(8, 128, 64)]
+    a = evaluate_workload(p, gs, MEM, schedule=False)
+    b = evaluate_workload(p, gs, MEM, schedule=None)
+    for f in a._fields:
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), f
+
+
+def test_no_memory_schedule_is_noop():
+    """Without a port (mem=None or infinite BW) every depth ties, the
+    scheduler picks the shallowest (1), and timing is bit-exact with the
+    unscheduled path."""
+    gs = [Gemm(8192, 4096, 4096), Gemm(8, 128, 128)]
+    p = make_point(PF=8)
+    for mem in (None, IDEAL):
+        sched = schedule_gemms(p, gs, mem)
+        assert np.all(np.asarray(sched.pf) == 1.0)
+        t0 = workload_timing(p, gs, mem)
+        t1 = scheduled_workload_timing(p, gs, mem)
+        for f in t0._fields:
+            assert np.array_equal(np.asarray(getattr(t0, f)),
+                                  np.asarray(getattr(t1, f))), f
+
+
+# ---------------------------------------------------------------------------
+# Engagement: rounds <= pf executes bit-exactly as unbounded (both sims)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+def test_stream_shorter_than_depth_is_unbounded(df, ic, ol):
+    """The FIFO feedback edge free(j - pf) -> fetch(j) needs j >= pf: a
+    round stream of n_rounds <= pf bundles never takes it, so the finite
+    depth is event-identical to PF=inf — the fact that lets the scheduler
+    charge non-engaged GEMMs the unbounded roofline and break ties toward
+    shallow depths."""
+    LSL, n_passes = 2, 2                      # 4 rounds simulated
+    p = make_point(AL=32, PC=8, LSL=LSL, OL=ol, BR=3, BC=1, TL=64,
+                   dataflow=df, interconnect=ic)
+    mem = MemoryConfig(dram_bw_bits_per_cycle=256.0)
+    ref = cycle_sim.simulate(p._replace(PF=float("inf")), n_passes, mem=mem)
+    for depth in (4.0, 8.0):                  # >= the 4 simulated rounds
+        for backend in (cycle_sim, cycle_sim_jax):
+            got = backend.simulate(p._replace(PF=depth), n_passes, mem=mem)
+            assert got.total_cycles == ref.total_cycles, (depth, backend)
+
+
+def test_scheduler_diverges_across_gemm_sizes():
+    """The per-GEMM choice is genuinely per-GEMM: on one design, a tiny
+    GEMM (round stream <= 2 bundles, never engages past depth 2)
+    schedules at 2 while a large GEMM needs depth 4 before (F + L) / pf
+    drops under max(round_c, F). Numbers derived in schedule.py's terms:
+    T_c=256, T_s=128, L=BR*(T_c+T_s)=1536, round_c=T_c+2*T_s=512, F=136."""
+    p = make_point(AL=64, PC=16, LSL=2, OL=0, BR=4, BC=1, TL=64,
+                   dataflow=OS, interconnect=SYSTOLIC, PF=8)
+    g_tiny, g_big = Gemm(8, 128, 16), Gemm(8192, 4096, 4096)
+    assert float(gemm_rounds(p, g_tiny)) == 2.0
+    assert float(gemm_rounds(p, g_big)) > 8.0
+    sched = schedule_gemms(p, [g_tiny, g_big], MEM)
+    assert np.asarray(sched.pf).tolist() == [2.0, 4.0]
+
+
+def test_schedule_cost_field_matches_accumulation():
+    p = make_point(AL=64, PC=16, LSL=2, OL=1, BR=4, BC=1, TL=32,
+                   dataflow=OS, interconnect=SYSTOLIC, PF=8)
+    gs = [Gemm(8, 128, 16), Gemm(1024, 2048, 2048), Gemm(8192, 4096, 4096)]
+    sched = schedule_gemms(p, gs, MEM)
+    t = scheduled_workload_timing(p, gs, MEM)
+    assert float(t.total_cycles) == float(np.asarray(sched.cost).sum())
+    # re-charging at the recorded depths reproduces the same accumulation
+    t2 = scheduled_workload_timing(p, gs, MEM, schedule=sched)
+    assert float(t2.total_cycles) == float(t.total_cycles)
+    # per-GEMM cost == gemm_timing at the engaged effective depth
+    for g, pf, c in zip(gs, np.asarray(sched.pf), np.asarray(sched.cost)):
+        eff = pf if float(gemm_rounds(p, g)) > pf else float("inf")
+        assert float(gemm_timing(p._replace(PF=eff), g, MEM).total_cycles) \
+            == float(c)
+
+
+# ---------------------------------------------------------------------------
+# numpy == JAX bit-exact on stitched per-GEMM depth schedules (8 variants)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+@given(
+    kw=point_params(),
+    depths=st.lists(prefetch_depths(), min_size=2, max_size=4),
+    mem=memory_configs(bws=(64.0, 1024.0, 65536.0), include_infinite=True),
+)
+@settings(max_examples=10, deadline=None)
+def test_numpy_equals_jax_on_schedules(df, ic, ol, kw, depths, mem):
+    p = make_point(OL=ol, dataflow=df, interconnect=ic, **kw)
+    ref = cycle_sim.simulate_scheduled(p, depths, 3, mem=mem)
+    got = cycle_sim_jax.simulate_scheduled(p, depths, 3, mem=mem)
+    assert float(got.total_cycles) == ref.total_cycles, (df, ic, ol, depths)
+    assert float(got.per_pass_steady) == ref.per_pass_steady, \
+        (df, ic, ol, depths)
+
+
+def test_batched_schedule_matches_per_point_numpy():
+    """One stitched batched dispatch over a mixed population at per-point,
+    per-GEMM depths equals the per-point numpy loop exactly."""
+    pop = ds.sample_random(jax.random.key(9), 32, BC=1)
+    gs = [Gemm(8, 128, 128), Gemm(8192, 4096, 4096)]
+    sched = schedule_gemms(pop, gs, MEM)
+    depths = np.asarray(sched.pf)                       # (2, 32)
+    res = cycle_sim_jax.simulate_scheduled(pop, depths, 3, mem=MEM)
+    tot = np.asarray(res.total_cycles)
+    pps = np.asarray(res.per_pass_steady)
+    for i, row in enumerate(ds.point_rows(pop)):
+        ref = cycle_sim.simulate_scheduled(row, depths[:, i], 3, mem=MEM)
+        assert tot[i] == ref.total_cycles, f"point {i}"
+        assert pps[i] == ref.per_pass_steady, f"point {i}"
+
+
+# ---------------------------------------------------------------------------
+# Population / mapper threading
+# ---------------------------------------------------------------------------
+
+def test_evaluate_population_accepts_schedule_pytree():
+    pop = ds.sample_random(jax.random.key(5), 64, BC=1)
+    gs = [Gemm(8, 128, 128), Gemm(8192, 4096, 4096)]
+    sched = schedule_gemms(pop, gs, MEM)
+    assert isinstance(sched, Schedule)
+    a = evaluate_population(pop, gs, mem=MEM, schedule=True)
+    b = evaluate_population(pop, gs, mem=MEM, schedule=sched)
+    for f in a._fields:
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), f
+    # dominance at population scale vs the design-wide depth
+    fixed = evaluate_population(pop, gs, mem=MEM)
+    assert np.all(np.asarray(a.latency_s) <= np.asarray(fixed.latency_s))
+
+
+def test_mapper_scheduled_dominates_fixed_depths():
+    from repro.configs import PAPER_MODELS
+
+    cfg = PAPER_MODELS["llama3-8b"]
+    p = make_point(AL=256, PC=16, LSL=2, PL=4, OL=1, BR=2, BC=4, TL=32,
+                   dataflow=OS, interconnect=SYSTOLIC, PF=8)
+    kw = dict(n_cores=4, batch=1, seq=2048, mem=LPDDR5)
+    sched_lat = float(evaluate_model(p, cfg, schedule=True, **kw).latency_s)
+    fixed_lats = [
+        float(evaluate_model(p._replace(PF=d), cfg, **kw).latency_s)
+        for d in (1.0, 2.0, 4.0, 8.0)]
+    assert sched_lat <= min(fixed_lats) * (1 + 1e-6)
+    assert max(fixed_lats) > min(fixed_lats)  # the depth axis binds here
+
+
+def test_mapper_scheduled_macs_conserved():
+    """MAC conservation through the mapper's tiled + scheduled path: the
+    scheduled EngineQoR's effective throughput is exactly
+    2 * MACs / latency for the core-split, capacity-tiled workload, whose
+    MACs the tiling conserved."""
+    from repro.configs import PAPER_MODELS
+
+    cfg = PAPER_MODELS["qwen3-0.6b"]
+    p = make_point(AL=256, PC=16, LSL=2, PL=4, OL=1, BR=2, BC=4, TL=32,
+                   dataflow=OS, interconnect=SYSTOLIC, PF=8)
+    n_cores = 2
+    gemms = dedupe_gemms(model_gemms(cfg, mode="prefill", batch=1, seq=1024))
+    split = split_gemms_across_cores(gemms, n_cores)
+    per_core = tile_gemms_for_memory(split, LPDDR5)
+    assert total_macs(per_core) == pytest.approx(total_macs(split), rel=1e-9)
+
+    q = evaluate_model(p, cfg, n_cores=n_cores, batch=1, seq=1024,
+                       mem=LPDDR5, schedule=True)
+    eff = 2.0 * total_macs(per_core) * n_cores / float(q.latency_s) / 1e12
+    assert float(q.eff_tops) == pytest.approx(eff, rel=1e-6)
+
+
+def test_schedule_gemm_single_matches_menu_min():
+    p = make_point(AL=64, PC=16, LSL=2, OL=1, BR=4, BC=1, TL=32,
+                   dataflow=OS, interconnect=SYSTOLIC, PF=8)
+    g = Gemm(8192, 4096, 4096)
+    pf, t = schedule_gemm(p, g, MEM)
+    allowed = [d for d in PF_CHOICES if d <= float(p.PF)]
+    costs = {d: float(gemm_timing(
+        p._replace(PF=d if float(gemm_rounds(p, g)) > d else float("inf")),
+        g, MEM).total_cycles) for d in allowed}
+    assert float(t.total_cycles) == min(costs.values())
+    # shallowest tie-break: no shallower allowed depth achieves the min
+    for d in allowed:
+        if d < float(pf):
+            assert costs[d] > float(t.total_cycles)
+
+
+# ---------------------------------------------------------------------------
+# The CI gate's fifth regime, in-suite at small scale
+# ---------------------------------------------------------------------------
+
+def test_scheduled_fidelity_sweep_smoke():
+    rep = scheduled_fidelity_sweep(jax.random.key(2), n_samples=12,
+                                   mem=SMOKE_MEM, fixed=dict(BC=1))
+    assert len(rep) == 8
+    for label, r in rep.items():
+        assert r["n"] + r["n_deferred"] > 0, label
+        assert r["max_rel_err"] <= 1e-4, (label, r)
+        assert r["frac_within_slack"] == 1.0, (label, r)
