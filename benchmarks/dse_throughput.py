@@ -1,0 +1,125 @@
+"""DSE oracle throughput: single-device vs device-sharded population eval.
+
+The sharded DSE layer's whole pitch is population points/sec, so this
+harness keeps both paths in the bench trajectory: the full pipeline
+(sample -> validity -> closed-form workload evaluation under the smoke
+memory model) is timed single-device in-process, then sharded inside a
+subprocess with 8 forced host devices (the CI-reproducible stand-in for a
+real mesh). The subprocess also re-evaluates its sharded population through
+the unsharded path and counts elementwise mismatches — the sharded layer's
+bit-identity contract is machine-invariant, so any mismatch fails the
+bench (and the perf-regression gate), while the speedup column is tracked
+only: 8 virtual CPU devices share the same cores, so wall-clock gains are
+host-dependent and not enforceable.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+from repro.core import design_space as ds, dse
+
+from .common import write_csv
+
+N_POINTS = 65536
+SEED = 42
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np
+import jax
+from repro.core import design_space as ds, dse
+from repro.launch.mesh import make_dse_mesh
+
+n, seed = {n}, {seed}
+mesh = make_dse_mesh()
+key = jax.random.key(seed)
+mem = dse.SMOKE_MEM
+gemms = list(dse.SMOKE_SCHED_GEMMS)
+
+
+def pipeline(mesh_):
+    pop = (ds.sample_random_sharded(key, n, mesh_) if mesh_ is not None
+           else ds.sample_random_blocked(key, n, 8))
+    valid = dse.population_valid(pop, mem, mesh_)
+    ppa = dse.evaluate_population(pop, gemms, mem, mesh=mesh_)
+    return pop, valid, ppa
+
+
+pipeline(mesh)  # warm the traces
+best = float("inf")
+for _ in range(3):
+    t0 = time.perf_counter()
+    _, valid, ppa = pipeline(mesh)
+    jax.block_until_ready(ppa.latency_s)
+    best = min(best, time.perf_counter() - t0)
+
+# bit-identity: the same population through the unsharded path
+pop_s, valid_s, ppa_s = pipeline(mesh)
+pop_1, valid_1, ppa_1 = pipeline(None)
+mism = sum(int(np.sum(np.asarray(a) != np.asarray(b)))
+           for a, b in zip(pop_s, pop_1))
+mism += int(np.sum(np.asarray(valid_s) != np.asarray(valid_1)))
+mism += sum(int(np.sum(~((np.asarray(a) == np.asarray(b))
+                         | (np.isnan(np.asarray(a))
+                            & np.isnan(np.asarray(b))))))
+            for a, b in zip(ppa_s, ppa_1))
+print(json.dumps({{"n_devices": len(jax.devices()),
+                   "sharded_s": best, "mismatches": mism}}))
+"""
+
+
+def dse_throughput():
+    root = Path(__file__).resolve().parent.parent
+    key = jax.random.key(SEED)
+    mem = dse.SMOKE_MEM
+    gemms = list(dse.SMOKE_SCHED_GEMMS)
+
+    def pipeline():
+        pop = ds.sample_random_blocked(key, N_POINTS, 8)
+        valid = dse.population_valid(pop, mem)
+        ppa = dse.evaluate_population(pop, gemms, mem)
+        return valid, ppa
+
+    pipeline()  # warm the traces
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        _, ppa = pipeline()
+        jax.block_until_ready(ppa.latency_s)
+        best = min(best, time.perf_counter() - t0)
+    single_pts = N_POINTS / best
+
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT.format(n=N_POINTS, seed=SEED)],
+        capture_output=True, text=True, cwd=root, timeout=900,
+        env={**__import__("os").environ, "PYTHONPATH": str(root / "src")})
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded bench subprocess failed: "
+                           f"{proc.stderr[-2000:]}")
+    rep = json.loads(proc.stdout.strip().splitlines()[-1])
+    sharded_pts = N_POINTS / rep["sharded_s"]
+    mismatches = rep["mismatches"]
+    if mismatches:
+        raise AssertionError(
+            f"sharded DSE path diverges from single-device on "
+            f"{mismatches} elements — the bit-identity contract is broken")
+
+    write_csv(
+        "bench/dse_throughput.csv",
+        ["path", "devices", "points", "points_per_s", "mismatches"],
+        [["single", 1, N_POINTS, single_pts, 0],
+         ["sharded", rep["n_devices"], N_POINTS, sharded_pts, mismatches]],
+    )
+    derived = (f"single={single_pts:.0f}pts/s "
+               f"sharded[{rep['n_devices']}dev]={sharded_pts:.0f}pts/s "
+               f"speedup={sharded_pts / single_pts:.2f}x "
+               f"mismatches={mismatches}")
+    return best * 1e6, derived

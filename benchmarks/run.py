@@ -16,6 +16,7 @@ def main() -> None:
     ap.add_argument("--budget", default="small", choices=["small", "full"])
     args = ap.parse_args()
 
+    from .dse_throughput import dse_throughput
     from .paper_figures import ALL, table3_llm_case_study
     from .roofline import roofline_table
     from .sim_throughput import sim_throughput
@@ -24,6 +25,7 @@ def main() -> None:
     benches["table3_llm_case_study"] = lambda: table3_llm_case_study(args.budget)
     benches["roofline_table"] = roofline_table
     benches["sim_throughput"] = sim_throughput
+    benches["dse_throughput"] = dse_throughput
 
     print("name,us_per_call,derived")
     failed = []

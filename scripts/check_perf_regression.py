@@ -23,9 +23,17 @@ Bit-exactness between the numpy and JAX simulators is the bench's own hard
 guard: ``benchmarks.sim_throughput`` raises before a CSV is ever written,
 failing the CI step upstream of this comparison.
 
+``--dse-current`` additionally (or instead) gates the sharded-DSE bench CSV
+(``benchmarks.dse_throughput``): the sharded-vs-single-device mismatch
+count is machine-invariant — the sharded layer's contract is bit-identity —
+so any nonzero count fails outright, while the sharded speedup is printed
+and tracked only (virtual CPU devices share the host's cores, so wall-clock
+gains are not enforceable on CI runners).
+
     python scripts/check_perf_regression.py \
         --baseline /tmp/sim_throughput.baseline.csv \
-        --current results/bench/sim_throughput.csv [--min-ratio 0.5]
+        --current results/bench/sim_throughput.csv [--min-ratio 0.5] \
+        [--dse-current results/bench/dse_throughput.csv]
 """
 from __future__ import annotations
 
@@ -45,17 +53,54 @@ def read_points_per_s(path: Path) -> dict[str, float]:
     return {r["backend"]: float(r["points_per_s"]) for r in rows}
 
 
+def check_dse_consistency(path: Path) -> bool:
+    """Gate the sharded-DSE bench CSV: mismatches must be 0 (bit-identity
+    is machine-invariant); the speedup is reported, not enforced."""
+    with open(path, newline="") as f:
+        rows = {r["path"]: r for r in csv.DictReader(f)}
+    for want in ("single", "sharded"):
+        if want not in rows:
+            print(f"FAIL: {path} lacks a '{want}' row")
+            return False
+    bad = False
+    for name, r in rows.items():
+        if int(float(r["mismatches"])) != 0:
+            print(f"FAIL: dse_throughput '{name}' reports "
+                  f"{r['mismatches']} sharded-vs-single mismatches "
+                  f"(bit-identity contract broken)")
+            bad = True
+    if not bad:
+        speedup = (float(rows["sharded"]["points_per_s"])
+                   / float(rows["single"]["points_per_s"]))
+        print(f"OK: sharded DSE bit-identical to single-device "
+              f"({rows['sharded']['devices']} devices, "
+              f"{rows['sharded']['points']} points); speedup "
+              f"{speedup:.2f}x (tracked, not enforced)")
+    return not bad
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", type=Path, required=True)
-    ap.add_argument("--current", type=Path, required=True)
+    ap.add_argument("--baseline", type=Path)
+    ap.add_argument("--current", type=Path)
     ap.add_argument("--min-ratio", type=float, default=0.5,
                     help="fail when the machine-invariant jax/numpy speedup "
                          "drops below this fraction of the baseline speedup")
     ap.add_argument("--min-abs-ratio", type=float, default=0.1,
                     help="fail when a backend's raw points/sec drops below "
                          "this fraction of baseline (uniform-cliff backstop)")
+    ap.add_argument("--dse-current", type=Path,
+                    help="dse_throughput bench CSV to gate for sharded-vs-"
+                         "single-device consistency (mismatches must be 0)")
     args = ap.parse_args()
+
+    dse_ok = True
+    if args.dse_current is not None:
+        dse_ok = check_dse_consistency(args.dse_current)
+    if args.baseline is None or args.current is None:
+        if args.dse_current is None:
+            ap.error("--baseline/--current (and/or --dse-current) required")
+        return 0 if dse_ok else 1
 
     base = read_points_per_s(args.baseline)
     cur = read_points_per_s(args.current)
@@ -88,7 +133,7 @@ def main() -> int:
         print(f"FAIL: machine-invariant speedup fell below "
               f"{args.min_ratio:.2f}x of baseline")
         failed = True
-    if failed:
+    if failed or not dse_ok:
         return 1
     print(f"OK: speedup within {args.min_ratio:.2f}x of baseline; all "
           f"backends above the {args.min_abs_ratio:.2f}x absolute backstop")

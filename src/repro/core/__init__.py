@@ -7,13 +7,15 @@ from .cycle_sim_jax import simulate_batched
 from .dataflow import (DataflowTiming, Gemm, gemm_rounds, gemm_timing,
                        round_cycles, steady_pass_cycles, workload_timing)
 from .design_space import (BROADCAST, OS, SYSTOLIC, WS, DesignPoint,
-                           enumerate_grid, is_valid, make_point, sample_random)
+                           enumerate_grid, is_valid, make_point,
+                           sample_random, sample_random_blocked,
+                           sample_random_sharded)
 from .dse import (ALL_DATAFLOWS, DataflowName, dataflow_pareto_sweep,
-                  fidelity_sweep, optimize_for_model,
+                  fidelity_sweep, optimize_for_model, population_valid,
                   scheduled_fidelity_sweep)
 from .mapper import EngineQoR, evaluate_model, tile_gemms_for_memory
 from .memory import IDEAL, LPDDR5, MemoryConfig, make_memory
-from .pareto import pareto_front, pareto_mask
+from .pareto import PARETO_BLOCK, pareto_front, pareto_mask, pareto_mask_blocked
 from .ppa import ArrayPPA, evaluate_peak, evaluate_workload, qor_objective
 from .schedule import Schedule, schedule_gemms, scheduled_workload_timing
 
@@ -25,12 +27,14 @@ __all__ = [
     "DataflowTiming", "Gemm", "gemm_rounds", "gemm_timing", "round_cycles",
     "steady_pass_cycles", "workload_timing",
     "BROADCAST", "OS", "SYSTOLIC", "WS", "DesignPoint", "enumerate_grid",
-    "is_valid", "make_point", "sample_random",
+    "is_valid", "make_point", "sample_random", "sample_random_blocked",
+    "sample_random_sharded",
     "ALL_DATAFLOWS", "DataflowName", "dataflow_pareto_sweep",
-    "fidelity_sweep", "optimize_for_model", "scheduled_fidelity_sweep",
+    "fidelity_sweep", "optimize_for_model", "population_valid",
+    "scheduled_fidelity_sweep",
     "EngineQoR", "evaluate_model", "tile_gemms_for_memory",
     "IDEAL", "LPDDR5", "MemoryConfig", "make_memory",
-    "pareto_front", "pareto_mask",
+    "PARETO_BLOCK", "pareto_front", "pareto_mask", "pareto_mask_blocked",
     "ArrayPPA", "evaluate_peak", "evaluate_workload", "qor_objective",
     "Schedule", "schedule_gemms", "scheduled_workload_timing",
 ]

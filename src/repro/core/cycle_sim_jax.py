@@ -428,9 +428,50 @@ _JIT_RUNNERS = {
     "os_s_nol": jax.jit(_os_systolic_nol, static_argnums=(6, 7)),
 }
 
+#: raw runner + its array-argument count (the leading args; the trailing
+#: static ints are closed over by the sharded wrappers)
+_RAW_RUNNERS = {
+    "ws_b": (_ws_broadcast, 7),
+    "ws_s": (_ws_systolic, 7),
+    "os_b": (_os_broadcast, 7),
+    "os_s_ol": (_os_systolic_ol, 6),
+    "os_s_nol": (_os_systolic_nol, 6),
+}
+
+_SHARDED_RUNNERS: dict = {}
+
+
+def _get_runner(key: str, statics: tuple, mesh):
+    """Dispatchable runner for one (variant, static config): the plain
+    jitted runner on ``mesh=None``, else a jitted ``shard_map`` of the same
+    scan over the mesh's ``"pop"`` axis. The runners are elementwise over
+    the batch (each lane simulates its own point; no cross-point ops), so
+    the sharded scan is bit-identical to the single-device one — each
+    device just carries its slice of the lanes. Wrappers are cached per
+    (variant, statics, mesh) so repeated sweeps reuse one trace."""
+    if mesh is None:
+        jitted = _JIT_RUNNERS[key]
+        return lambda *arrays: jitted(*arrays, *statics)
+    ck = (key, statics, mesh)
+    fn = _SHARDED_RUNNERS.get(ck)
+    if fn is None:
+        from ..launch.mesh import shard_map_compat  # deferred: keep core
+        from jax.sharding import PartitionSpec as P  # light without launch
+        raw, nargs = _RAW_RUNNERS[key]
+
+        def body(*arrays):
+            return raw(*arrays, *statics)
+
+        fn = jax.jit(shard_map_compat(
+            body, mesh, in_specs=(P("pop"),) * nargs,
+            out_specs=(P("pop"), P("pop"))))
+        _SHARDED_RUNNERS[ck] = fn
+    return fn
+
 
 def simulate_batched(p: DesignPoint, n_passes,
-                     mem: MemoryConfig | None = None) -> SimResult:
+                     mem: MemoryConfig | None = None,
+                     mesh=None) -> SimResult:
     """Simulate a batch of design points in one (or a few) jitted dispatches.
 
     ``p`` follows the ``evaluate_population`` convention: every field is a
@@ -446,8 +487,16 @@ def simulate_batched(p: DesignPoint, n_passes,
     ``fidelity_sweep`` case) pay for exactly one scan. Finite prefetch
     depths add one sub-batch per distinct depth (the runners are
     specialized on a static D, like the WS runners on LSL).
+
+    ``mesh`` (a ``launch.mesh.make_dse_mesh`` population mesh) runs every
+    per-group scan sharded over the mesh's ``"pop"`` axis via shard_map:
+    groups are padded to a multiple of the device count and each device
+    simulates its slice of the lanes — bit-identical to the single-device
+    path (the scans are elementwise over the batch), at 1/n_devices the
+    per-device round trip.
     """
     shape = jnp.shape(p.AL)
+    ndev = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
     flat = jax.tree.map(
         lambda x: jnp.reshape(jnp.asarray(x, jnp.float32), (-1,)), p)
     n = flat.AL.shape[0]
@@ -503,6 +552,7 @@ def simulate_batched(p: DesignPoint, n_passes,
 
     for key, d, idx in groups:
         m = _bucket(len(idx))
+        m += -m % ndev  # sharded groups split evenly across the mesh
         # pad by repeating the first point — simulated, then discarded
         pad = np.concatenate([idx, np.full(m - len(idx), idx[0], np.int64)])
         tc = jnp.asarray(tc_all[pad])
@@ -517,28 +567,23 @@ def simulate_batched(p: DesignPoint, n_passes,
             P = _bucket(int((passes[pad] + m_all[pad]).max()), lo=2)
             pa = jnp.asarray(passes[pad], jnp.int32)
             pb = jnp.asarray((passes[pad] + m_all[pad]), jnp.int32)
+            run = _get_runner(key, (lsl, P, d), mesh)
             if key == "ws_b":
                 BRf = jnp.asarray(BR[pad], jnp.float32)
-                ea, eb = _JIT_RUNNERS["ws_b"](
-                    tc, ts, BRf, olb, Fb, pa, pb, lsl, P, d)
+                ea, eb = run(tc, ts, BRf, olb, Fb, pa, pb)
             else:
-                ea, eb = _JIT_RUNNERS["ws_s"](
-                    tc, ts, rlast, olb, Fb, pa, pb, lsl, P, d)
+                ea, eb = run(tc, ts, rlast, olb, Fb, pa, pb)
         else:
             C = _bucket(-(-int(rb[pad].max()) // _CHUNK))
             # snapshots compare against the int32 round counter
             rai = jnp.asarray(ra[pad], jnp.int32)
             rbi = jnp.asarray(rb[pad], jnp.int32)
+            run = _get_runner(key, (C, d), mesh)
             if key == "os_b":
                 BRf = jnp.asarray(BR[pad], jnp.float32)
-                ea, eb = _JIT_RUNNERS["os_b"](
-                    tc, ts, BRf, olb, Fb, rai, rbi, C, d)
-            elif key == "os_s_ol":
-                ea, eb = _JIT_RUNNERS["os_s_ol"](
-                    tc, ts, rlast, Fb, rai, rbi, C, d)
+                ea, eb = run(tc, ts, BRf, olb, Fb, rai, rbi)
             else:
-                ea, eb = _JIT_RUNNERS["os_s_nol"](
-                    tc, ts, rlast, Fb, rai, rbi, C, d)
+                ea, eb = run(tc, ts, rlast, Fb, rai, rbi)
         end_a[idx] = np.asarray(ea)[: len(idx)]
         end_b[idx] = np.asarray(eb)[: len(idx)]
 
@@ -561,7 +606,8 @@ def simulate_batched(p: DesignPoint, n_passes,
 
 
 def simulate_scheduled(p: DesignPoint, depths, n_passes,
-                       mem: MemoryConfig | None = None) -> SimResult:
+                       mem: MemoryConfig | None = None,
+                       mesh=None) -> SimResult:
     """Batched per-GEMM prefetch-depth schedules: GEMM g's segment is
     dispatched to the static-depth-specialized runners at depth
     ``depths[g]`` (``simulate_batched`` already buckets a mixed-depth
@@ -581,7 +627,7 @@ def simulate_scheduled(p: DesignPoint, depths, n_passes,
     tot = pps = busy = None
     for gi in range(n_gemms):
         r = simulate_batched(p._replace(PF=jnp.asarray(depths[gi])),
-                             passes[gi], mem=mem)
+                             passes[gi], mem=mem, mesh=mesh)
         tot = r.total_cycles if tot is None else tot + r.total_cycles
         pps = r.per_pass_steady if pps is None else pps + r.per_pass_steady
         busy = r.compute_busy if busy is None else busy + r.compute_busy

@@ -3,9 +3,24 @@
 This is AccelCIM's outer loop. Everything vectorizes: a population of design
 points is a DesignPoint of batched arrays; `evaluate_population` jits one
 closed-form evaluation over the whole population at once.
+
+Every stage of the loop is optionally **device-sharded** over a 1-D
+population mesh (``launch.mesh.make_dse_mesh``; pass it as ``mesh=``):
+sampling is born sharded (``design_space.sample_random_sharded``), validity
+and the closed-form evaluators run under ``shard_map`` with each shard
+holding n/n_devices points, and the cycle-sim fidelity oracle dispatches
+its static-shape bucketed runners per shard
+(``cycle_sim_jax.simulate_batched(mesh=...)``). All of these computations
+are elementwise over the population axis, so the sharded path is
+bit-identical to the single-device one — the tests force an 8-virtual-
+device CPU mesh (``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+and assert exact equality. Pareto extraction at population scale goes
+through the streaming/blocked reduction in ``pareto.py``, so the
+million-point sweep never materializes an n x n dominance matrix.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
 from typing import Sequence
@@ -47,31 +62,86 @@ ALL_DATAFLOWS = [
 ]
 
 
-#: jitted evaluation wrappers keyed on (gemms, mem, mode) so repeated
+#: jitted evaluation wrappers keyed on (gemms, mem, mode, mesh) so repeated
 #: evaluate_population calls — in particular re-scoring one population at
-#: many externally chosen Schedules — reuse one trace instead of
-#: recompiling per call (jax.jit caches per wrapped-callable object).
-_POP_EVAL_CACHE: dict = {}
+#: many externally chosen Schedules, and the peak-throughput mode that used
+#: to rebuild ``jax.jit(evaluate_peak)`` (and thus retrace) on every call —
+#: reuse one trace instead of recompiling (jax.jit caches per
+#: wrapped-callable object). Bounded LRU: long parameter scans (many
+#: distinct gemm lists / memory configs) evict the oldest wrapper instead
+#: of growing without bound; jit's own trace cache dies with the wrapper.
+_POP_EVAL_CACHE: OrderedDict = OrderedDict()
+_POP_EVAL_CACHE_MAX = 32
 
 
-def _pop_eval_fn(gemms: tuple, mem, mode: str):
-    key = (gemms, mem, mode)
+def _pop_eval_fn(gemms: tuple | None, mem, mode: str, mesh=None):
+    key = (gemms, mem, mode, mesh)
     fn = _POP_EVAL_CACHE.get(key)
-    if fn is None:
-        if mode == "schedule_arg":
-            fn = jax.jit(lambda p_, s_: evaluate_workload(
-                p_, list(gemms), mem, schedule=s_))
-        else:
-            fn = jax.jit(partial(
-                evaluate_workload, gemms=list(gemms), mem=mem,
-                schedule=True if mode == "scheduled" else None))
-        _POP_EVAL_CACHE[key] = fn
+    if fn is not None:
+        _POP_EVAL_CACHE.move_to_end(key)
+        return fn
+    if mode == "peak":
+        base = evaluate_peak
+    elif mode == "valid":
+        base = partial(ds.is_valid, mem=mem)
+    elif mode == "schedule_arg":
+        base = lambda p_, s_: evaluate_workload(
+            p_, list(gemms), mem, schedule=s_)
+    else:
+        base = partial(evaluate_workload, gemms=list(gemms), mem=mem,
+                       schedule=True if mode == "scheduled" else None)
+    if mesh is None:
+        fn = jax.jit(base)
+    else:
+        # every evaluator is elementwise over the population axis, so
+        # sharding is a pure data split: each shard evaluates its
+        # n/n_devices block independently (bit-identical to single-device)
+        from jax.sharding import PartitionSpec as P
+
+        from ..launch.mesh import shard_map_compat
+        in_specs = ((P("pop"), P(None, "pop")) if mode == "schedule_arg"
+                    else (P("pop"),))
+        fn = jax.jit(shard_map_compat(base, mesh, in_specs=in_specs,
+                                      out_specs=P("pop")))
+    _POP_EVAL_CACHE[key] = fn
+    if len(_POP_EVAL_CACHE) > _POP_EVAL_CACHE_MAX:
+        _POP_EVAL_CACHE.popitem(last=False)
     return fn
+
+
+def _pad_pop(tree, pad: int):
+    """Repeat each leaf's trailing element ``pad`` times along the
+    population (last) axis — shard_map needs n divisible by the mesh, and
+    edge-repetition keeps every padded row a real, already-valid point."""
+    if not pad:
+        return tree
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.repeat(x[..., -1:], pad, axis=-1)], axis=-1),
+        tree)
+
+
+def _mesh_size(mesh) -> int:
+    return int(np.prod(mesh.devices.shape))
+
+
+def population_valid(pop: DesignPoint, mem: MemoryConfig | None = None,
+                     mesh=None) -> jnp.ndarray:
+    """Structural validity of a population (``design_space.is_valid``),
+    optionally sharded over a population mesh. Pads to a mesh multiple by
+    edge-repetition and slices back, so any n works."""
+    if mesh is None:
+        return ds.is_valid(pop, mem)
+    n = int(np.shape(pop.AL)[0])
+    pad = -n % _mesh_size(mesh)
+    fn = _pop_eval_fn(None, mem, "valid", mesh)
+    return fn(_pad_pop(pop, pad))[:n]
 
 
 def evaluate_population(pop: DesignPoint, gemms: Sequence[Gemm] | None,
                         mem: MemoryConfig | None = None,
-                        schedule: Schedule | bool | None = None):
+                        schedule: Schedule | bool | None = None,
+                        mesh=None):
     """Jitted closed-form evaluation of a whole population.
 
     gemms=None -> peak-throughput mode (paper §4.1 'absence of a specific
@@ -80,16 +150,45 @@ def evaluate_population(pop: DesignPoint, gemms: Sequence[Gemm] | None,
     (PF as the FIFO capacity, see ``schedule.py``); a precomputed
     ``Schedule`` pytree is threaded through the jitted call as a traced
     argument, so re-scoring a population at externally chosen depths
-    reuses one cached trace instead of recompiling per schedule."""
+    reuses one cached trace instead of recompiling per schedule.
+
+    ``mesh`` (a 1-D ``launch.mesh.make_dse_mesh`` population mesh) runs
+    the evaluation under shard_map with each device holding n/n_devices
+    points — bit-identical to the single-device path (the evaluators are
+    elementwise over the population). Populations whose n is not a mesh
+    multiple are edge-padded in and sliced back out."""
+    n = pad = 0
+    if mesh is not None:
+        n = int(np.shape(pop.AL)[0])
+        pad = -n % _mesh_size(mesh)
+        pop = _pad_pop(pop, pad)
+        if isinstance(schedule, Schedule):
+            schedule = _pad_pop(schedule, pad)
     if gemms is None:
-        fn = jax.jit(evaluate_peak)
-        return fn(pop)
-    if isinstance(schedule, Schedule):
-        fn = _pop_eval_fn(tuple(gemms), mem, "schedule_arg")
-        return fn(pop, schedule)
-    fn = _pop_eval_fn(tuple(gemms), mem,
-                      "scheduled" if schedule else "plain")
-    return fn(pop)
+        fn = _pop_eval_fn(None, None, "peak", mesh)
+        out = fn(pop)
+    elif isinstance(schedule, Schedule):
+        fn = _pop_eval_fn(tuple(gemms), mem, "schedule_arg", mesh)
+        out = fn(pop, schedule)
+    else:
+        fn = _pop_eval_fn(tuple(gemms), mem,
+                          "scheduled" if schedule else "plain", mesh)
+        out = fn(pop)
+    if pad:
+        out = jax.tree.map(lambda x: x[..., :n], out)
+    return out
+
+
+def _sample(key: jax.Array, n: int, mesh, **fixed) -> DesignPoint:
+    if mesh is None:
+        return ds.sample_random(key, n, **fixed)
+    return ds.sample_random_sharded(key, n, mesh, **fixed)
+
+
+def _round_to_mesh(n: int, mesh) -> int:
+    """Round a sweep's sample count up to a mesh multiple (sharded
+    sampling keeps every shard the same size)."""
+    return n + (-n % _mesh_size(mesh)) if mesh is not None else n
 
 
 def dataflow_pareto_sweep(
@@ -99,26 +198,47 @@ def dataflow_pareto_sweep(
     objectives: tuple[str, str] = ("latency_s", "area_mm2"),
     dataflows: Sequence[DataflowName] = tuple(ALL_DATAFLOWS),
     mem: MemoryConfig | None = None,
+    mesh=None,
 ):
     """Fig. 8 machinery: per-dataflow random-population Pareto fronts over
     (performance, area) and (performance, power) — optionally under a
     finite off-chip memory model (``mem``), which opens the memory-bound
     half of the space: bandwidth-starved points pick up latency and
-    capacity-starved points drop out of the valid set."""
+    capacity-starved points drop out of the valid set.
+
+    Invalid points are filtered out *before* front extraction (they used
+    to be masked to +inf, and an entirely-invalid population — all-inf
+    rows, mutually non-dominated — leaked back as a bogus full-population
+    "front"; now a zero-valid variant reports an explicitly empty front).
+    Each variant's result carries ``n_valid``. With ``mesh``, sampling,
+    validity, and evaluation run device-sharded (n_samples rounds up to a
+    mesh multiple), and front extraction streams through the blocked
+    Pareto reduction — the combination holds memory at O(n/n_dev + block²)
+    so million-point sweeps fit."""
+    n_samples = _round_to_mesh(n_samples, mesh)
     out = {}
     for dfn in dataflows:
         key, k = jax.random.split(key)
-        pop = ds.sample_random(
-            k, n_samples, dataflow=dfn.dataflow, interconnect=dfn.interconnect, OL=dfn.ol
+        pop = _sample(
+            k, n_samples, mesh,
+            dataflow=dfn.dataflow, interconnect=dfn.interconnect, OL=dfn.ol
         )
-        valid = np.asarray(ds.is_valid(pop, mem))
-        ppa = evaluate_population(pop, gemms, mem)
+        valid = np.asarray(population_valid(pop, mem, mesh))
+        ppa = evaluate_population(pop, gemms, mem, mesh=mesh)
         objs = np.stack(
             [np.asarray(getattr(ppa, o)) for o in objectives], axis=-1
         )
-        objs = np.where(valid[:, None], objs, np.inf)
-        front, pts = pareto_front(objs, np.stack([np.asarray(f) for f in pop], axis=-1))
-        out[dfn.label] = dict(front=front, points=pts)
+        pts = np.stack([np.asarray(f) for f in pop], axis=-1)
+        objs, pts = objs[valid], pts[valid]
+        n_valid = int(objs.shape[0])
+        if n_valid == 0:
+            out[dfn.label] = dict(
+                front=np.zeros((0, len(objectives)), objs.dtype),
+                points=np.zeros((0, pts.shape[1]), pts.dtype),
+                n_valid=0)
+            continue
+        front, fpts = pareto_front(objs, pts)
+        out[dfn.label] = dict(front=front, points=fpts, n_valid=n_valid)
     return out
 
 
@@ -130,6 +250,7 @@ def fidelity_sweep(
     dataflows: Sequence[DataflowName] = tuple(ALL_DATAFLOWS),
     mem: MemoryConfig | None = None,
     fixed: dict | None = None,
+    mesh=None,
 ):
     """Population-scale cross-validation of the closed forms against the
     batched cycle simulator — the systematic sim-vs-model check the paper's
@@ -165,17 +286,23 @@ def fidelity_sweep(
     the drift statistics, and validated instead by the float64 numpy
     oracle at long horizons in the test suite.
 
+    ``mesh`` shards the oracle: sampling, validity, the batched simulator,
+    and the closed-form scoring all run device-split over the population
+    mesh, bit-identically to the single-device sweep at the same seed.
+
     Returns {variant label: {n, n_deferred, max_rel_err, mean_rel_err,
     frac_within_slack[, mean_util]}}.
     """
+    n_samples = _round_to_mesh(n_samples, mesh)
     out = {}
     for dfn in dataflows:
         key, k = jax.random.split(key)
-        pop = ds.sample_random(
-            k, n_samples, dataflow=dfn.dataflow, interconnect=dfn.interconnect,
+        pop = _sample(
+            k, n_samples, mesh,
+            dataflow=dfn.dataflow, interconnect=dfn.interconnect,
             OL=dfn.ol, **(fixed or {}),
         )
-        valid = np.asarray(ds.is_valid(pop, mem))
+        valid = np.asarray(population_valid(pop, mem, mesh))
         measurable = np.asarray(cycle_sim_jax.steady_measurable(pop, mem=mem))
         n_deferred = int((valid & ~measurable).sum())
         valid = valid & measurable
@@ -184,7 +311,7 @@ def fidelity_sweep(
         # per-point pass counts that reach steady state (see the helper)
         passes = cycle_sim_jax.steady_state_passes(
             popv, min_passes=min_passes, mem=mem)
-        sim = cycle_sim_jax.simulate_batched(popv, passes, mem=mem)
+        sim = cycle_sim_jax.simulate_batched(popv, passes, mem=mem, mesh=mesh)
         closed = np.asarray(steady_pass_cycles(popv, mem), np.float64)
         pps = np.asarray(sim.per_pass_steady, np.float64)
         rel = np.abs(pps - closed) / np.maximum(closed, 1.0)
@@ -201,7 +328,7 @@ def fidelity_sweep(
             frac_within_slack=float(within.mean()) if rel.size else 1.0,
         )
         if gemms is not None:
-            ppa = evaluate_population(popv, gemms, mem)
+            ppa = evaluate_population(popv, gemms, mem, mesh=mesh)
             rep["mean_util"] = float(np.asarray(ppa.utilization).mean())
         out[dfn.label] = rep
     return out
@@ -215,6 +342,7 @@ def scheduled_fidelity_sweep(
     dataflows: Sequence[DataflowName] = tuple(ALL_DATAFLOWS),
     mem: MemoryConfig | None = None,
     fixed: dict | None = None,
+    mesh=None,
 ):
     """``fidelity_sweep`` extended to per-GEMM prefetch-depth schedules —
     the fifth ``scheduled`` regime of the CI smoke gate.
@@ -236,14 +364,16 @@ def scheduled_fidelity_sweep(
     if mem is None:
         mem = SMOKE_MEM
     gemms = list(gemms) if gemms is not None else list(SMOKE_SCHED_GEMMS)
+    n_samples = _round_to_mesh(n_samples, mesh)
     out = {}
     for dfn in dataflows:
         key, k = jax.random.split(key)
-        pop = ds.sample_random(
-            k, n_samples, dataflow=dfn.dataflow, interconnect=dfn.interconnect,
+        pop = _sample(
+            k, n_samples, mesh,
+            dataflow=dfn.dataflow, interconnect=dfn.interconnect,
             OL=dfn.ol, **(fixed or {}),
         )
-        valid = np.asarray(ds.is_valid(pop, mem))
+        valid = np.asarray(population_valid(pop, mem, mesh))
         sched = schedule_gemms(pop, gemms, mem)
         pf = np.asarray(sched.pf)                       # (n_gemms, n)
 
@@ -265,7 +395,8 @@ def scheduled_fidelity_sweep(
             pg = popv._replace(PF=jnp.asarray(pfv[gi]))
             passes = cycle_sim_jax.steady_state_passes(
                 pg, min_passes=min_passes, mem=mem)
-            sim = cycle_sim_jax.simulate_batched(pg, passes, mem=mem)
+            sim = cycle_sim_jax.simulate_batched(pg, passes, mem=mem,
+                                                 mesh=mesh)
             closed = np.asarray(steady_pass_cycles(pg, mem), np.float64)
             pps = np.asarray(sim.per_pass_steady, np.float64)
             rel = np.maximum(rel, np.abs(pps - closed) / np.maximum(closed, 1.0))
@@ -380,7 +511,21 @@ def _fidelity_main(argv=None):  # pragma: no cover - exercised by CI smoke run
                     default=float(SMOKE_MEM.dram_bw_bits_per_cycle),
                     help="bits/cycle for the bandwidth-bound sweeps "
                          "(0 skips them)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run sampling/validity/eval/sim device-sharded "
+                         "over all local devices (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N to "
+                         "virtualize a CPU mesh); results are bit-identical "
+                         "to the single-device sweep at the same seed "
+                         "modulo the sharded sampling stream")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.sharded:
+        from ..launch.mesh import make_dse_mesh
+
+        mesh = make_dse_mesh()
+        print(f"# sharded over {_mesh_size(mesh)} devices")
 
     n = 64 if args.smoke else args.samples
     regimes = [("ideal", None, None)]
@@ -397,7 +542,7 @@ def _fidelity_main(argv=None):  # pragma: no cover - exercised by CI smoke run
         sweep = scheduled_fidelity_sweep if regime == "scheduled" \
             else fidelity_sweep
         rep = sweep(jax.random.key(args.seed), n_samples=n,
-                    mem=mem, fixed=fixed)
+                    mem=mem, fixed=fixed, mesh=mesh)
         worst = 0.0
         for label, r in rep.items():
             print(f"{regime},{label},{r['n']},{r['n_deferred']},"

@@ -1,8 +1,10 @@
 """Launcher: production meshes, sharding rules, step builders, dry-run."""
-from .mesh import dp_axes, make_host_mesh, make_production_mesh
+from .mesh import (dp_axes, make_dse_mesh, make_host_mesh,
+                   make_production_mesh, shard_map_compat)
 from .sharding import batch_specs, cache_specs, param_specs
 from .steps import make_prefill_step, make_serve_step, make_train_step
 
-__all__ = ["dp_axes", "make_host_mesh", "make_production_mesh", "batch_specs",
+__all__ = ["dp_axes", "make_dse_mesh", "make_host_mesh",
+           "make_production_mesh", "shard_map_compat", "batch_specs",
            "cache_specs", "param_specs", "make_prefill_step", "make_serve_step",
            "make_train_step"]

@@ -21,24 +21,13 @@ tests/test_collective_matmul.py on a host mesh.
 """
 from __future__ import annotations
 
-import inspect
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-if hasattr(jax, "shard_map"):  # jax >= 0.5: top-level API
-    _shard_map = jax.shard_map
-else:  # older jax: experimental API
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-# the replication-check kwarg was renamed check_rep -> check_vma
-# independently of shard_map's top-level promotion; key off the signature
-_SHARD_MAP_KW = (
-    {"check_vma": False}
-    if "check_vma" in inspect.signature(_shard_map).parameters
-    else {"check_rep": False}
-)
+# the version-compat shard_map shim lives in mesh.py now (the sharded DSE
+# layer shares it); re-exported here for backwards compatibility
+from .mesh import _SHARD_MAP_KW, _shard_map  # noqa: F401
 
 
 def _axis_size(axis: str):

@@ -1,28 +1,79 @@
-"""Production meshes.
+"""Production meshes + version-compat shard_map.
 
 Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state — the dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import,
 and smoke tests/benches must keep seeing 1 device.
+
+Besides the serving meshes this module hosts the 1-D **population mesh**
+(``make_dse_mesh``) the device-sharded DSE layer shards candidate
+populations over (axis ``"pop"``), and the version-compat ``shard_map``
+shim (``shard_map_compat``) previously private to
+``collective_matmul.py`` — jax moved ``shard_map`` from
+``jax.experimental`` to the top level and renamed its replication-check
+kwarg (``check_rep`` -> ``check_vma``) across the versions CI's matrix
+spans, so every sharded entry point routes through the one shim here.
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
+import numpy as np
+
+if hasattr(jax, "shard_map"):  # jax >= 0.5: top-level API
+    _shard_map = jax.shard_map
+else:  # older jax: experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the replication-check kwarg was renamed check_rep -> check_vma
+# independently of shard_map's top-level promotion; key off the signature
+_SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else {"check_rep": False}
+)
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """``shard_map`` across the jax versions CI supports (top-level vs
+    experimental module, check_vma vs check_rep)."""
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **_SHARD_MAP_KW)
+
+
+def _axis_types_kw(n_axes: int) -> dict:
+    """``axis_types`` only exists on newer jax; the default (Auto) is what
+    every mesh here wants anyway, so pass it only when available."""
+    if hasattr(jax.sharding, "AxisType"):
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds the 2-pod leading axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_host_mesh():
     """Single-device mesh for CPU smoke runs (same axis names, size 1)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"), **_axis_types_kw(2))
+
+
+def make_dse_mesh(n_devices: int | None = None):
+    """1-D population mesh over the visible devices, axis ``"pop"`` — the
+    mesh the sharded DSE layer (``dse.evaluate_population``,
+    ``design_space.sample_random_sharded``, ``cycle_sim_jax``) shards
+    candidate populations over. Built with the raw ``Mesh`` constructor so
+    it works on every jax in CI's matrix (``jax.make_mesh`` is newer).
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before the
+    first jax import) makes multi-device runs CI-testable on one CPU."""
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return jax.sharding.Mesh(np.asarray(devs), ("pop",))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

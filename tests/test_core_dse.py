@@ -6,9 +6,11 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import PAPER_MODELS, get_config
-from repro.core import (bayesopt, evaluate_model, pareto_front,
+from repro.core import (bayesopt, dse, evaluate_model, pareto_front,
                         pareto_mask, sample_random)
+from repro.core.dataflow import Gemm
 from repro.core.mapper import constrained_objective
+from repro.core.memory import MemoryConfig
 from repro.core.workload import (dedupe_gemms, model_flops, model_gemms,
                                  qkv_projection_gemm, total_macs)
 
@@ -42,6 +44,58 @@ def test_pareto_front_sorted_and_nondominated():
     (front,) = pareto_front(obj)
     assert np.all(np.diff(front[:, 0]) >= 0)
     assert np.all(np.diff(front[:, 1]) <= 0)  # 2-D front is a staircase
+
+
+# ---------------------------------------------------------------------------
+# evaluate_population wrapper cache (peak-mode retrace fix + LRU bound)
+# ---------------------------------------------------------------------------
+
+def test_peak_mode_reuses_cached_wrapper():
+    """Regression: peak mode used to rebuild ``jax.jit(evaluate_peak)`` on
+    every call, retracing each time. It must now route through the wrapper
+    cache like every other mode — the second call reuses the same wrapper
+    object (and therefore jit's trace cache)."""
+    dse._POP_EVAL_CACHE.clear()
+    pop = sample_random(jax.random.key(0), 16)
+    a = dse.evaluate_population(pop, None)
+    f1 = dse._POP_EVAL_CACHE[(None, None, "peak", None)]
+    b = dse.evaluate_population(pop, None)
+    f2 = dse._POP_EVAL_CACHE[(None, None, "peak", None)]
+    assert f1 is f2
+    assert len(dse._POP_EVAL_CACHE) == 1
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_pop_eval_cache_is_bounded_lru():
+    """Long parameter scans (many distinct gemm lists / memory configs) must
+    not grow the wrapper cache without bound: oldest entries evict at
+    _POP_EVAL_CACHE_MAX, and a hit refreshes recency."""
+    dse._POP_EVAL_CACHE.clear()
+    cap = dse._POP_EVAL_CACHE_MAX
+    first = (Gemm(8.0, 8.0, 8.0),)
+    second = (Gemm(8.0, 8.0, 16.0),)
+    f_first = dse._pop_eval_fn(first, None, "plain")
+    dse._pop_eval_fn(second, None, "plain")
+    for i in range(2, cap):
+        dse._pop_eval_fn((Gemm(8.0, 8.0, float(8 * (i + 1))),), None, "plain")
+    assert len(dse._POP_EVAL_CACHE) == cap
+    # touch the oldest entry, then overflow: the *second*-oldest evicts
+    assert dse._pop_eval_fn(first, None, "plain") is f_first
+    dse._pop_eval_fn((Gemm(7.0, 7.0, 7.0),), None, "plain")
+    assert len(dse._POP_EVAL_CACHE) == cap
+    assert (first, None, "plain", None) in dse._POP_EVAL_CACHE
+    assert (second, None, "plain", None) not in dse._POP_EVAL_CACHE
+    dse._POP_EVAL_CACHE.clear()
+
+
+def test_distinct_memory_configs_get_distinct_wrappers():
+    dse._POP_EVAL_CACHE.clear()
+    g = (Gemm(64.0, 64.0, 64.0),)
+    f1 = dse._pop_eval_fn(g, MemoryConfig(dram_bw_bits_per_cycle=64.0), "plain")
+    f2 = dse._pop_eval_fn(g, MemoryConfig(dram_bw_bits_per_cycle=128.0), "plain")
+    assert f1 is not f2
+    dse._POP_EVAL_CACHE.clear()
 
 
 # ---------------------------------------------------------------------------

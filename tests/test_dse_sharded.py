@@ -1,0 +1,227 @@
+"""Device-sharded DSE layer: bit-identity with the single-device path.
+
+Two tiers:
+
+  * In-process tests run the sharded code paths on a **1-device** mesh
+    (shard_map is happy with a singleton axis), so the wrappers, padding
+    logic, and cache keys stay covered by the plain tier-1 run.
+  * A subprocess with 8 forced host devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — the same
+    dry-run rule as test_collective_matmul.py) checks the real claim:
+    sampling, validity, closed-form evaluation (every mode), and the
+    cycle-sim oracle are **bit-identical** sharded vs single-device,
+    because every stage is elementwise over the population axis.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cycle_sim_jax, design_space as ds, dse
+from repro.core.schedule import schedule_gemms
+from repro.launch.mesh import make_dse_mesh
+
+ROOT = Path(__file__).resolve().parent.parent
+
+GEMMS = list(dse.SMOKE_SCHED_GEMMS)
+MEM = dse.SMOKE_MEM
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return make_dse_mesh(1)
+
+
+def _assert_points_equal(a: ds.DesignPoint, b: ds.DesignPoint):
+    for f in ds.DesignPoint._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# in-process (1-device mesh): wrappers, padding, parity
+# ---------------------------------------------------------------------------
+
+def test_sharded_sampler_matches_blocked_reference(mesh1):
+    key = jax.random.key(5)
+    _assert_points_equal(
+        ds.sample_random_sharded(key, 32, mesh1, dataflow=ds.WS),
+        ds.sample_random_blocked(key, 32, 1, dataflow=ds.WS))
+
+
+def test_blocked_sampler_is_blockwise_fold_in():
+    key = jax.random.key(1)
+    whole = ds.sample_random_blocked(key, 32, 4)
+    part = ds.sample_random(jax.random.fold_in(key, 2), 8)
+    _assert_points_equal(jax.tree.map(lambda x: x[16:24], whole), part)
+
+
+def test_blocked_sampler_rejects_non_divisible():
+    with pytest.raises(ValueError):
+        ds.sample_random_blocked(jax.random.key(0), 10, 4)
+
+
+def test_population_valid_sharded_parity(mesh1):
+    pop = ds.sample_random(jax.random.key(2), 64)
+    np.testing.assert_array_equal(
+        np.asarray(dse.population_valid(pop, MEM, mesh1)),
+        np.asarray(ds.is_valid(pop, MEM)))
+
+
+def test_evaluate_population_sharded_parity_all_modes(mesh1):
+    pop = ds.sample_random(jax.random.key(3), 48)
+    sched = schedule_gemms(pop, GEMMS, MEM)
+    cases = [dict(gemms=None), dict(gemms=GEMMS), dict(gemms=GEMMS, mem=MEM),
+             dict(gemms=GEMMS, mem=MEM, schedule=True),
+             dict(gemms=GEMMS, mem=MEM, schedule=sched)]
+    for kw in cases:
+        a = dse.evaluate_population(pop, **kw)
+        b = dse.evaluate_population(pop, mesh=mesh1, **kw)
+        for f, x, y in zip(type(a)._fields, a, b):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y), err_msg=str((kw.keys(), f)))
+
+
+def test_pad_pop_edge_repeats_and_slices():
+    pop = ds.sample_random(jax.random.key(4), 5)
+    padded = dse._pad_pop(pop, 3)
+    assert np.shape(padded.AL) == (8,)
+    np.testing.assert_array_equal(np.asarray(padded.AL[5:]),
+                                  np.full(3, np.asarray(pop.AL[-1])))
+    sched = schedule_gemms(pop, GEMMS, MEM)
+    spad = dse._pad_pop(sched, 3)
+    assert np.asarray(spad.pf).shape == (len(GEMMS), 8)
+
+
+def test_simulate_batched_sharded_parity(mesh1):
+    pop = ds.sample_random(jax.random.key(6), 64, BC=1)
+    sel = np.asarray(ds.is_valid(pop, MEM) &
+                     cycle_sim_jax.steady_measurable(pop, mem=MEM))
+    popv = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[sel]), pop)
+    passes = cycle_sim_jax.steady_state_passes(popv, mem=MEM)
+    s1 = cycle_sim_jax.simulate_batched(popv, passes, mem=MEM)
+    s2 = cycle_sim_jax.simulate_batched(popv, passes, mem=MEM, mesh=mesh1)
+    for f in ("total_cycles", "per_pass_steady", "compute_busy"):
+        np.testing.assert_array_equal(np.asarray(getattr(s1, f)),
+                                      np.asarray(getattr(s2, f)), err_msg=f)
+
+
+def test_pareto_sweep_sharded_smoke(mesh1):
+    out = dse.dataflow_pareto_sweep(
+        jax.random.key(7), GEMMS, n_samples=128, mem=MEM, mesh=mesh1,
+        dataflows=[dse.DataflowName(ds.WS, ds.SYSTOLIC, 0)])
+    r = out["WS-Systolic-NOL"]
+    assert r["n_valid"] > 0
+    assert np.isfinite(r["front"]).all()
+
+
+def test_fidelity_sweep_sharded_rounds_samples_up(mesh1):
+    rep = dse.fidelity_sweep(
+        jax.random.key(8), n_samples=17, mem=MEM,
+        dataflows=[dse.DataflowName(ds.WS, ds.BROADCAST, 0)],
+        fixed=dict(BC=1, TL=8, PF=float("inf")), mesh=mesh1)
+    r = rep["WS-Broadcast-NOL"]
+    assert r["n"] + r["n_deferred"] <= 17   # 17 is a 1-device multiple
+    assert r["frac_within_slack"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# subprocess: 8 virtual devices, bit-identity of every sharded stage
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import cycle_sim_jax, design_space as ds, dse
+from repro.core.schedule import schedule_gemms
+from repro.launch.mesh import make_dse_mesh
+
+mesh = make_dse_mesh()
+out = {"n_devices": len(jax.devices())}
+key = jax.random.key(7)
+GEMMS = list(dse.SMOKE_SCHED_GEMMS)
+MEM = dse.SMOKE_MEM
+
+def neq(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return int(np.sum(~((a == b) | (np.isnan(a) & np.isnan(b)))))
+
+p1 = ds.sample_random_sharded(key, 64, mesh)
+p2 = ds.sample_random_blocked(key, 64, 8)
+out["sampler_mismatch"] = sum(
+    neq(getattr(p1, f), getattr(p2, f)) for f in ds.DesignPoint._fields)
+
+out["valid_mismatch"] = neq(dse.population_valid(p1, MEM, mesh),
+                            ds.is_valid(p1, MEM))
+
+sched = schedule_gemms(p1, GEMMS, MEM)
+m = 0
+for kw in [dict(gemms=None), dict(gemms=GEMMS), dict(gemms=GEMMS, mem=MEM),
+           dict(gemms=GEMMS, mem=MEM, schedule=True),
+           dict(gemms=GEMMS, mem=MEM, schedule=sched)]:
+    a = dse.evaluate_population(p1, **kw)
+    b = dse.evaluate_population(p1, mesh=mesh, **kw)
+    m += sum(neq(x, y) for x, y in zip(a, b))
+out["eval_mismatch"] = m
+
+# padding: 61 points on an 8-device mesh (pad=3, edge-repeated, sliced back)
+p61 = jax.tree.map(lambda x: x[:61], p1)
+a = dse.evaluate_population(p61, GEMMS, MEM)
+b = dse.evaluate_population(p61, GEMMS, MEM, mesh=mesh)
+out["pad_mismatch"] = sum(neq(x, y) for x, y in zip(a, b))
+out["pad_shape_ok"] = np.asarray(b.latency_s).shape == (61,)
+
+sel = np.asarray(ds.is_valid(p1, MEM) &
+                 cycle_sim_jax.steady_measurable(p1, mem=MEM))
+popv = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[sel]), p1)
+passes = cycle_sim_jax.steady_state_passes(popv, mem=MEM)
+s1 = cycle_sim_jax.simulate_batched(popv, passes, mem=MEM)
+s2 = cycle_sim_jax.simulate_batched(popv, passes, mem=MEM, mesh=mesh)
+out["sim_mismatch"] = sum(
+    neq(getattr(s1, f), getattr(s2, f))
+    for f in ("total_cycles", "per_pass_steady", "compute_busy"))
+
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def result8():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        cwd=ROOT, timeout=600,
+        env={**__import__("os").environ, "PYTHONPATH": str(ROOT / "src")})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_8dev_mesh_built(result8):
+    assert result8["n_devices"] == 8
+
+
+def test_8dev_sampler_bit_identical(result8):
+    assert result8["sampler_mismatch"] == 0
+
+
+def test_8dev_validity_bit_identical(result8):
+    assert result8["valid_mismatch"] == 0
+
+
+def test_8dev_eval_bit_identical_all_modes(result8):
+    assert result8["eval_mismatch"] == 0
+
+
+def test_8dev_padding_bit_identical(result8):
+    assert result8["pad_mismatch"] == 0
+    assert result8["pad_shape_ok"]
+
+
+def test_8dev_sim_oracle_bit_identical(result8):
+    assert result8["sim_mismatch"] == 0

@@ -1,13 +1,16 @@
 """pareto.py + dse.dataflow_pareto_sweep coverage: golden determinism,
-non-domination, permutation invariance, and the degenerate all-invalid path."""
+non-domination, permutation invariance, streaming-vs-dense equivalence of
+the blocked reduction, and the degenerate all-invalid path."""
 import jax
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import design_space as ds
 from repro.core import dse
 from repro.core.dataflow import Gemm
-from repro.core.pareto import hypervolume_2d, pareto_front, pareto_mask
+from repro.core.pareto import (hypervolume_2d, pareto_front, pareto_mask,
+                               pareto_mask_blocked)
 
 
 def dominates(a, b):
@@ -61,9 +64,10 @@ def test_pareto_front_permutation_invariant():
 
 
 def test_pareto_mask_all_inf_population():
-    """The all-invalid-population path: dataflow_pareto_sweep masks invalid
-    points to np.inf — an all-inf population must survive (no point strictly
-    dominates another, so everything stays on the 'front')."""
+    """Dominance semantics of degenerate all-inf rows: no point strictly
+    dominates another, so everything is mutually non-dominated. (This is
+    exactly why dataflow_pareto_sweep must *filter* invalid points rather
+    than mask them to +inf — see test_pareto_sweep_all_invalid_population.)"""
     objs = np.full((8, 2), np.inf)
     mask = np.asarray(pareto_mask(objs))
     assert mask.all()
@@ -75,6 +79,52 @@ def test_inf_points_dominated_by_finite():
     objs = np.array([[1.0, 1.0], [np.inf, np.inf], [np.inf, 2.0]])
     mask = np.asarray(pareto_mask(objs))
     assert mask.tolist() == [True, False, False]
+
+
+# ---------------------------------------------------------------------------
+# streaming/blocked reduction == dense reference
+# ---------------------------------------------------------------------------
+
+def _messy_population(seed, n, d):
+    """Random objectives with duplicate rows and +/-inf entries — the
+    adversarial shapes for the blocked merge (duplicates must keep each
+    other; inf rows must be dominated by any finite row on the same axes)."""
+    rng = np.random.default_rng(seed)
+    obj = rng.standard_normal((n, d)).astype(np.float32)
+    obj[rng.random(n) < 0.1] = np.inf
+    obj[rng.random(n) < 0.05] = -np.inf
+    if n > 1:
+        dup = rng.integers(0, n, max(1, n // 3))
+        obj[dup] = obj[(dup * 7 + 1) % n]
+    return obj
+
+
+@given(st.tuples(st.integers(0, 10_000), st.sampled_from((1, 7, 63, 64, 65, 300, 1000)),
+                 st.sampled_from((2, 3))))
+@settings(max_examples=25, deadline=None)
+def test_blocked_mask_matches_dense(params):
+    seed, n, d = params
+    obj = _messy_population(seed, n, d)
+    dense = np.asarray(pareto_mask(obj))
+    for block in (1, 17, 64, 4096):
+        assert np.array_equal(pareto_mask_blocked(obj, block=block), dense), \
+            (seed, n, d, block)
+
+
+def test_blocked_mask_all_inf_and_empty():
+    assert pareto_mask_blocked(np.full((50, 2), np.inf), block=16).all()
+    assert pareto_mask_blocked(np.zeros((0, 2)), block=16).shape == (0,)
+
+
+def test_pareto_front_blocked_dispatch_matches_dense():
+    """pareto_front auto-streams past one block — same front, same aligned
+    extras, no n x n matrix."""
+    obj = _messy_population(3, 2000, 2)
+    tags = np.arange(2000)
+    f1, t1 = pareto_front(obj, tags)                 # dense (block >= n)
+    f2, t2 = pareto_front(obj, tags, block=128)      # streaming
+    np.testing.assert_array_equal(f1, f2)
+    np.testing.assert_array_equal(t1, t2)
 
 
 def test_hypervolume_2d():
@@ -122,15 +172,29 @@ def test_pareto_sweep_fronts_nondominated_and_sorted():
                     assert not dominates(g, f), (label, f, g)
 
 
+def test_pareto_sweep_filters_invalid_and_reports_n_valid():
+    """Invalid points must be dropped *before* front extraction — the front
+    contains only finite, valid-point objectives (the old inf-masking let
+    all-inf rows back in as mutually 'non-dominated' front members)."""
+    out = _sweep(seed=3)
+    for label, d in out.items():
+        assert d["n_valid"] > 0, label
+        assert d["front"].shape[0] <= d["n_valid"]
+        assert np.isfinite(d["front"]).all(), label
+        assert d["points"].shape[0] == d["front"].shape[0]
+
+
 def test_pareto_sweep_all_invalid_population(monkeypatch):
-    """When every sampled point is invalid all objectives become np.inf; the
-    sweep must still return a well-formed (degenerate) front, not crash."""
+    """An entirely-invalid population must yield an explicitly *empty* front
+    (n_valid=0), not a bogus full-population 'front' of mutually
+    non-dominated all-inf rows — the bug the +inf masking used to hide."""
     monkeypatch.setattr(
         dse.ds, "is_valid",
         lambda p, mem=None: np.zeros(np.shape(np.asarray(p.AL)), dtype=bool))
     out = dse.dataflow_pareto_sweep(
         jax.random.key(0), GEMMS, n_samples=64,
         dataflows=[dse.DataflowName(ds.WS, ds.SYSTOLIC, 0)])
-    front = out["WS-Systolic-NOL"]["front"]
-    assert front.shape[0] == 64
-    assert np.isinf(front).all()
+    r = out["WS-Systolic-NOL"]
+    assert r["n_valid"] == 0
+    assert r["front"].shape == (0, 2)
+    assert r["points"].shape[0] == 0
