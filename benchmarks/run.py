@@ -19,6 +19,7 @@ def main() -> None:
     from .dse_throughput import dse_throughput
     from .paper_figures import ALL, table3_llm_case_study
     from .roofline import roofline_table
+    from .serve_throughput import serve_throughput
     from .sim_throughput import sim_throughput
 
     benches = dict(ALL)
@@ -26,6 +27,7 @@ def main() -> None:
     benches["roofline_table"] = roofline_table
     benches["sim_throughput"] = sim_throughput
     benches["dse_throughput"] = dse_throughput
+    benches["serve_throughput"] = serve_throughput
 
     print("name,us_per_call,derived")
     failed = []

@@ -1,0 +1,81 @@
+"""Serving throughput: continuous-batched engine vs sequential decoding.
+
+Replays one seeded trace (yi-6b smoke config) twice — through the
+slot-batched ``repro.serve`` engine with mid-decode eviction/refill, and
+per-request through ``sequential_decode`` — and reports decoded tokens/s
+for both plus the number of requests whose token streams differ.
+
+The mismatch count is the machine-invariant signal: the engine's contract
+on the dense/GQA families is bit-identity with sequential decoding, so any
+nonzero count fails the bench (and the ``--serve-current`` perf gate).
+Tokens/s and the batching speedup are tracked only — absolute wall clock
+is host-dependent and not enforceable on CI runners.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.smoke import smoke_config
+from repro.models import build_model
+from repro.serve import Engine, TraceConfig, sample_trace, sequential_decode
+
+from .common import write_csv
+
+N_REQUESTS = 10
+NUM_SLOTS = 4
+CACHE_LEN = 28
+PREFILL_CHUNK = 8
+SEED = 7
+
+
+def serve_throughput():
+    cfg = smoke_config("yi-6b")
+    api = build_model(cfg, remat=False)
+    params = api.init(jax.random.key(0))
+    tcfg = TraceConfig(n_requests=N_REQUESTS, arrival_rate=100.0,
+                       prompt_len=(4, 16), decode_len=(3, 12))
+    reqs = sample_trace(tcfg, vocab_size=cfg.vocab_size, seed=SEED)
+    gen_tokens = sum(r.n_decode for r in reqs)
+
+    eng = Engine(api, num_slots=NUM_SLOTS, cache_len=CACHE_LEN,
+                 prefill_chunk=PREFILL_CHUNK)
+    eng.run(params, reqs, wait=False)  # warmup / compile
+    t0 = time.perf_counter()
+    records = eng.run(params, reqs, wait=False)
+    t_engine = time.perf_counter() - t0
+
+    by_rid = {r.rid: r for r in records}
+    refs = {}
+    for req in reqs:  # warmup pass also produces the reference streams
+        refs[req.rid] = sequential_decode(api, params, req.tokens,
+                                          req.n_decode, CACHE_LEN,
+                                          PREFILL_CHUNK, engine=eng)
+    t0 = time.perf_counter()
+    for req in reqs:
+        sequential_decode(api, params, req.tokens, req.n_decode, CACHE_LEN,
+                          PREFILL_CHUNK, engine=eng)
+    t_seq = time.perf_counter() - t0
+
+    mismatches = sum(
+        0 if np.array_equal(np.asarray(by_rid[r.rid].tokens, np.int32),
+                            refs[r.rid]) else 1
+        for r in reqs)
+    if mismatches:
+        raise AssertionError(
+            f"{mismatches}/{len(reqs)} requests decode differently through "
+            f"the engine — the serving bit-identity contract is broken")
+
+    eng_tps = gen_tokens / t_engine
+    seq_tps = gen_tokens / t_seq
+    write_csv(
+        "bench/serve_throughput.csv",
+        ["path", "slots", "requests", "tokens", "tokens_per_s", "mismatches"],
+        [["engine", NUM_SLOTS, N_REQUESTS, gen_tokens, eng_tps, mismatches],
+         ["sequential", 1, N_REQUESTS, gen_tokens, seq_tps, mismatches]],
+    )
+    derived = (f"engine={eng_tps:.0f}tok/s sequential={seq_tps:.0f}tok/s "
+               f"speedup={eng_tps / seq_tps:.2f}x mismatches={mismatches}")
+    return t_engine * 1e6, derived

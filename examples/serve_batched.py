@@ -1,27 +1,44 @@
 #!/usr/bin/env python
-"""Batched serving demo: prefill a batch of prompts, then decode step-by-step
-with the KV cache — the serve_step the decode_32k dry-run cells lower.
+"""Continuous-batching serving demo on the ``repro.serve`` engine.
 
-    PYTHONPATH=src python examples/serve_batched.py --arch yi-6b --decode 32
+Requests arrive on a Poisson trace, prefill through the engine's chunked
+prefill+insert path (a handful of multi-token dispatches per prompt — not
+the O(prompt_len) token-by-token replay this demo used to do), and decode
+together in one slot-batched step; finished slots are refilled mid-decode.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch yi-6b --slots 4
+
+``--check`` re-decodes every request sequentially and verifies the token
+streams match bit for bit (the engine's correctness contract on the
+dense/GQA families).
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.configs.smoke import smoke_config
-from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import build_model
+from repro.serve import (Engine, TraceConfig, replay, sample_trace,
+                         sequential_decode, summarize)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--decode", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="mean request arrivals per second")
+    ap.add_argument("--prompt-len", type=int, nargs=2, default=(8, 48),
+                    metavar=("LO", "HI"))
+    ap.add_argument("--decode", type=int, nargs=2, default=(4, 24),
+                    metavar=("LO", "HI"))
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true",
+                    help="verify bit-identity vs sequential decoding")
     ap.add_argument("--full-size", action="store_true",
                     help="use the full config (default: reduced smoke config)")
     args = ap.parse_args()
@@ -30,46 +47,42 @@ def main():
     api = build_model(cfg, remat=False)
     params = api.init(jax.random.key(0))
 
-    B, P, D = args.batch, args.prompt_len, args.decode
-    prompts = jax.random.randint(jax.random.key(1), (B, P), 2, cfg.vocab_size)
+    tcfg = TraceConfig(n_requests=args.requests, arrival_rate=args.rate,
+                       prompt_len=tuple(args.prompt_len),
+                       decode_len=tuple(args.decode))
+    reqs = sample_trace(tcfg, vocab_size=cfg.vocab_size, seed=args.seed)
+    cache_len = max(args.prompt_len[1] + args.decode[1], 8)
+    eng = Engine(api, num_slots=args.slots, cache_len=cache_len,
+                 prefill_chunk=args.prefill_chunk)
 
-    # --- prefill: teacher-forced forward fills logits; we then replay the
-    # prompt through decode_step to warm the KV cache (prefill-by-decode,
-    # simplest cache-consistent path for a demo) ---
-    prefill = jax.jit(make_prefill_step(api))
-    serve = jax.jit(make_serve_step(api))
+    records = replay(eng, params, reqs, wait=True)
+    summ = summarize(records)
 
-    t0 = time.time()
-    last_logits = prefill(params, {"tokens": prompts})
-    last_logits.block_until_ready()
-    t_prefill = time.time() - t0
-
-    cache = api.init_cache(B, P + D)
-    for i in range(P):
-        _, cache = serve(params, cache, {"tokens": prompts[:, i : i + 1]},
-                         jnp.asarray(i, jnp.int32))
-
-    # --- batched greedy decode ---
-    tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
-    generated = [tok]
-    t0 = time.time()
-    for i in range(D):
-        logits, cache = serve(params, cache, {"tokens": tok},
-                              jnp.asarray(P + i, jnp.int32))
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    gen = jnp.concatenate(generated, axis=1)
-    print(f"arch={cfg.name} ({'full' if args.full_size else 'smoke'} config)")
-    print(f"prefill: {B} x {P} tokens in {t_prefill*1e3:.1f} ms "
-          f"({B*P/t_prefill:.0f} tok/s)")
-    print(f"decode : {B} x {D} tokens in {t_decode*1e3:.1f} ms "
-          f"({B*D/t_decode:.0f} tok/s)")
+    print(f"arch={cfg.name} ({'full' if args.full_size else 'smoke'} config), "
+          f"{args.slots} slots, cache_len={cache_len}, "
+          f"prefill_chunk={eng.prefill_chunk}")
+    print(f"{summ['n_requests']} requests, {summ['tokens']} generated tokens, "
+          f"{summ['tokens_per_s']:.1f} tok/s")
+    print(f"TTFT    p50/p99: {summ['p50_ttft_s']*1e3:.1f} / "
+          f"{summ['p99_ttft_s']*1e3:.1f} ms")
+    print(f"latency p50/p99: {summ['p50_latency_s']*1e3:.1f} / "
+          f"{summ['p99_latency_s']*1e3:.1f} ms")
     print("sample generations (token ids):")
-    for b in range(min(B, 3)):
-        print(f"  req{b}: {list(map(int, gen[b, :12]))} ...")
+    for r in records[:3]:
+        print(f"  req{r.rid}: {list(r.tokens[:12])} ...")
+
+    if args.check:
+        by_rid = {r.rid: r for r in records}
+        bad = 0
+        for req in reqs:
+            ref = sequential_decode(api, params, req.tokens, req.n_decode,
+                                    cache_len, eng.prefill_chunk, engine=eng)
+            if not np.array_equal(
+                    np.asarray(by_rid[req.rid].tokens, np.int32), ref):
+                bad += 1
+                print(f"  MISMATCH rid={req.rid}")
+        print(f"bit-identity check: {len(reqs) - bad}/{len(reqs)} match")
+        raise SystemExit(1 if bad else 0)
 
 
 if __name__ == "__main__":

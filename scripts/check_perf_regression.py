@@ -30,10 +30,18 @@ so any nonzero count fails outright, while the sharded speedup is printed
 and tracked only (virtual CPU devices share the host's cores, so wall-clock
 gains are not enforceable on CI runners).
 
+``--serve-current`` gates the serving bench CSV
+(``benchmarks.serve_throughput``) by the same pattern: the engine-vs-
+sequential token mismatch count is the machine-invariant signal (the
+continuous-batching engine's contract is bit-identity on the dense/GQA
+smoke config) and must be 0, while tokens/s and the batching speedup are
+printed and tracked only.
+
     python scripts/check_perf_regression.py \
         --baseline /tmp/sim_throughput.baseline.csv \
         --current results/bench/sim_throughput.csv [--min-ratio 0.5] \
-        [--dse-current results/bench/dse_throughput.csv]
+        [--dse-current results/bench/dse_throughput.csv] \
+        [--serve-current results/bench/serve_throughput.csv]
 """
 from __future__ import annotations
 
@@ -79,6 +87,34 @@ def check_dse_consistency(path: Path) -> bool:
     return not bad
 
 
+def check_serve_consistency(path: Path) -> bool:
+    """Gate the serving bench CSV: engine-vs-sequential token mismatches
+    must be 0 (bit-identity is machine-invariant); tokens/s and the
+    batching speedup are reported, not enforced."""
+    with open(path, newline="") as f:
+        rows = {r["path"]: r for r in csv.DictReader(f)}
+    for want in ("engine", "sequential"):
+        if want not in rows:
+            print(f"FAIL: {path} lacks an '{want}' row")
+            return False
+    bad = False
+    for name, r in rows.items():
+        if int(float(r["mismatches"])) != 0:
+            print(f"FAIL: serve_throughput '{name}' reports "
+                  f"{r['mismatches']} engine-vs-sequential token mismatches "
+                  f"(serving bit-identity contract broken)")
+            bad = True
+    if not bad:
+        speedup = (float(rows["engine"]["tokens_per_s"])
+                   / float(rows["sequential"]["tokens_per_s"]))
+        print(f"OK: continuous-batched engine bit-identical to sequential "
+              f"decoding ({rows['engine']['requests']} requests, "
+              f"{rows['engine']['slots']} slots, "
+              f"{rows['engine']['tokens']} tokens); batching speedup "
+              f"{speedup:.2f}x (tracked, not enforced)")
+    return not bad
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", type=Path)
@@ -92,15 +128,21 @@ def main() -> int:
     ap.add_argument("--dse-current", type=Path,
                     help="dse_throughput bench CSV to gate for sharded-vs-"
                          "single-device consistency (mismatches must be 0)")
+    ap.add_argument("--serve-current", type=Path,
+                    help="serve_throughput bench CSV to gate for engine-vs-"
+                         "sequential bit-identity (mismatches must be 0)")
     args = ap.parse_args()
 
-    dse_ok = True
+    aux_ok = True
     if args.dse_current is not None:
-        dse_ok = check_dse_consistency(args.dse_current)
+        aux_ok &= check_dse_consistency(args.dse_current)
+    if args.serve_current is not None:
+        aux_ok &= check_serve_consistency(args.serve_current)
     if args.baseline is None or args.current is None:
-        if args.dse_current is None:
-            ap.error("--baseline/--current (and/or --dse-current) required")
-        return 0 if dse_ok else 1
+        if args.dse_current is None and args.serve_current is None:
+            ap.error("--baseline/--current (and/or --dse-current/"
+                     "--serve-current) required")
+        return 0 if aux_ok else 1
 
     base = read_points_per_s(args.baseline)
     cur = read_points_per_s(args.current)
@@ -133,7 +175,7 @@ def main() -> int:
         print(f"FAIL: machine-invariant speedup fell below "
               f"{args.min_ratio:.2f}x of baseline")
         failed = True
-    if failed or not dse_ok:
+    if failed or not aux_ok:
         return 1
     print(f"OK: speedup within {args.min_ratio:.2f}x of baseline; all "
           f"backends above the {args.min_abs_ratio:.2f}x absolute backstop")

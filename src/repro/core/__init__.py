@@ -13,11 +13,14 @@ from .design_space import (BROADCAST, OS, SYSTOLIC, WS, DesignPoint,
 from .dse import (ALL_DATAFLOWS, DataflowName, dataflow_pareto_sweep,
                   fidelity_sweep, optimize_for_model, population_valid,
                   scheduled_fidelity_sweep)
-from .mapper import EngineQoR, evaluate_model, tile_gemms_for_memory
+from .mapper import (EngineQoR, evaluate_model, evaluate_model_serving,
+                     serving_objective, tile_gemms_for_memory)
 from .memory import IDEAL, LPDDR5, MemoryConfig, make_memory
 from .pareto import PARETO_BLOCK, pareto_front, pareto_mask, pareto_mask_blocked
-from .ppa import ArrayPPA, evaluate_peak, evaluate_workload, qor_objective
+from .ppa import (ArrayPPA, ServingQoR, evaluate_peak, evaluate_serving,
+                  evaluate_workload, qor_objective, serving_latency_samples)
 from .schedule import Schedule, schedule_gemms, scheduled_workload_timing
+from .workload import TraceArrays, trace_phase_gemms
 
 __all__ = [
     "bayesopt", "cycle_sim", "cycle_sim_jax", "dataflow", "design_space",
@@ -32,9 +35,12 @@ __all__ = [
     "ALL_DATAFLOWS", "DataflowName", "dataflow_pareto_sweep",
     "fidelity_sweep", "optimize_for_model", "population_valid",
     "scheduled_fidelity_sweep",
-    "EngineQoR", "evaluate_model", "tile_gemms_for_memory",
+    "EngineQoR", "evaluate_model", "evaluate_model_serving",
+    "serving_objective", "tile_gemms_for_memory",
     "IDEAL", "LPDDR5", "MemoryConfig", "make_memory",
     "PARETO_BLOCK", "pareto_front", "pareto_mask", "pareto_mask_blocked",
-    "ArrayPPA", "evaluate_peak", "evaluate_workload", "qor_objective",
+    "ArrayPPA", "ServingQoR", "evaluate_peak", "evaluate_serving",
+    "evaluate_workload", "qor_objective", "serving_latency_samples",
     "Schedule", "schedule_gemms", "scheduled_workload_timing",
+    "TraceArrays", "trace_phase_gemms",
 ]

@@ -33,7 +33,9 @@ from ..configs.base import ArchConfig
 from . import bayesopt, cycle_sim_jax, design_space as ds
 from .dataflow import Gemm, steady_pass_cycles
 from .design_space import DesignPoint
-from .mapper import constrained_objective, evaluate_model
+from .mapper import (constrained_objective, evaluate_model,
+                     evaluate_model_serving, serving_objective)
+from .workload import TraceArrays
 from .memory import MemoryConfig
 from .pareto import pareto_front
 from .ppa import evaluate_peak, evaluate_workload
@@ -427,6 +429,9 @@ def optimize_for_model(
     fixed: dict | None = None,
     mem: MemoryConfig | None = None,
     schedule: bool = False,
+    trace: TraceArrays | None = None,
+    slots: int = 8,
+    slo_p99_latency_s: float = float("inf"),
     **search_kw,
 ):
     """Table 3 machinery: find the best (dataflow, macro, array, TL) for an
@@ -434,11 +439,27 @@ def optimize_for_model(
     under finite DRAM bandwidth + buffer capacity). ``schedule=True``
     makes the BO objective score candidates with per-GEMM effective
     prefetch depths under their PF capacity — hardware-mapping
-    co-exploration of the FIFO axis."""
-    obj = partial(
-        constrained_objective, cfg=cfg, n_cores=n_cores, batch=batch, seq=seq,
-        peak_tops_cap=peak_tops_cap, mode=mode, mem=mem, schedule=schedule,
-    )
+    co-exploration of the FIFO axis.
+
+    ``trace`` switches to the trace-driven serving objective: instead of
+    one static (mode, batch, seq) GEMM list, candidates are scored
+    against the trace's prefill/decode phase mixes through the
+    ``slots``-lane queue model — minimizing p99 latency x joules/token
+    subject to the ``slo_p99_latency_s`` tail-latency SLO (and the same
+    validity / peak-TOPS constraints). ``batch``/``seq``/``mode`` are
+    ignored in trace mode; the returned QoR is a ``ppa.ServingQoR``."""
+    if trace is not None:
+        obj = partial(
+            serving_objective, cfg=cfg, trace=trace, slots=slots,
+            n_cores=n_cores, peak_tops_cap=peak_tops_cap, mem=mem,
+            schedule=schedule, slo_p99_latency_s=slo_p99_latency_s,
+        )
+    else:
+        obj = partial(
+            constrained_objective, cfg=cfg, n_cores=n_cores, batch=batch,
+            seq=seq, peak_tops_cap=peak_tops_cap, mode=mode, mem=mem,
+            schedule=schedule,
+        )
     if method == "bayes":
         # hybrid: broad jitted random screen seeds/backstops the GP-EI loop
         # (the 10-D mixed grid is multimodal; EI alone stalls on tiny budgets)
@@ -450,8 +471,13 @@ def optimize_for_model(
     else:
         best, val, x, y = bayesopt.random_minimize(key, obj, fixed=fixed, **search_kw)
     best = jax.tree.map(lambda v: jnp.reshape(jnp.asarray(v), ()), best)
-    qor = evaluate_model(best, cfg, n_cores=n_cores, batch=batch, seq=seq,
-                         mode=mode, mem=mem, schedule=schedule)
+    if trace is not None:
+        qor = evaluate_model_serving(
+            best, cfg, trace, slots=slots, n_cores=n_cores, mem=mem,
+            schedule=schedule, slo_p99_latency_s=slo_p99_latency_s)
+    else:
+        qor = evaluate_model(best, cfg, n_cores=n_cores, batch=batch, seq=seq,
+                             mode=mode, mem=mem, schedule=schedule)
     return best, qor, (x, y)
 
 

@@ -26,8 +26,9 @@ from ..configs.base import ArchConfig
 from .dataflow import Gemm
 from .design_space import IBW, WBW, DesignPoint
 from .memory import MemoryConfig
-from .ppa import ArrayPPA, evaluate_workload, qor_objective
-from .workload import dedupe_gemms, model_gemms
+from .ppa import (ArrayPPA, ServingQoR, array_peak_tops, evaluate_serving,
+                  evaluate_workload, qor_objective)
+from .workload import TraceArrays, dedupe_gemms, model_gemms, trace_phase_gemms
 
 
 class EngineQoR(NamedTuple):
@@ -168,4 +169,83 @@ def constrained_objective(
     q = evaluate_model(p, cfg, n_cores=n_cores, batch=batch, seq=seq,
                        mode=mode, mem=mem, schedule=schedule)
     ok = is_valid(p, mem) & (q.peak_tops <= peak_tops_cap)
+    return jnp.where(ok, q.objective, jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Trace-driven serving objective (SLO-aware co-design)
+# ---------------------------------------------------------------------------
+
+def serving_per_core_gemms(
+    cfg: ArchConfig,
+    trace: TraceArrays,
+    slots: int,
+    n_cores: int = 1,
+    include_attention: bool = False,
+    mem: MemoryConfig | None = None,
+) -> tuple[list[Gemm], list[Gemm], float]:
+    """Per-core (prefill_gemms, decode_gemms, mean_prompt) for a trace:
+    the two phase mixes from ``trace_phase_gemms``, each deduped, split
+    across cores, and capacity-tiled exactly like ``per_core_gemms``."""
+    prefill, decode, mean_p = trace_phase_gemms(
+        cfg, trace, slots, include_attention=include_attention)
+
+    def lower(gemms):
+        return tile_gemms_for_memory(
+            split_gemms_across_cores(dedupe_gemms(gemms), n_cores), mem)
+
+    return lower(prefill), lower(decode), mean_p
+
+
+def evaluate_model_serving(
+    p: DesignPoint,
+    cfg: ArchConfig,
+    trace: TraceArrays,
+    slots: int = 8,
+    n_cores: int = 1,
+    include_attention: bool = False,
+    mem: MemoryConfig | None = None,
+    schedule: bool = False,
+    slo_p99_latency_s: float = float("inf"),
+) -> ServingQoR:
+    """Trace-driven engine evaluation: lower the trace's prefill/decode
+    phase mixes to per-core workloads, evaluate both with the full PPA
+    stack (modeled cycles -> wall clock via the macro frequency), and
+    push the trace through the ``slots``-lane queue model. Returns
+    p50/p99 TTFT + end-to-end latency, joules/token, tokens/s, and the
+    SLO-constrained scalarization (``ServingQoR.objective``)."""
+    pre, dec, mean_p = serving_per_core_gemms(
+        cfg, trace, slots, n_cores=n_cores,
+        include_attention=include_attention, mem=mem)
+    return evaluate_serving(
+        p, pre, dec, mean_p,
+        trace.arrival_s, trace.prompt_lens, trace.decode_lens, slots,
+        mem, schedule=True if schedule else None,
+        slo_p99_latency_s=slo_p99_latency_s)
+
+
+def serving_objective(
+    p: DesignPoint,
+    cfg: ArchConfig,
+    trace: TraceArrays,
+    slots: int = 8,
+    n_cores: int = 1,
+    peak_tops_cap: float = 20.0,
+    mem: MemoryConfig | None = None,
+    schedule: bool = False,
+    slo_p99_latency_s: float = float("inf"),
+) -> jnp.ndarray:
+    """SLO-aware search objective: p99 end-to-end latency x joules/token,
+    +inf for invalid / over-cap / SLO-violating points. Same constraint
+    structure as ``constrained_objective`` but scored against serving
+    traffic instead of one static GEMM list — prefill-heavy and
+    decode-heavy traces pull the optimum toward different dataflows
+    (compute-rich vs bandwidth-bound regimes). Elementwise over batched
+    DesignPoints, so BO can apply it directly to populations."""
+    from .design_space import is_valid
+
+    q = evaluate_model_serving(p, cfg, trace, slots=slots, n_cores=n_cores,
+                               mem=mem, schedule=schedule,
+                               slo_p99_latency_s=slo_p99_latency_s)
+    ok = is_valid(p, mem) & q.slo_ok & (array_peak_tops(p) <= peak_tops_cap)
     return jnp.where(ok, q.objective, jnp.inf)

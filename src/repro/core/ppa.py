@@ -17,6 +17,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from . import macro_model as mm
@@ -176,3 +177,125 @@ def evaluate_peak(p: DesignPoint) -> ArrayPPA:
 def qor_objective(ppa: ArrayPPA) -> jnp.ndarray:
     """The paper's Table 3 scalarization: latency^2 * power * area."""
     return ppa.latency_s**2 * ppa.power_w * ppa.area_mm2
+
+
+# ---------------------------------------------------------------------------
+# Trace-driven serving evaluation (SLO-aware co-design objective)
+# ---------------------------------------------------------------------------
+
+class ServingQoR(NamedTuple):
+    """Modeled serving quality of a design point against a request trace:
+    tail latency + energy per token instead of one workload's latency."""
+
+    p50_ttft_s: jnp.ndarray
+    p99_ttft_s: jnp.ndarray
+    p50_latency_s: jnp.ndarray     # end-to-end request latency percentiles
+    p99_latency_s: jnp.ndarray
+    joules_per_token: jnp.ndarray  # total modeled energy / generated tokens
+    tokens_per_s: jnp.ndarray      # generated tokens / modeled makespan
+    slo_ok: jnp.ndarray            # p99 end-to-end latency within the SLO
+    objective: jnp.ndarray         # p99_latency * joules/token (inf if SLO
+                                   # is violated — the search scalarization)
+
+
+def serving_latency_samples(
+    arrival_s: jnp.ndarray,
+    prompt_lens: jnp.ndarray,
+    decode_lens: jnp.ndarray,
+    t_prefill_unit_s: jnp.ndarray,
+    t_decode_step_s: jnp.ndarray,
+    slots: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Deterministic ``slots``-lane queue model of the continuous-batching
+    engine: per-request (TTFT, end-to-end latency) samples.
+
+    Each request occupies the earliest-free lane at
+    max(arrival, lane free time); service time is a linear prefill charge
+    (t_prefill_unit_s per prompt token — exact at the trace's mean prompt
+    length, linear interpolation elsewhere) plus decode_len steps at the
+    full-occupancy step time (continuous batching's per-token latency is
+    the whole batched step, while throughput is slots/step — exactly the
+    trade the engine makes). Arrivals must be sorted ascending.
+
+    ``t_prefill_unit_s`` / ``t_decode_step_s`` may be batched (a
+    population of design points); the request axis is scanned, so the
+    whole model stays jit/vmap-compatible inside the DSE/BO objective.
+    Returns (ttft, latency) shaped ``batch_shape + (R,)``.
+    """
+    t_pre = jnp.asarray(t_prefill_unit_s)
+    t_dec = jnp.asarray(t_decode_step_s)
+    shape = jnp.broadcast_shapes(t_pre.shape, t_dec.shape)
+    t_pre = jnp.broadcast_to(t_pre, shape)
+    t_dec = jnp.broadcast_to(t_dec, shape)
+    free0 = jnp.zeros(shape + (int(slots),), t_pre.dtype)
+    reqs = (jnp.asarray(arrival_s, t_pre.dtype),
+            jnp.asarray(prompt_lens, t_pre.dtype),
+            jnp.asarray(decode_lens, t_pre.dtype))
+
+    def step(free, req):
+        arr, p_len, d_len = req
+        lane = jnp.argmin(free, axis=-1)
+        start = jnp.maximum(arr, jnp.min(free, axis=-1))
+        first = start + t_pre * p_len
+        fin = first + d_len * t_dec
+        free = jnp.where(
+            jnp.arange(free.shape[-1]) == lane[..., None],
+            fin[..., None], free)
+        return free, (first - arr, fin - arr)
+
+    _, (ttft, lat) = jax.lax.scan(step, free0, reqs)
+    # scan stacks the request axis in front; move it last
+    return jnp.moveaxis(ttft, 0, -1), jnp.moveaxis(lat, 0, -1)
+
+
+def evaluate_serving(
+    p: DesignPoint,
+    prefill_gemms: list[Gemm],
+    decode_gemms: list[Gemm],
+    mean_prompt: float,
+    arrival_s,
+    prompt_lens,
+    decode_lens,
+    slots: int,
+    mem: MemoryConfig | None = None,
+    schedule: Schedule | bool | None = None,
+    slo_p99_latency_s: float = float("inf"),
+) -> ServingQoR:
+    """Score a design point against a request trace: evaluate the two
+    serving phases with the full PPA stack (closed forms + memory model +
+    optional per-GEMM depth schedule), map modeled cycles to wall clock
+    via the macro clock (``evaluate_workload`` already divides by
+    ``macro_model.frequency``), and push the trace through the lane queue
+    model. The scalarized search objective is p99 end-to-end latency x
+    joules/token, +inf when p99 exceeds the SLO — minimize energy and
+    tail latency jointly, subject to the SLO."""
+    pre = evaluate_workload(p, prefill_gemms, mem, schedule=schedule)
+    dec = evaluate_workload(p, decode_gemms, mem, schedule=schedule)
+    t_pre_unit = pre.latency_s / mean_prompt
+    ttft, lat = serving_latency_samples(
+        arrival_s, prompt_lens, decode_lens, t_pre_unit, dec.latency_s,
+        slots)
+
+    plens = jnp.asarray(prompt_lens, jnp.float64 if ttft.dtype ==
+                        jnp.float64 else jnp.float32)
+    dlens = jnp.asarray(decode_lens, plens.dtype)
+    gen_tokens = jnp.sum(dlens)
+    # energy: per-request prefill scaled linearly from the mean-length
+    # evaluation + per-token decode share of the full-occupancy step
+    e_total = (pre.energy_j * jnp.sum(plens) / mean_prompt
+               + dec.energy_j / slots * gen_tokens)
+    jpt = e_total / jnp.maximum(gen_tokens, 1.0)
+
+    arr = jnp.asarray(arrival_s, plens.dtype)
+    makespan = jnp.max(arr + lat, axis=-1) - jnp.min(arr)
+    p50t, p99t = (jnp.percentile(ttft, q, axis=-1) for q in (50.0, 99.0))
+    p50l, p99l = (jnp.percentile(lat, q, axis=-1) for q in (50.0, 99.0))
+    slo_ok = p99l <= slo_p99_latency_s
+    return ServingQoR(
+        p50_ttft_s=p50t, p99_ttft_s=p99t,
+        p50_latency_s=p50l, p99_latency_s=p99l,
+        joules_per_token=jpt,
+        tokens_per_s=gen_tokens / jnp.maximum(makespan, 1e-12),
+        slo_ok=slo_ok,
+        objective=jnp.where(slo_ok, p99l * jpt, jnp.inf),
+    )

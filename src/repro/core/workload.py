@@ -22,8 +22,22 @@ the regime AccelCIM models).
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import numpy as np
+
 from ..configs.base import ArchConfig
 from .dataflow import Gemm
+
+
+class TraceArrays(NamedTuple):
+    """A request trace lowered to plain arrays — the unit the trace-driven
+    serving objective consumes (``ppa.evaluate_serving``). Produced from
+    engine traces by ``serve.trace.trace_to_arrays``; arrival-sorted."""
+
+    arrival_s: np.ndarray     # (R,) request arrival times, seconds
+    prompt_lens: np.ndarray   # (R,) prompt tokens per request
+    decode_lens: np.ndarray   # (R,) generated tokens per request
 
 
 def _attn_gemms(cfg: ArchConfig, M: float, li: int) -> list[Gemm]:
@@ -137,6 +151,38 @@ def model_gemms(
         # backward: dX GEMM + dW GEMM per forward GEMM -> 3x MAC volume
         gemms = [Gemm(g.M, g.K, g.N, g.count * 3.0) for g in gemms]
     return gemms
+
+
+def trace_phase_gemms(
+    cfg: ArchConfig,
+    trace: TraceArrays,
+    slots: int,
+    include_attention: bool = False,
+) -> tuple[list[Gemm], list[Gemm], float]:
+    """Per-phase GEMM mixes of a serving trace: the bridge from live
+    traffic to the DSE.
+
+    Serving traffic is two qualitatively different GEMM regimes sharing
+    one design: *prefill* (one request's prompt at a time — M = mean
+    prompt tokens, compute-rich) and *decode* (one token per active slot
+    per step — M = slots, the memory-bound regime PR 2/3 modeled).
+    Returns (prefill_gemms at the trace's mean prompt length with
+    batch = 1, decode_gemms at full slot occupancy, mean_prompt); the
+    caller scales per-request prefill cost linearly in prompt length from
+    the mean-length evaluation (``ppa.serving_latency_samples``).
+    """
+    assert slots >= 1, slots
+    mean_p = float(max(np.mean(np.asarray(trace.prompt_lens)), 1.0))
+    prefill = model_gemms(cfg, mode="prefill", batch=1,
+                          seq=max(int(round(mean_p)), 1),
+                          include_attention=include_attention)
+    # decode-phase context length (only the attention score GEMMs see it):
+    # the average live context is prompt + half the generated stream
+    ctx = mean_p + 0.5 * float(np.mean(np.asarray(trace.decode_lens)))
+    decode = model_gemms(cfg, mode="decode", batch=slots,
+                         seq=max(int(round(ctx)), 1),
+                         include_attention=include_attention)
+    return prefill, decode, mean_p
 
 
 def qkv_projection_gemm(cfg: ArchConfig, batch: int, seq: int) -> Gemm:

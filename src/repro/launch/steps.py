@@ -81,3 +81,15 @@ def make_serve_step(api: ModelApi):
         return logits[:, -1], new_cache
 
     return serve_step
+
+
+def make_chunked_prefill_step(api: ModelApi):
+    """Cache-warming prefill over a multi-token chunk: one decode_step with
+    tokens (B, C) writes KV for positions index..index+C-1 and returns the
+    full per-position logits (B, C, V) — the serve engine's prefill path.
+    One jitted dispatch per chunk replaces the O(P) token-by-token replay
+    loop the old serve_batched example used."""
+    def chunked_prefill_step(params, cache, batch, index):
+        return api.decode_step(params, cache, batch, index)
+
+    return chunked_prefill_step

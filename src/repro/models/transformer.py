@@ -302,8 +302,11 @@ def build_dense_lm(cfg: ArchConfig, remat: bool = True, unroll: bool = False) ->
         return KVCache(k=jnp.zeros(sh, dtype), v=jnp.zeros(sh, dtype))
 
     def decode_step(params, cache, batch, index):
-        tok = batch["tokens"]                    # (B, 1)
-        pos = jnp.full((1,), index, jnp.int32)
+        # tokens: (B, S). S == 1 is the steady decode step; S > 1 is a
+        # chunked-prefill step (the serve engine's cache warmup path) —
+        # positions index..index+S-1 are written and causally attended.
+        tok = batch["tokens"]
+        pos = index + jnp.arange(tok.shape[1], dtype=jnp.int32)
         if cfg.mrope:
             pos3 = jnp.stack([pos, pos, pos])
         x = params["embed"][tok] * _embed_scale(cfg)
@@ -408,7 +411,8 @@ def build_moe_lm(cfg: ArchConfig, remat: bool = True, unroll: bool = False) -> M
                 "moe": KVCache(jnp.zeros(sh(n_moe), dtype), jnp.zeros(sh(n_moe), dtype))}
 
     def decode_step(params, cache, batch, index):
-        pos = jnp.full((1,), index, jnp.int32)
+        # multi-token chunks supported (chunked prefill), as in the dense LM
+        pos = index + jnp.arange(batch["tokens"].shape[1], dtype=jnp.int32)
         x = params["embed"][batch["tokens"]] * _embed_scale(cfg)
 
         def body_for(stack_cache_cls):

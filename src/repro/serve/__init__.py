@@ -1,0 +1,74 @@
+"""Trace-driven serving: a continuous-batching engine + request traces.
+
+This package turns the repo's KV-cache decode machinery into a small
+serving stack and bridges *measured* serving behavior into the *modeled*
+design-space exploration (the trace-driven objective in ``core``).
+
+The engine API (``serve.engine.Engine``) is three explicit primitives
+over a slot-batched ``DecodeState``:
+
+  ``prefill(params, prompt) -> PrefillResult``
+      Warm a fresh single-request (B == 1) cache with the prompt in
+      chunked multi-token ``decode_step`` dispatches (one trace reused
+      for every chunk) and return it together with the first generated
+      greedy token and the next decode position.
+
+  ``insert(state, prefill_result, slot) -> DecodeState``
+      Splice the prefilled request into lane ``slot`` of the slot-batched
+      state: the slot's *entire* cache row is overwritten, its feed token
+      becomes the prefill's first token, its position the prompt length.
+
+  ``generate(params, state) -> DecodeState``
+      One batched decode step. Every occupied slot consumes its feed
+      token at its own position; the returned ``state.tokens`` holds each
+      slot's next greedy token. Slots are independent lanes (vmap over
+      slots of the B == 1 step), so requests at different positions
+      decode together.
+
+``evict(state, slot)`` frees a lane between requests, and
+``Engine.run(params, requests)`` is the host-side continuous-batching
+loop: arrivals gate insertion, finished lanes are evicted and refilled
+mid-decode, and per-request wall-clock latency records come back.
+
+Correctness contract: on the dense/GQA families, continuous-batched
+decoding with slot insertion/eviction is *bit-identical* to per-request
+sequential decoding (``sequential_decode``) — enforced by
+tests/test_serve_engine.py and the CI serving gate
+(``python -m repro.serve --smoke``).
+
+``serve.trace`` supplies seeded request traces (Poisson arrivals,
+bounded prompt/decode lengths), the engine replayer, and the lowering to
+``core.workload.TraceArrays`` that feeds the DSE's SLO-aware serving
+objective.
+"""
+from .engine import (
+    DecodeState,
+    Engine,
+    PrefillResult,
+    RequestRecord,
+    sequential_decode,
+)
+from .trace import (
+    TraceConfig,
+    TraceRequest,
+    replay,
+    sample_trace,
+    summarize,
+    trace_to_arrays,
+    write_latency_csv,
+)
+
+__all__ = [
+    "DecodeState",
+    "Engine",
+    "PrefillResult",
+    "RequestRecord",
+    "sequential_decode",
+    "TraceConfig",
+    "TraceRequest",
+    "replay",
+    "sample_trace",
+    "summarize",
+    "trace_to_arrays",
+    "write_latency_csv",
+]

@@ -1,0 +1,304 @@
+"""Continuous-batching decode engine over the ModelApi KV-cache machinery.
+
+A jetstream-style slot engine: ``num_slots`` independent decode lanes share
+one batched step. Each lane holds one request's cache row at its *own*
+position, so requests of different lengths decode together and finished
+lanes are refilled without draining the batch:
+
+  prefill(params, prompt)      -> PrefillResult (a warmed single-request
+                                  cache + the first generated token),
+                                  chunked through multi-token decode_step
+  insert(state, prefill, slot) -> state with the slot's cache row replaced
+  generate(params, state)      -> one batched decode step for all slots
+  evict(state, slot)           -> clears the slot's feed token/position
+                                  (the cache row is fully overwritten by
+                                  the next insert, so rows are safely
+                                  reused without touching the device)
+
+The batched step is ``jax.vmap`` over slots of the per-request (B == 1)
+``api.decode_step`` with per-leaf slot axes detected from ``init_cache``
+shapes — every lane runs exactly the sequential per-request computation,
+just batched. On the dense/GQA families this is *bit-identical* to
+per-request sequential decoding (the CI serving gate and
+tests/test_serve_engine.py enforce it on the smoke config); MoE routing
+lowers batch-size-dependently on CPU, where the contract weakens to
+slot-permutation determinism (same slot count => bit-identical tokens
+regardless of arrival order / slot assignment).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..launch.steps import make_chunked_prefill_step
+from ..models.transformer import ModelApi
+
+
+class DecodeState(NamedTuple):
+    """Device-side engine state: slot-batched cache + per-slot feed."""
+
+    cache: Any            # model cache pytree, slot axis per leaf
+    tokens: jnp.ndarray   # (num_slots,) int32 — next input token per slot
+    pos: jnp.ndarray      # (num_slots,) int32 — cache position the next
+                          # decode step writes (== tokens seen so far)
+
+
+class PrefillResult(NamedTuple):
+    """A warmed single-request cache ready for ``insert``."""
+
+    cache: Any            # B == 1 cache pytree at the engine's cache_len
+    token: jnp.ndarray    # () int32 — first generated token (from the
+                          # prompt's last-position logits)
+    pos: jnp.ndarray      # () int32 — next decode position (= prompt len)
+
+
+class RequestRecord(NamedTuple):
+    """Per-request outcome of an ``Engine.run`` replay."""
+
+    rid: int
+    tokens: tuple         # generated token ids (len == n_decode)
+    prompt_len: int
+    arrival_s: float      # nominal arrival (trace time, relative to run t0)
+    insert_s: float       # wall time the prefill began
+    first_token_s: float  # wall time the first token was available (TTFT end)
+    done_s: float         # wall time the last token was emitted
+    insert_step: int      # engine step counter at insertion
+    done_step: int
+
+
+def _slot_axes(api: ModelApi, cache_len: int):
+    """Per-leaf batch-axis pytree, detected by diffing ``init_cache``
+    shapes at two batch sizes (leaves may batch on different axes — the
+    hybrid family's remainder layers batch on axis 0, stacks on axis 1)."""
+    c1 = jax.eval_shape(lambda: api.init_cache(1, cache_len))
+    c2 = jax.eval_shape(lambda: api.init_cache(2, cache_len))
+
+    def axis(a, b):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        assert len(diff) == 1, (a.shape, b.shape)
+        return diff[0]
+
+    return jax.tree.map(axis, c1, c2)
+
+
+class Engine:
+    """Slot-based continuous-batching engine for one (api, params-shape).
+
+    ``cache_len`` bounds prompt_len + n_decode per request. ``prefill_chunk``
+    is the chunked-prefill dispatch width; families whose decode caches are
+    not absolute-position-indexed (SSM state, rolling-window hybrid) force
+    chunk 1 (token-by-token warmup through the same code path).
+    """
+
+    def __init__(self, api: ModelApi, num_slots: int, cache_len: int,
+                 prefill_chunk: int = 32):
+        if api.cfg.enc_dec:
+            raise NotImplementedError("encoder-decoder serving not supported")
+        self.api = api
+        self.num_slots = int(num_slots)
+        self.cache_len = int(cache_len)
+        chunk_ok = api.cfg.attn not in ("none", "rglru_hybrid")
+        self.prefill_chunk = int(prefill_chunk) if chunk_ok else 1
+        self._axes = _slot_axes(api, cache_len)
+        self._prefill_step = jax.jit(make_chunked_prefill_step(api))
+        self._step = self._make_step()
+        self._insert = self._make_insert()
+
+    # -- device-side primitives --------------------------------------------
+
+    def init_state(self) -> DecodeState:
+        z = jnp.zeros((self.num_slots,), jnp.int32)
+        return DecodeState(self.api.init_cache(self.num_slots, self.cache_len),
+                           z, z)
+
+    def prefill(self, params, prompt) -> PrefillResult:
+        """Warm a fresh single-request cache with ``prompt`` (1-D int ids)
+        in ceil(P / prefill_chunk) chunked dispatches and return it with
+        the first generated (greedy) token.
+
+        The last chunk is zero-padded to the chunk width so every dispatch
+        reuses one trace; padded positions are written beyond the prompt
+        but are causally masked until decode overwrites each of them
+        *before* it first attends that position, so they never leak."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        P = int(prompt.shape[0])
+        assert 1 <= P <= self.cache_len, (P, self.cache_len)
+        C = min(self.prefill_chunk, P)
+        n_chunks = -(-P // C)
+        pad = n_chunks * C - P
+        chunks = np.concatenate(
+            [prompt, np.zeros((pad,), np.int32)]).reshape(n_chunks, C)
+        cache = self.api.init_cache(1, self.cache_len)
+        for j in range(n_chunks):
+            logits, cache = self._prefill_step(
+                params, cache, {"tokens": jnp.asarray(chunks[j][None])},
+                jnp.asarray(j * C, jnp.int32))
+        tok = jnp.argmax(logits[0, C - 1 - pad]).astype(jnp.int32)
+        return PrefillResult(cache, tok, jnp.asarray(P, jnp.int32))
+
+    def insert(self, state: DecodeState, pre: PrefillResult,
+               slot: int) -> DecodeState:
+        """Replace slot ``slot``'s cache row with the prefilled request.
+        The whole row (every cache position) is overwritten, so a row
+        vacated by ``evict`` carries no stale state into its next tenant."""
+        return self._insert(state, pre.cache, pre.token, pre.pos,
+                            jnp.asarray(slot, jnp.int32))
+
+    def generate(self, params, state: DecodeState) -> DecodeState:
+        """One batched decode step: every slot consumes its feed token at
+        its own position and produces the next greedy token
+        (``state.tokens`` of the returned state)."""
+        return self._step(params, state)
+
+    def evict(self, state: DecodeState, slot: int) -> DecodeState:
+        """Mark a slot free: zero its feed token/position. Device cache is
+        left as-is — ``insert`` overwrites the full row on reuse."""
+        s = jnp.asarray(slot, jnp.int32)
+        return DecodeState(state.cache, state.tokens.at[s].set(0),
+                           state.pos.at[s].set(0))
+
+    # -- jitted builders ---------------------------------------------------
+
+    def _make_step(self):
+        api, axes = self.api, self._axes
+
+        def one(params, cache_slot, tok, idx):
+            cb1 = jax.tree.map(lambda x, ax: jnp.expand_dims(x, ax),
+                               cache_slot, axes)
+            logits, nc = api.decode_step(params, cb1,
+                                         {"tokens": tok.reshape(1, 1)}, idx)
+            nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            return jax.tree.map(lambda x, ax: jnp.squeeze(x, axis=ax),
+                                nc, axes), nxt
+
+        vm = jax.vmap(one, in_axes=(None, axes, 0, 0), out_axes=(axes, 0))
+
+        def step(params, state: DecodeState) -> DecodeState:
+            cache, nxt = vm(params, state.cache, state.tokens, state.pos)
+            return DecodeState(cache, nxt, state.pos + 1)
+
+        return jax.jit(step)
+
+    def _make_insert(self):
+        axes = self._axes
+
+        def ins(state, pcache, token, pos, slot):
+            cache = jax.tree.map(
+                lambda full, one, ax: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=ax),
+                state.cache, pcache, axes)
+            return DecodeState(cache, state.tokens.at[slot].set(token),
+                               state.pos.at[slot].set(pos))
+
+        return jax.jit(ins)
+
+    # -- host-side continuous-batching loop --------------------------------
+
+    def run(self, params, requests: Sequence, wait: bool = False
+            ) -> list[RequestRecord]:
+        """Replay ``requests`` (objects with .rid, .arrival_s, .tokens,
+        .n_decode — see serve.trace.TraceRequest) through the engine:
+        arrivals gate insertion, finished slots are evicted and refilled
+        mid-decode. Returns per-request latency records with wall-clock
+        stamps relative to the run start.
+
+        ``wait=True`` honors arrival times in real time (sleeping while
+        idle) — the latency-replay mode; ``wait=False`` treats any not-yet-
+        arrived request as available once all arrived work is done (token
+        streams are timing-independent, so both modes emit identical
+        tokens)."""
+        reqs = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        for r in reqs:
+            need = len(np.asarray(r.tokens).reshape(-1)) + r.n_decode - 1
+            assert need <= self.cache_len, (r.rid, need, self.cache_len)
+            assert r.n_decode >= 1, r.rid
+        state = self.init_state()
+        free = list(range(self.num_slots))[::-1]
+        active: dict[int, dict] = {}
+        records: dict[int, RequestRecord] = {}
+        i, step = 0, 0
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0
+
+        def arrived():
+            return i < len(reqs) and (reqs[i].arrival_s <= now() or not wait
+                                      or not active)
+
+        while i < len(reqs) or active:
+            if wait and not active and i < len(reqs):
+                dt = reqs[i].arrival_s - now()
+                if dt > 0:
+                    time.sleep(dt)
+            while free and arrived():
+                r = reqs[i]
+                i += 1
+                slot = free.pop()
+                t_ins = now()
+                pre = self.prefill(params, r.tokens)
+                state = self.insert(state, pre, slot)
+                ent = dict(req=r, toks=[int(pre.token)], slot=slot,
+                           arrival=float(r.arrival_s), insert=t_ins,
+                           first=now(), istep=step)
+                if len(ent["toks"]) >= r.n_decode:
+                    state = self.evict(state, slot)
+                    free.append(slot)
+                    records[r.rid] = self._record(ent, now(), step)
+                else:
+                    active[slot] = ent
+            if not active:
+                continue
+            state = self.generate(params, state)
+            step += 1
+            toks = np.asarray(state.tokens)
+            for slot in list(active):
+                ent = active[slot]
+                ent["toks"].append(int(toks[slot]))
+                if len(ent["toks"]) >= ent["req"].n_decode:
+                    state = self.evict(state, slot)
+                    free.append(slot)
+                    del active[slot]
+                    records[ent["req"].rid] = self._record(ent, now(), step)
+        return [records[r.rid] for r in reqs]
+
+    @staticmethod
+    def _record(ent, t_done, step) -> RequestRecord:
+        r = ent["req"]
+        return RequestRecord(
+            rid=r.rid, tokens=tuple(ent["toks"]),
+            prompt_len=len(np.asarray(r.tokens).reshape(-1)),
+            arrival_s=ent["arrival"], insert_s=ent["insert"],
+            first_token_s=ent["first"], done_s=t_done,
+            insert_step=ent["istep"], done_step=step)
+
+
+def sequential_decode(api: ModelApi, params, prompt, n_decode: int,
+                      cache_len: int, prefill_chunk: int = 32,
+                      engine: Engine | None = None) -> np.ndarray:
+    """Per-request sequential reference: the same chunked prefill, then a
+    plain (unbatched, un-vmapped) B == 1 greedy decode loop. The engine's
+    continuous-batched output must match this bit-identically on the
+    dense/GQA smoke configs — the serving correctness contract.
+
+    Pass ``engine`` (any Engine built on the same api/cache_len) to reuse
+    its compiled dispatches across many reference decodes; otherwise each
+    call builds — and recompiles — its own."""
+    eng = engine if engine is not None else Engine(api, 1, cache_len,
+                                                  prefill_chunk)
+    assert eng.cache_len == cache_len, (eng.cache_len, cache_len)
+    pre = eng.prefill(params, prompt)
+    out = [int(pre.token)]
+    cache, tok, pos = pre.cache, pre.token, int(pre.pos)
+    # the decode loop reuses the engine's jitted prefill dispatch at chunk
+    # width 1 — same computation, one compiled trace per (engine, shape)
+    for _ in range(n_decode - 1):
+        logits, cache = eng._prefill_step(
+            params, cache, {"tokens": tok.reshape(1, 1)},
+            jnp.asarray(pos, jnp.int32))
+        tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        pos += 1
+        out.append(int(tok))
+    return np.asarray(out, np.int32)

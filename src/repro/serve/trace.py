@@ -1,0 +1,147 @@
+"""Request traces: seeded generators + the engine replayer.
+
+A *trace* is a list of ``TraceRequest``s — Poisson arrivals with
+prompt/decode lengths drawn from seeded distributions — standing in for
+live serving traffic (the mixes of prefill and decode phases a static
+GEMM-list evaluation never sees). Two consumers:
+
+  * ``replay`` drives a ``serve.engine.Engine`` with the trace and turns
+    the run into per-request latency samples (TTFT + end-to-end, wall
+    clock) plus a p50/p99 summary — the measured side.
+  * ``trace_to_arrays`` lowers a trace to ``core.workload.TraceArrays``
+    (plain arrival/prompt/decode arrays), the modeled side the DSE's
+    trace-driven objective consumes (``mapper.evaluate_model_serving``).
+
+Generation is deterministic per (config, seed): same inputs, same trace,
+bit for bit — pinned by tests/test_serve_trace.py.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+from pathlib import Path
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+from ..core.workload import TraceArrays
+from .engine import RequestRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """Shape of the synthetic traffic.
+
+    ``arrival_rate`` is mean requests per second (Poisson process;
+    exponential inter-arrivals). Length bounds are inclusive;
+    ``prompt_dist`` picks uniform or (clipped, right-skewed) lognormal
+    prompt lengths — real prompt-length histograms are heavy-tailed.
+    """
+
+    n_requests: int = 16
+    arrival_rate: float = 8.0
+    prompt_len: tuple[int, int] = (4, 24)
+    decode_len: tuple[int, int] = (2, 12)
+    prompt_dist: str = "uniform"      # "uniform" | "lognormal"
+
+
+class TraceRequest(NamedTuple):
+    rid: int
+    arrival_s: float
+    tokens: np.ndarray    # (prompt_len,) int32 prompt ids
+    n_decode: int         # tokens to generate (>= 1, incl. the first)
+
+
+def _lengths(rng: np.random.Generator, n: int, lo: int, hi: int,
+             dist: str) -> np.ndarray:
+    if dist == "uniform":
+        return rng.integers(lo, hi + 1, size=n)
+    if dist == "lognormal":
+        x = rng.lognormal(mean=0.0, sigma=0.6, size=n)
+        scaled = lo + (x / 2.5) * (hi - lo)
+        return np.clip(np.round(scaled), lo, hi).astype(np.int64)
+    raise ValueError(f"unknown prompt_dist {dist!r}")
+
+
+def sample_trace(cfg: TraceConfig, vocab_size: int,
+                 seed: int = 0) -> list[TraceRequest]:
+    """Seeded trace: Poisson arrivals, bounded prompt/decode lengths,
+    uniform-random prompt token ids in [2, vocab_size)."""
+    assert cfg.n_requests >= 1 and cfg.arrival_rate > 0, cfg
+    assert 1 <= cfg.prompt_len[0] <= cfg.prompt_len[1], cfg
+    assert 1 <= cfg.decode_len[0] <= cfg.decode_len[1], cfg
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / cfg.arrival_rate, size=cfg.n_requests)
+    arrivals = np.cumsum(gaps)
+    plens = _lengths(rng, cfg.n_requests, *cfg.prompt_len, cfg.prompt_dist)
+    dlens = rng.integers(cfg.decode_len[0], cfg.decode_len[1] + 1,
+                         size=cfg.n_requests)
+    return [
+        TraceRequest(
+            rid=i, arrival_s=float(arrivals[i]),
+            tokens=rng.integers(2, vocab_size, size=int(plens[i]),
+                                dtype=np.int32),
+            n_decode=int(dlens[i]))
+        for i in range(cfg.n_requests)
+    ]
+
+
+def trace_to_arrays(reqs: Sequence[TraceRequest]) -> TraceArrays:
+    """Lower a trace to the plain arrays the core's modeled serving
+    objective consumes (arrival-sorted, as the queue model requires)."""
+    rs = sorted(reqs, key=lambda r: (r.arrival_s, r.rid))
+    return TraceArrays(
+        arrival_s=np.asarray([r.arrival_s for r in rs], np.float64),
+        prompt_lens=np.asarray([len(r.tokens) for r in rs], np.float64),
+        decode_lens=np.asarray([r.n_decode for r in rs], np.float64))
+
+
+# ---------------------------------------------------------------------------
+# Replay: engine run -> latency samples
+# ---------------------------------------------------------------------------
+
+def replay(engine, params, reqs: Sequence[TraceRequest],
+           wait: bool = True) -> list[RequestRecord]:
+    """Run the trace through the engine (honoring arrival times in real
+    time when ``wait``) and return per-request records."""
+    return engine.run(params, reqs, wait=wait)
+
+
+def summarize(records: Sequence[RequestRecord]) -> dict:
+    """p50/p99 TTFT and end-to-end latency (vs nominal arrival) plus
+    decoded tokens/s over the run."""
+    ttft = np.asarray([r.first_token_s - r.arrival_s for r in records])
+    lat = np.asarray([r.done_s - r.arrival_s for r in records])
+    tokens = int(sum(len(r.tokens) for r in records))
+    span = max(max(r.done_s for r in records)
+               - min(r.arrival_s for r in records), 1e-9)
+    return dict(
+        n_requests=len(records),
+        tokens=tokens,
+        tokens_per_s=tokens / span,
+        p50_ttft_s=float(np.percentile(ttft, 50)),
+        p99_ttft_s=float(np.percentile(ttft, 99)),
+        p50_latency_s=float(np.percentile(lat, 50)),
+        p99_latency_s=float(np.percentile(lat, 99)),
+    )
+
+
+CSV_FIELDS = ("rid", "arrival_s", "prompt_len", "n_decode", "insert_s",
+              "first_token_s", "done_s", "ttft_s", "latency_s",
+              "insert_step", "done_step")
+
+
+def write_latency_csv(records: Sequence[RequestRecord], path) -> Path:
+    """Per-request latency samples as CSV (the CI serving artifact)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(CSV_FIELDS)
+        for r in records:
+            w.writerow([
+                r.rid, f"{r.arrival_s:.6f}", r.prompt_len, len(r.tokens),
+                f"{r.insert_s:.6f}", f"{r.first_token_s:.6f}",
+                f"{r.done_s:.6f}", f"{r.first_token_s - r.arrival_s:.6f}",
+                f"{r.done_s - r.arrival_s:.6f}", r.insert_step, r.done_step])
+    return path

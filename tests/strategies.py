@@ -145,3 +145,26 @@ def buffer_configs(wcaps_kb=(8, 512, 4096), acaps_kb=(8, 512, 4096)):
 def prefetch_depths():
     """The effective/capacity depth menu, shallow first."""
     return st.sampled_from(DEPTHS)
+
+
+def trace_configs(max_requests=8, max_prompt=12, max_decode=8):
+    """``serve.trace.TraceConfig`` strategy: bounded request counts,
+    arrival-rate corners, inclusive prompt/decode length windows drawn as
+    (lo, lo + extra) so lo <= hi by construction, both length
+    distributions. Caps chosen so drawn traces fit the engine-scale cache
+    lengths the serving suites use (prompt_hi + decode_hi small)."""
+    from repro.serve.trace import TraceConfig
+
+    return st.tuples(
+        st.integers(1, max_requests),
+        st.sampled_from((2.0, 20.0, 200.0)),
+        st.tuples(st.integers(1, max_prompt // 2),
+                  st.integers(0, max_prompt // 2)),
+        st.tuples(st.integers(1, max_decode // 2),
+                  st.integers(0, max_decode // 2)),
+        st.sampled_from(("uniform", "lognormal")),
+    ).map(lambda t: TraceConfig(
+        n_requests=t[0], arrival_rate=t[1],
+        prompt_len=(t[2][0], t[2][0] + t[2][1]),
+        decode_len=(t[3][0], t[3][0] + t[3][1]),
+        prompt_dist=t[4]))

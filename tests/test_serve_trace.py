@@ -1,0 +1,104 @@
+"""Trace generator + replayer properties (serve/trace.py).
+
+Pure-host suite (no model builds): seed determinism, length/arrival
+bounds, the TraceArrays lowering, replay summary totals, and the latency
+CSV roundtrip.
+"""
+import csv
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.serve import (RequestRecord, TraceConfig, sample_trace,
+                         summarize, trace_to_arrays, write_latency_csv)
+from tests.strategies import trace_configs
+
+VOCAB = 256
+
+
+def test_seed_determinism():
+    cfg = TraceConfig(n_requests=12, arrival_rate=5.0, prompt_len=(3, 17),
+                      decode_len=(2, 9), prompt_dist="lognormal")
+    a = sample_trace(cfg, VOCAB, seed=7)
+    b = sample_trace(cfg, VOCAB, seed=7)
+    assert len(a) == len(b) == 12
+    for x, y in zip(a, b):
+        assert x.rid == y.rid and x.arrival_s == y.arrival_s
+        assert x.n_decode == y.n_decode
+        assert np.array_equal(x.tokens, y.tokens)
+    c = sample_trace(cfg, VOCAB, seed=8)
+    assert any(not np.array_equal(x.tokens, y.tokens) or
+               x.arrival_s != y.arrival_s for x, y in zip(a, c))
+
+
+@given(tc=trace_configs())
+@settings(max_examples=30, deadline=None)
+def test_bounds(tc):
+    reqs = sample_trace(tc, VOCAB, seed=3)
+    assert len(reqs) == tc.n_requests
+    assert [r.rid for r in reqs] == list(range(tc.n_requests))
+    arr = [r.arrival_s for r in reqs]
+    assert all(a > 0 for a in arr) and arr == sorted(arr)
+    for r in reqs:
+        assert tc.prompt_len[0] <= len(r.tokens) <= tc.prompt_len[1]
+        assert tc.decode_len[0] <= r.n_decode <= tc.decode_len[1]
+        assert r.tokens.dtype == np.int32
+        assert np.all((r.tokens >= 2) & (r.tokens < VOCAB))
+
+
+def test_bad_configs_rejected():
+    with pytest.raises(AssertionError):
+        sample_trace(TraceConfig(n_requests=0), VOCAB)
+    with pytest.raises(AssertionError):
+        sample_trace(TraceConfig(prompt_len=(5, 3)), VOCAB)
+    with pytest.raises(ValueError):
+        sample_trace(TraceConfig(prompt_dist="zipf"), VOCAB)
+
+
+def test_trace_to_arrays_sorted_and_consistent():
+    cfg = TraceConfig(n_requests=9, arrival_rate=50.0)
+    reqs = sample_trace(cfg, VOCAB, seed=11)
+    # scramble to prove the lowering re-sorts
+    ta = trace_to_arrays(reqs[::-1])
+    assert ta.arrival_s.shape == (9,)
+    assert np.all(np.diff(ta.arrival_s) >= 0)
+    assert sorted(ta.prompt_lens) == sorted(float(len(r.tokens))
+                                            for r in reqs)
+    assert sorted(ta.decode_lens) == sorted(float(r.n_decode) for r in reqs)
+
+
+def _records():
+    return [
+        RequestRecord(rid=i, tokens=tuple(range(3 + i)), prompt_len=4 + i,
+                      arrival_s=0.1 * i, insert_s=0.1 * i + 0.01,
+                      first_token_s=0.1 * i + 0.02, done_s=0.1 * i + 0.05,
+                      insert_step=i, done_step=i + 2 + i)
+        for i in range(4)
+    ]
+
+
+def test_summarize_totals():
+    recs = _records()
+    s = summarize(recs)
+    assert s["n_requests"] == 4
+    assert s["tokens"] == sum(3 + i for i in range(4))
+    span = recs[-1].done_s - recs[0].arrival_s
+    assert s["tokens_per_s"] == pytest.approx(s["tokens"] / span)
+    assert s["p50_ttft_s"] <= s["p99_ttft_s"]
+    assert s["p50_latency_s"] <= s["p99_latency_s"]
+
+
+def test_latency_csv_roundtrip(tmp_path):
+    recs = _records()
+    path = write_latency_csv(recs, tmp_path / "sub" / "lat.csv")
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    assert len(rows) == 4
+    for rec, row in zip(recs, rows):
+        assert int(row["rid"]) == rec.rid
+        assert int(row["n_decode"]) == len(rec.tokens)
+        assert float(row["ttft_s"]) == pytest.approx(
+            rec.first_token_s - rec.arrival_s, abs=1e-6)
+        assert float(row["latency_s"]) == pytest.approx(
+            rec.done_s - rec.arrival_s, abs=1e-6)
