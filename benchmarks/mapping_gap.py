@@ -1,0 +1,99 @@
+"""Greedy-vs-joint mapping gap on the fig14 bandwidth-sensitive design.
+
+Two contracts in one bench (mirroring dse_throughput's pattern of a
+machine-invariant enforced signal plus a tracked-only number):
+
+  * greedy rows — ``mapping.greedy_mapping`` (through ``lower_workload``)
+    must be **bit-identical** to the legacy implicit lowering chain,
+    reconstructed here from the still-exported greedy passes
+    (``per_core_gemms`` + ``evaluate_workload(schedule=True)`` +
+    ``schedule_gemms``): every ArrayPPA field and every chosen depth. The
+    ``mismatches`` column counts divergent elements and is enforced by
+    ``check_perf_regression.py --mapping-current`` — any nonzero count
+    means the pinned legacy lowering drifted.
+  * joint rows — ``mapping.joint_mapping``'s latency gap vs greedy on the
+    same per-core workload (``gap_pct``, positive = joint faster). The
+    gap is workload- and design-dependent, so it is printed and tracked
+    only; dominance itself (gap >= 0) is enforced in-bench, since it is
+    structural (tests/test_mapping.py proves it property-style).
+
+Workloads: LLaMA-3-70B prefill and decode on the fig14 ``bw-sensitive``
+design (OS-Systolic-OL, PF capacity 8) under the LPDDR5-class hierarchy —
+finite bandwidth AND a finite pooled 12 MB staging capacity, so all three
+joint axes (tiling splits, buffer split, depths) are live.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import PAPER_MODELS
+from repro.core import design_space as ds
+from repro.core.mapper import per_core_gemms
+from repro.core.mapping import evaluate_mapped, joint_mapping, lower_workload
+from repro.core.memory import LPDDR5
+from repro.core.ppa import evaluate_workload
+from repro.core.schedule import schedule_gemms
+
+from .common import write_csv
+
+MODEL = "llama3-70b"
+N_CORES = 8
+SEQ = 8192
+DESIGN = dict(AL=256, PC=16, LSL=2, PL=4, OL=1, BR=2, BC=4, TL=32,
+              dataflow=ds.OS, interconnect=ds.SYSTOLIC, PF=8.0)
+
+
+def mapping_gap():
+    cfg = PAPER_MODELS[MODEL]
+    p = ds.make_point(**DESIGN)
+    mem = LPDDR5
+
+    rows = []
+    parts = []
+    t0 = time.perf_counter()
+    for mode in ("prefill", "decode"):
+        kw = dict(n_cores=N_CORES, batch=1, seq=SEQ, mode=mode)
+
+        # the legacy implicit chain, pass by pass
+        tiled_ref = per_core_gemms(cfg, mem=mem, **kw)
+        ppa_ref = evaluate_workload(p, tiled_ref, mem, schedule=True)
+        pf_ref = schedule_gemms(p, tiled_ref, mem).pf
+
+        # the greedy mapping strategy through the IR
+        mw_g = lower_workload(p, cfg, mem=mem, schedule=True,
+                              strategy="greedy", **kw)
+        ppa_g = evaluate_mapped(p, mw_g)
+        mism = sum(int(np.sum(np.asarray(a) != np.asarray(b)))
+                   for a, b in zip(ppa_ref, ppa_g))
+        mism += int(np.sum(np.asarray(pf_ref) != np.asarray(mw_g.schedule.pf)))
+        mism += int(list(mw_g.tiled) != tiled_ref)
+        lat_g = float(ppa_g.latency_s)
+        rows.append(["greedy", mode, lat_g * 1e3, 0.0, mism])
+        if mism:
+            raise AssertionError(
+                f"greedy_mapping diverges from the legacy lowering on "
+                f"{mism} elements ({mode}) — the pinned bit-exactness "
+                f"contract is broken")
+
+        # joint co-optimization on the same per-core workload
+        mw_j = joint_mapping(p, mw_g.gemms, mem)
+        lat_j = float(evaluate_mapped(p, mw_j).latency_s)
+        gap = (lat_g - lat_j) / lat_g * 100.0
+        if gap < -1e-9:
+            raise AssertionError(
+                f"joint_mapping is WORSE than greedy on {mode} "
+                f"({lat_j:.6g}s vs {lat_g:.6g}s) — structural dominance "
+                f"is broken")
+        n_retiled = sum(int(a != b) for a, b in zip(mw_g.tiled, mw_j.tiled))
+        rows.append(["joint", mode, lat_j * 1e3, gap, 0])
+        parts.append(f"{mode}: gap={gap:.1f}% "
+                     f"(retiled {n_retiled}/{len(mw_j.tiled)} gemms, "
+                     f"wfrac={mw_j.mapping.wfrac:.2f})")
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+
+    write_csv("bench/mapping_gap.csv",
+              ["path", "mode", "latency_ms", "gap_pct", "mismatches"],
+              rows)
+    return us, "; ".join(parts)

@@ -17,6 +17,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from .dse_throughput import dse_throughput
+    from .mapping_gap import mapping_gap
     from .paper_figures import ALL, table3_llm_case_study
     from .roofline import roofline_table
     from .serve_throughput import serve_throughput
@@ -28,6 +29,7 @@ def main() -> None:
     benches["sim_throughput"] = sim_throughput
     benches["dse_throughput"] = dse_throughput
     benches["serve_throughput"] = serve_throughput
+    benches["mapping_gap"] = mapping_gap
 
     print("name,us_per_call,derived")
     failed = []

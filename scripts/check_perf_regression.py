@@ -37,11 +37,20 @@ continuous-batching engine's contract is bit-identity on the dense/GQA
 smoke config) and must be 0, while tokens/s and the batching speedup are
 printed and tracked only.
 
+``--mapping-current`` gates the mapping-gap bench CSV
+(``benchmarks.mapping_gap``) the same way: the greedy rows' mismatch
+count is the machine-invariant signal (``mapping.greedy_mapping`` must
+reproduce the legacy lowering chain bit-exactly) and must be 0, and the
+joint rows' gap must be nonnegative (structural dominance), while the
+gap magnitude is printed and tracked only (it is workload/design
+dependent).
+
     python scripts/check_perf_regression.py \
         --baseline /tmp/sim_throughput.baseline.csv \
         --current results/bench/sim_throughput.csv [--min-ratio 0.5] \
         [--dse-current results/bench/dse_throughput.csv] \
-        [--serve-current results/bench/serve_throughput.csv]
+        [--serve-current results/bench/serve_throughput.csv] \
+        [--mapping-current results/bench/mapping_gap.csv]
 """
 from __future__ import annotations
 
@@ -115,6 +124,38 @@ def check_serve_consistency(path: Path) -> bool:
     return not bad
 
 
+def check_mapping_consistency(path: Path) -> bool:
+    """Gate the mapping-gap bench CSV: greedy rows' legacy-vs-IR mismatch
+    count must be 0 (bit-exactness is machine-invariant) and joint rows'
+    gap must be >= 0 (structural dominance); the gap magnitude is
+    reported, not enforced."""
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    paths = {r["path"] for r in rows}
+    for want in ("greedy", "joint"):
+        if want not in paths:
+            print(f"FAIL: {path} lacks a '{want}' row")
+            return False
+    bad = False
+    for r in rows:
+        if r["path"] == "greedy" and int(float(r["mismatches"])) != 0:
+            print(f"FAIL: mapping_gap greedy/{r['mode']} reports "
+                  f"{r['mismatches']} legacy-vs-IR mismatches (the pinned "
+                  f"bit-exactness contract is broken)")
+            bad = True
+        if r["path"] == "joint" and float(r["gap_pct"]) < 0.0:
+            print(f"FAIL: mapping_gap joint/{r['mode']} is "
+                  f"{-float(r['gap_pct']):.2f}% WORSE than greedy "
+                  f"(structural dominance broken)")
+            bad = True
+    if not bad:
+        gaps = ", ".join(f"{r['mode']}={float(r['gap_pct']):.1f}%"
+                         for r in rows if r["path"] == "joint")
+        print(f"OK: greedy mapping bit-identical to the legacy lowering; "
+              f"joint gap {gaps} (tracked, not enforced)")
+    return not bad
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", type=Path)
@@ -131,6 +172,10 @@ def main() -> int:
     ap.add_argument("--serve-current", type=Path,
                     help="serve_throughput bench CSV to gate for engine-vs-"
                          "sequential bit-identity (mismatches must be 0)")
+    ap.add_argument("--mapping-current", type=Path,
+                    help="mapping_gap bench CSV to gate for greedy-vs-legacy "
+                         "bit-exactness (mismatches must be 0) and joint "
+                         "dominance (gap_pct >= 0)")
     args = ap.parse_args()
 
     aux_ok = True
@@ -138,10 +183,13 @@ def main() -> int:
         aux_ok &= check_dse_consistency(args.dse_current)
     if args.serve_current is not None:
         aux_ok &= check_serve_consistency(args.serve_current)
+    if args.mapping_current is not None:
+        aux_ok &= check_mapping_consistency(args.mapping_current)
     if args.baseline is None or args.current is None:
-        if args.dse_current is None and args.serve_current is None:
+        if (args.dse_current is None and args.serve_current is None
+                and args.mapping_current is None):
             ap.error("--baseline/--current (and/or --dse-current/"
-                     "--serve-current) required")
+                     "--serve-current/--mapping-current) required")
         return 0 if aux_ok else 1
 
     base = read_points_per_s(args.baseline)

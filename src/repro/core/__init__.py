@@ -1,21 +1,26 @@
 """AccelCIM core: the paper's dataflow design space, evaluators, and DSE."""
 from . import (bayesopt, cycle_sim, cycle_sim_jax, dataflow, design_space,
-               dse, macro_model, mapper, memory, pareto, ppa, schedule,
-               workload)
+               dse, macro_model, mapper, mapping, memory, pareto, ppa,
+               schedule, workload)
 from .cycle_sim import SimResult
 from .cycle_sim_jax import simulate_batched
-from .dataflow import (DataflowTiming, Gemm, gemm_rounds, gemm_timing,
-                       round_cycles, steady_pass_cycles, workload_timing)
+from .dataflow import (DataflowTiming, Gemm, gemm_round_fetch_cycles,
+                       gemm_rounds, gemm_timing, round_cycles,
+                       steady_pass_cycles, workload_timing)
 from .design_space import (BROADCAST, OS, SYSTOLIC, WS, DesignPoint,
                            enumerate_grid, is_valid, make_point,
                            sample_random, sample_random_blocked,
                            sample_random_sharded)
 from .dse import (ALL_DATAFLOWS, DataflowName, dataflow_pareto_sweep,
-                  fidelity_sweep, optimize_for_model, population_valid,
-                  scheduled_fidelity_sweep)
+                  fidelity_sweep, joint_fidelity_sweep, optimize_for_model,
+                  population_valid, scheduled_fidelity_sweep)
 from .mapper import (EngineQoR, evaluate_model, evaluate_model_serving,
-                     serving_objective, tile_gemms_for_memory)
-from .memory import IDEAL, LPDDR5, MemoryConfig, make_memory
+                     serving_objective, tile_gemms_for_memory,
+                     tile_splits_for_memory)
+from .mapping import (MappedWorkload, Mapping, evaluate_mapped,
+                      greedy_mapping, joint_mapping, lower_workload)
+from .memory import (IDEAL, LPDDR5, MemoryConfig, make_memory, partition,
+                     weight_fraction)
 from .pareto import PARETO_BLOCK, pareto_front, pareto_mask, pareto_mask_blocked
 from .ppa import (ArrayPPA, ServingQoR, evaluate_peak, evaluate_serving,
                   evaluate_workload, qor_objective, serving_latency_samples)
@@ -24,20 +29,23 @@ from .workload import TraceArrays, trace_phase_gemms
 
 __all__ = [
     "bayesopt", "cycle_sim", "cycle_sim_jax", "dataflow", "design_space",
-    "dse", "macro_model", "mapper", "memory", "pareto", "ppa", "schedule",
-    "workload",
+    "dse", "macro_model", "mapper", "mapping", "memory", "pareto", "ppa",
+    "schedule", "workload",
     "SimResult", "simulate_batched",
-    "DataflowTiming", "Gemm", "gemm_rounds", "gemm_timing", "round_cycles",
-    "steady_pass_cycles", "workload_timing",
+    "DataflowTiming", "Gemm", "gemm_round_fetch_cycles", "gemm_rounds",
+    "gemm_timing", "round_cycles", "steady_pass_cycles", "workload_timing",
     "BROADCAST", "OS", "SYSTOLIC", "WS", "DesignPoint", "enumerate_grid",
     "is_valid", "make_point", "sample_random", "sample_random_blocked",
     "sample_random_sharded",
     "ALL_DATAFLOWS", "DataflowName", "dataflow_pareto_sweep",
-    "fidelity_sweep", "optimize_for_model", "population_valid",
-    "scheduled_fidelity_sweep",
+    "fidelity_sweep", "joint_fidelity_sweep", "optimize_for_model",
+    "population_valid", "scheduled_fidelity_sweep",
     "EngineQoR", "evaluate_model", "evaluate_model_serving",
-    "serving_objective", "tile_gemms_for_memory",
-    "IDEAL", "LPDDR5", "MemoryConfig", "make_memory",
+    "serving_objective", "tile_gemms_for_memory", "tile_splits_for_memory",
+    "MappedWorkload", "Mapping", "evaluate_mapped", "greedy_mapping",
+    "joint_mapping", "lower_workload",
+    "IDEAL", "LPDDR5", "MemoryConfig", "make_memory", "partition",
+    "weight_fraction",
     "PARETO_BLOCK", "pareto_front", "pareto_mask", "pareto_mask_blocked",
     "ArrayPPA", "ServingQoR", "evaluate_peak", "evaluate_serving",
     "evaluate_workload", "qor_objective", "serving_latency_samples",

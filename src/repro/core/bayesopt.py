@@ -47,18 +47,32 @@ def decode(u: jnp.ndarray, fixed: dict | None = None) -> DesignPoint:
     return DesignPoint(**cols)
 
 
+# Stacked nearest-index grids for the vectorized encode: every field's grid
+# edge-padded to the longest (repeating the last entry keeps argmin's
+# first-minimum on the true nearest index — a padded duplicate can tie but
+# never win), so one (batch, DIM, GMAX) distance computation replaces the
+# per-field python loop.
+_GRID_LENS = np.asarray([len(_GRIDS[n]) for n in _ENC_FIELDS], np.float32)
+_GMAX = int(_GRID_LENS.max())
+_GRID_STACK = np.stack([
+    np.pad(np.asarray(_GRIDS[n], np.float32), (0, _GMAX - len(_GRIDS[n])),
+           mode="edge")
+    for n in _ENC_FIELDS
+])  # (DIM, GMAX)
+
+
 def encode(p: DesignPoint) -> jnp.ndarray:
-    cols = []
-    for name in _ENC_FIELDS:
-        grid = np.asarray(_GRIDS[name], dtype=np.float32)
-        v = np.broadcast_to(np.asarray(getattr(p, name), dtype=np.float32),
-                            np.shape(p.AL))
-        with np.errstate(invalid="ignore"):
-            d = np.abs(v[..., None] - grid[None, :])
-        d = np.where(np.isnan(d), 0.0, d)  # inf - inf: exact match (PF grid)
-        idx = np.argmin(d, axis=-1)
-        cols.append((idx + 0.5) / len(grid))
-    return jnp.asarray(np.stack(cols, axis=-1))
+    """Snap design points back onto unit-cube cell centers (the inverse of
+    ``decode`` up to cell quantization): one stacked nearest-grid-index
+    computation over all DIM fields at once."""
+    v = np.stack([np.broadcast_to(np.asarray(getattr(p, n), np.float32),
+                                  np.shape(p.AL)) for n in _ENC_FIELDS],
+                 axis=-1)                                 # (..., DIM)
+    with np.errstate(invalid="ignore"):
+        d = np.abs(v[..., None] - _GRID_STACK)            # (..., DIM, GMAX)
+    d = np.where(np.isnan(d), 0.0, d)  # inf - inf: exact match (PF grid)
+    idx = np.argmin(d, axis=-1)
+    return jnp.asarray((idx + 0.5) / _GRID_LENS)
 
 
 # ----------------------------------------------------------------------------

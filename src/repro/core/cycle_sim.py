@@ -114,7 +114,8 @@ def measure_passes(LSL: int, D: int | None) -> int:
 
 
 def simulate_scheduled(p: DesignPoint, depths, n_passes,
-                       mem: MemoryConfig | None = None) -> SimResult:
+                       mem: MemoryConfig | None = None,
+                       fetch_cycles=None) -> SimResult:
     """Per-GEMM prefetch depths (the schedule layer's contract): run one
     segment per GEMM at its own FIFO depth and stitch the totals — the
     array and the DRAM port drain at GEMM boundaries, so fill/drain is
@@ -125,13 +126,20 @@ def simulate_scheduled(p: DesignPoint, depths, n_passes,
     ``n_passes`` is an int (shared) or a matching sequence of per-GEMM
     block-pass counts. ``per_pass_steady`` is the *sum* of the segments'
     steady per-pass costs (one block pass of every GEMM), validated
-    against sum_g LSL * round_cycles(p at pf_g)."""
+    against sum_g LSL * round_cycles(p at pf_g).
+
+    ``fetch_cycles`` optionally overrides the per-round fetch latency F per
+    GEMM (a matching sequence — e.g. the shape-aware
+    ``dataflow.gemm_round_fetch_cycles`` of each segment's GEMM)."""
     depths = list(depths)
     if np.ndim(n_passes) == 0:
         n_passes = [int(n_passes)] * len(depths)
+    if fetch_cycles is None:
+        fetch_cycles = [None] * len(depths)
     tot = pps = busy = 0.0
-    for pf, n in zip(depths, n_passes):
-        r = simulate(p._replace(PF=float(pf)), int(n), mem=mem)
+    for pf, n, fc in zip(depths, n_passes, fetch_cycles):
+        r = simulate(p._replace(PF=float(pf)), int(n), mem=mem,
+                     fetch_cycles=fc)
         tot += r.total_cycles
         pps += r.per_pass_steady
         busy += r.compute_busy
@@ -139,11 +147,19 @@ def simulate_scheduled(p: DesignPoint, depths, n_passes,
 
 
 def simulate(p: DesignPoint, n_passes: int,
-             mem: MemoryConfig | None = None) -> SimResult:
+             mem: MemoryConfig | None = None,
+             fetch_cycles: float | None = None) -> SimResult:
+    """``fetch_cycles`` overrides the per-round fetch latency F (a
+    nonnegative integer-valued scalar, e.g. the GEMM-shape-aware
+    ``dataflow.gemm_round_fetch_cycles``); by default F comes from the
+    shape-oblivious full-array bundle ``memory.round_fetch_cycles``."""
     BR, BC, LSL = int(p.BR), int(p.BC), int(p.LSL)
     tc, ts = float(_t_c(p)), float(_t_s(p))
     df, ic, ol = int(p.dataflow), int(p.interconnect), bool(int(p.OL))
-    F = 0.0 if mem is None else float(round_fetch_cycles(p, mem))
+    if fetch_cycles is not None:
+        F = float(fetch_cycles)
+    else:
+        F = 0.0 if mem is None else float(round_fetch_cycles(p, mem))
     D = fifo_depth(p, F)
     m = measure_passes(LSL, D)
     a = _run(BR, LSL, tc, ts, df, ic, ol, n_passes, F, D)

@@ -471,7 +471,7 @@ def _get_runner(key: str, statics: tuple, mesh):
 
 def simulate_batched(p: DesignPoint, n_passes,
                      mem: MemoryConfig | None = None,
-                     mesh=None) -> SimResult:
+                     mesh=None, fetch_cycles=None) -> SimResult:
     """Simulate a batch of design points in one (or a few) jitted dispatches.
 
     ``p`` follows the ``evaluate_population`` convention: every field is a
@@ -494,6 +494,12 @@ def simulate_batched(p: DesignPoint, n_passes,
     simulates its slice of the lanes — bit-identical to the single-device
     path (the scans are elementwise over the batch), at 1/n_devices the
     per-device round trip.
+
+    ``fetch_cycles`` overrides the per-round fetch latency F (a scalar or
+    per-point array of nonnegative integer-valued cycles, e.g. the
+    GEMM-shape-aware ``dataflow.gemm_round_fetch_cycles``); the FIFO-depth
+    bucketing and every event rule are unchanged — only the gate's F value
+    differs, exactly as in ``cycle_sim.simulate``.
     """
     shape = jnp.shape(p.AL)
     ndev = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
@@ -507,7 +513,10 @@ def simulate_batched(p: DesignPoint, n_passes,
 
     tc_all = np.asarray(_t_c(flat), dtype=np.float32)
     ts_all = np.asarray(_t_s(flat), dtype=np.float32)
-    if mem is None:
+    if fetch_cycles is not None:
+        F_all = np.broadcast_to(
+            np.asarray(fetch_cycles, dtype=np.float32).reshape(-1), (n,))
+    elif mem is None:
         F_all = np.zeros((n,), dtype=np.float32)
     else:
         F_all = np.asarray(round_fetch_cycles(flat, mem), dtype=np.float32)
@@ -607,7 +616,7 @@ def simulate_batched(p: DesignPoint, n_passes,
 
 def simulate_scheduled(p: DesignPoint, depths, n_passes,
                        mem: MemoryConfig | None = None,
-                       mesh=None) -> SimResult:
+                       mesh=None, fetch_cycles=None) -> SimResult:
     """Batched per-GEMM prefetch-depth schedules: GEMM g's segment is
     dispatched to the static-depth-specialized runners at depth
     ``depths[g]`` (``simulate_batched`` already buckets a mixed-depth
@@ -618,16 +627,22 @@ def simulate_scheduled(p: DesignPoint, depths, n_passes,
     ``depths``: (n_gemms,) or (n_gemms, *batch) effective depths (e.g. a
     ``schedule.Schedule.pf``). ``n_passes``: int, (n_gemms,), or
     (n_gemms, *batch) block-pass counts. ``per_pass_steady`` sums the
-    segments' steady per-pass costs (one block pass of every GEMM)."""
+    segments' steady per-pass costs (one block pass of every GEMM).
+    ``fetch_cycles``: optional per-GEMM sequence of per-round fetch
+    overrides (each entry a scalar or per-point array, or None), e.g. the
+    shape-aware ``dataflow.gemm_round_fetch_cycles`` of each segment."""
     depths = np.asarray(depths, dtype=np.float32)
     n_gemms = depths.shape[0]
     passes = np.asarray(n_passes)
     if passes.ndim == 0:
         passes = np.broadcast_to(passes, (n_gemms,))
+    if fetch_cycles is None:
+        fetch_cycles = [None] * n_gemms
     tot = pps = busy = None
     for gi in range(n_gemms):
         r = simulate_batched(p._replace(PF=jnp.asarray(depths[gi])),
-                             passes[gi], mem=mem, mesh=mesh)
+                             passes[gi], mem=mem, mesh=mesh,
+                             fetch_cycles=fetch_cycles[gi])
         tot = r.total_cycles if tot is None else tot + r.total_cycles
         pps = r.per_pass_steady if pps is None else pps + r.per_pass_steady
         busy = r.compute_busy if busy is None else busy + r.compute_busy
@@ -635,11 +650,12 @@ def simulate_scheduled(p: DesignPoint, depths, n_passes,
 
 
 def simulate(p: DesignPoint, n_passes: int,
-             mem: MemoryConfig | None = None) -> SimResult:
+             mem: MemoryConfig | None = None,
+             fetch_cycles: float | None = None) -> SimResult:
     """Scalar-point convenience wrapper returning python floats, API-matched
     to ``cycle_sim.simulate`` (the numpy reference this module is tested
     against)."""
-    r = simulate_batched(p, n_passes, mem=mem)
+    r = simulate_batched(p, n_passes, mem=mem, fetch_cycles=fetch_cycles)
     return SimResult(
         total_cycles=float(r.total_cycles),
         per_pass_steady=float(r.per_pass_steady),
@@ -659,8 +675,21 @@ _EXACT_CYCLES = 2.0**24
 _NOISE_OK_ROUNDS = 640.0
 
 
+def _fetch_array(p: DesignPoint, mem: MemoryConfig | None,
+                 fetch_cycles) -> np.ndarray | None:
+    """Resolve the per-round fetch latency F for the float64 steady-state
+    helpers: the explicit override when given, the shape-oblivious bundle
+    under ``mem`` otherwise, None when there is no port gate at all."""
+    if fetch_cycles is not None:
+        return np.asarray(fetch_cycles, np.float64)
+    if mem is not None:
+        return np.asarray(round_fetch_cycles(p, mem), np.float64)
+    return None
+
+
 def _transient_rounds(p: DesignPoint,
-                      mem: MemoryConfig | None = None) -> np.ndarray:
+                      mem: MemoryConfig | None = None,
+                      fetch_cycles=None) -> np.ndarray:
     """Uncapped per-point estimate of the rounds needed to reach the
     asymptotic steady state (scalar or batched, elementwise, float64).
 
@@ -689,8 +718,8 @@ def _transient_rounds(p: DesignPoint,
     gap = np.maximum(tc - ts, 0.0)
     cross = np.where(gap > 0, np.ceil(BR * ts / np.maximum(gap, 1e-9)), 0.0)
     need = np.where(os_s_ol, np.maximum(need, cross + 2.0), need)
-    if mem is not None:
-        F = np.asarray(round_fetch_cycles(p, mem), np.float64)
+    F = _fetch_array(p, mem, fetch_cycles)
+    if F is not None:
         rc = np.asarray(_round_cycles(p), np.float64)
         PF = np.asarray(p.PF, np.float64)
         intercept = (BR + LSL + 2) * (tc + 2 * ts) + F
@@ -717,16 +746,19 @@ def _transient_rounds(p: DesignPoint,
 
 
 def _steady_round_cost(p: DesignPoint,
-                       mem: MemoryConfig | None) -> np.ndarray:
+                       mem: MemoryConfig | None,
+                       fetch_cycles=None) -> np.ndarray:
     """Asymptotic per-round cost (float64) — the closed-form roofline,
     used to estimate measurement-horizon magnitudes."""
-    if mem is None:
+    if mem is None and fetch_cycles is None:
         return np.asarray(_round_cycles(p), np.float64)
-    return np.asarray(_round_cycles(p, mem), np.float64)
+    return np.asarray(_round_cycles(p, mem, fetch_cycles=fetch_cycles),
+                      np.float64)
 
 
 def steady_state_passes(p: DesignPoint, min_passes: int = 3,
-                        mem: MemoryConfig | None = None) -> np.ndarray:
+                        mem: MemoryConfig | None = None,
+                        fetch_cycles=None) -> np.ndarray:
     """Per-point block-pass counts sufficient for ``per_pass_steady`` to
     measure true steady state (scalar or batched, elementwise), capped at
     ``_MAX_ROUNDS`` (see ``_transient_rounds`` for the estimate and
@@ -735,12 +767,14 @@ def steady_state_passes(p: DesignPoint, min_passes: int = 3,
     and the test suite agree on what "reached steady state" means.
     """
     LSL = np.asarray(p.LSL, np.int64)
-    need = np.minimum(_transient_rounds(p, mem), _MAX_ROUNDS).astype(np.int64)
+    need = np.minimum(_transient_rounds(p, mem, fetch_cycles),
+                      _MAX_ROUNDS).astype(np.int64)
     return np.maximum(min_passes, -(-need // LSL) + 1)
 
 
 def steady_measurable(p: DesignPoint,
-                      mem: MemoryConfig | None = None) -> np.ndarray:
+                      mem: MemoryConfig | None = None,
+                      fetch_cycles=None) -> np.ndarray:
     """True where the batched float32 oracle can measure the asymptotic
     steady state within its accuracy budget: either the whole simulated
     horizon stays inside the float32-exact integer range
@@ -755,8 +789,8 @@ def steady_measurable(p: DesignPoint,
     to the float64 numpy oracle (validated at long horizons by
     tests/test_prefetch_streaming.py).
     """
-    need = _transient_rounds(p, mem)
-    total = need * _steady_round_cost(p, mem)
+    need = _transient_rounds(p, mem, fetch_cycles)
+    total = need * _steady_round_cost(p, mem, fetch_cycles)
     fp32_ok = (need <= _NOISE_OK_ROUNDS) | (total <= _EXACT_CYCLES)
     # the simulated horizon is also hard-capped: a transient past it is
     # never run to steady state, however clean the arithmetic would be
@@ -764,7 +798,8 @@ def steady_measurable(p: DesignPoint,
 
 
 def fill_drain_slack(p: DesignPoint,
-                     mem: MemoryConfig | None = None) -> np.ndarray:
+                     mem: MemoryConfig | None = None,
+                     fetch_cycles=None) -> np.ndarray:
     """Generous bound on fill/drain cycles: (BR + LSL + 2) * (T_c + 2*T_s),
     plus the same multiple of the per-round fetch F when a memory model
     delays the fill, plus a finite-FIFO ramp allowance of (PF + 1) bundles
@@ -775,9 +810,9 @@ def fill_drain_slack(p: DesignPoint,
     LSL = np.asarray(p.LSL, np.float64)
     tc = np.asarray(_t_c(p), np.float64)
     ts = np.asarray(_t_s(p), np.float64)
-    if mem is None:
+    F = _fetch_array(p, mem, fetch_cycles)
+    if F is None:
         return (BR + LSL + 2) * (tc + 2 * ts)
-    F = np.asarray(round_fetch_cycles(p, mem), np.float64)
     PF = np.asarray(p.PF, np.float64)
     L = np.asarray(_round_port_latency(p), np.float64)
     fifo_on = np.isfinite(PF) & (F > 0)

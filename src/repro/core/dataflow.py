@@ -140,13 +140,35 @@ def round_port_latency(p: DesignPoint) -> jnp.ndarray:
     return jnp.where(p.dataflow == WS, ws, os)
 
 
-def round_cycles(p: DesignPoint, mem: MemoryConfig | None = None) -> jnp.ndarray:
+def _port_roofline(p: DesignPoint, base: jnp.ndarray,
+                   F: jnp.ndarray) -> jnp.ndarray:
+    """max-plus critical-circuit mean of the steady round under a DRAM port
+    with per-round fetch latency F: max(on-chip round, F, (F + L) / PF).
+
+    FIFO feedback circuit: refetch a slot (F) + drain it (L) every PF
+    rounds. PF is a power of two so the division is float-exact; the
+    whole term vanishes at F = 0 (infinite BW: the port never gates, so
+    a finite FIFO cannot bind either — bit-exact with mem=None)."""
+    fifo = jnp.where(
+        F > 0.0,
+        (F + round_port_latency(p)) / jnp.maximum(jnp.asarray(p.PF, F.dtype), 1.0),
+        0.0,
+    )
+    return jnp.maximum(base, jnp.maximum(F, fifo))
+
+
+def round_cycles(p: DesignPoint, mem: MemoryConfig | None = None,
+                 fetch_cycles: jnp.ndarray | None = None) -> jnp.ndarray:
     """Steady-state cycles of one (compute one weight row + make its update
     happen) round, per the 8-variant table above. With a memory model the
     DRAM port must also deliver the round's bundle (weight + act bits)
     through the PF-deep prefetch FIFO: the steady round is the max-plus
     critical-circuit mean max(on-chip round, F, (F + L) / PF) — the
-    roofline the event simulators reproduce once their fetch gate binds."""
+    roofline the event simulators reproduce once their fetch gate binds.
+
+    ``fetch_cycles`` overrides the per-round fetch latency F (e.g. the
+    GEMM-shape-aware ``gemm_round_fetch_cycles``, which charges edge tiles
+    only the bits they actually stream); when given, ``mem`` may be None."""
     tc, ts = t_c(p), t_s(p)
     ws_b = jnp.where(p.OL > 0.5, jnp.maximum(tc, p.BR * ts), tc + p.BR * ts)
     ws_s = jnp.where(p.OL > 0.5, jnp.maximum(tc, ts), tc + ts)
@@ -157,27 +179,22 @@ def round_cycles(p: DesignPoint, mem: MemoryConfig | None = None) -> jnp.ndarray
     ws = jnp.where(p.interconnect == BROADCAST, ws_b, ws_s)
     os = jnp.where(p.interconnect == BROADCAST, os_b, os_s)
     base = jnp.where(p.dataflow == WS, ws, os)
-    if mem is None:
-        return base
-    F = round_fetch_cycles(p, mem)
-    # FIFO feedback circuit: refetch a slot (F) + drain it (L) every PF
-    # rounds. PF is a power of two so the division is float-exact; the
-    # whole term vanishes at F = 0 (infinite BW: the port never gates, so
-    # a finite FIFO cannot bind either — bit-exact with mem=None).
-    fifo = jnp.where(
-        F > 0.0,
-        (F + round_port_latency(p)) / jnp.maximum(jnp.asarray(p.PF, F.dtype), 1.0),
-        0.0,
-    )
-    return jnp.maximum(base, jnp.maximum(F, fifo))
+    if fetch_cycles is None:
+        if mem is None:
+            return base
+        fetch_cycles = round_fetch_cycles(p, mem)
+    return _port_roofline(p, base, jnp.asarray(fetch_cycles, jnp.float32))
 
 
-def steady_pass_cycles(p: DesignPoint, mem: MemoryConfig | None = None) -> jnp.ndarray:
+def steady_pass_cycles(p: DesignPoint, mem: MemoryConfig | None = None,
+                       fetch_cycles: jnp.ndarray | None = None) -> jnp.ndarray:
     """Closed-form steady-state cost of one block pass (LSL rounds) — the
     quantity the cycle simulators' ``per_pass_steady`` is validated against
     (see cycle_sim.py for the three-level fidelity chain), in both the
-    infinite-bandwidth and the bandwidth-bound (``mem``) regimes."""
-    return p.LSL * round_cycles(p, mem)
+    infinite-bandwidth and the bandwidth-bound (``mem``) regimes.
+    ``fetch_cycles`` overrides the per-round fetch latency as in
+    ``round_cycles``."""
+    return p.LSL * round_cycles(p, mem, fetch_cycles=fetch_cycles)
 
 
 # backwards-compatible private alias (pre-fidelity-suite name)
@@ -225,26 +242,10 @@ def gemm_rounds(p: DesignPoint, g: Gemm) -> jnp.ndarray:
                      os_nm * os_nn * os_kr)
 
 
-def gemm_timing(p: DesignPoint, g: Gemm,
-                mem: MemoryConfig | None = None) -> DataflowTiming:
-    """End-to-end cycle count of GEMM (M,K,N) on the array described by p.
-
-    All tile counts are ceilings — edge-tile waste shows up as utilization
-    loss exactly as it would on silicon.
-
-    With ``mem``, each round's bundle (weight + act bits) must also cross
-    the DRAM port through the PF-deep prefetch FIFO: the steady portion
-    accumulates the per-round roofline, rounds * max(round_c, F, (F+L)/PF)
-    — exactly what the event simulators charge round by round, so
-    ``steady_pass_cycles`` and this GEMM total agree on the modeled
-    quantity. Bandwidth-bound designs report utilization < 1 against the
-    same ideal_cycles floor. The infinite-bandwidth limit is bit-exact
-    with ``mem=None``.
-    """
-    tc = t_c(p)
-    round_c = round_cycles(p, mem)
-    fill = _fill_cycles(p)
-
+def _gemm_traffic(p: DesignPoint, g: Gemm):
+    """Per-instance (count = 1) round count, fill-pass count, and streamed
+    weight/activation traffic of GEMM g — the shared tile math behind
+    ``gemm_timing`` and the shape-aware port model."""
     (ws_nk, ws_nn, ws_nm), (os_nm, os_nn, os_kr) = _gemm_tiles(p, g)
 
     # ---- WS mapping: rows->K (AL each), cols->N (PC*LSL each), M->TL blocks.
@@ -266,16 +267,66 @@ def gemm_timing(p: DesignPoint, g: Gemm,
 
     is_ws = p.dataflow == WS
     rounds = jnp.where(is_ws, ws_rounds, os_rounds)
-    fill_part = jnp.where(is_ws, ws_tiles, os_nm * os_nn) * fill
+    fill_passes = jnp.where(is_ws, ws_tiles, os_nm * os_nn)
     wbits = jnp.where(is_ws, ws_wbits, os_wbits)
     abits = jnp.where(is_ws, ws_abits, os_abits)
+    return rounds, fill_passes, wbits, abits
+
+
+def gemm_round_fetch_cycles(p: DesignPoint, g: Gemm,
+                            mem: MemoryConfig) -> jnp.ndarray:
+    """GEMM-shape-aware per-round fetch latency: the cycles the DRAM port
+    needs per round when each round's bundle carries only the bits GEMM g
+    actually streams — total streamed traffic (edge tiles clamped to the
+    real K/N extents) spread evenly over the GEMM's rounds, then ceil'd to
+    whole port cycles.
+
+    Always <= the shape-oblivious ``memory.round_fetch_cycles`` (whose
+    bundle assumes every tile is full), and exactly equal to it when the
+    GEMM fills the array (no edge tiles). Integer-valued so event times in
+    the simulators stay exactly representable in float32."""
+    rounds, _, wbits, abits = _gemm_traffic(p, g)
+    return jnp.ceil((wbits + abits) / rounds / mem.dram_bw_bits_per_cycle)
+
+
+def gemm_timing(p: DesignPoint, g: Gemm,
+                mem: MemoryConfig | None = None,
+                shape_aware: bool = False) -> DataflowTiming:
+    """End-to-end cycle count of GEMM (M,K,N) on the array described by p.
+
+    All tile counts are ceilings — edge-tile waste shows up as utilization
+    loss exactly as it would on silicon.
+
+    With ``mem``, each round's bundle (weight + act bits) must also cross
+    the DRAM port through the PF-deep prefetch FIFO: the steady portion
+    accumulates the per-round roofline, rounds * max(round_c, F, (F+L)/PF)
+    — exactly what the event simulators charge round by round, so
+    ``steady_pass_cycles`` and this GEMM total agree on the modeled
+    quantity. Bandwidth-bound designs report utilization < 1 against the
+    same ideal_cycles floor. The infinite-bandwidth limit is bit-exact
+    with ``mem=None``.
+
+    ``shape_aware=True`` replaces the shape-oblivious per-round fetch F
+    with ``gemm_round_fetch_cycles`` (edge tiles charge only the bits they
+    stream); the default keeps the legacy full-bundle port model bit-exact.
+    """
+    tc = t_c(p)
+    fill = _fill_cycles(p)
+
+    rounds, fill_passes, wbits, abits = _gemm_traffic(p, g)
+
+    if mem is None:
+        round_c = round_cycles(p, None)
+        dram = jnp.zeros_like(rounds * round_c)
+    else:
+        F = gemm_round_fetch_cycles(p, g, mem) if shape_aware \
+            else round_fetch_cycles(p, mem)
+        round_c = round_cycles(p, mem, fetch_cycles=F)
+        # port-busy cycles: every round's bundle crosses the DRAM port
+        dram = rounds * F
 
     steady = rounds * round_c  # round_c already includes the port roofline
-    if mem is None:
-        dram = jnp.zeros_like(steady)
-    else:
-        # port-busy cycles: every round's bundle crosses the DRAM port
-        dram = rounds * round_fetch_cycles(p, mem)
+    fill_part = fill_passes * fill
     total = (steady + fill_part) * g.count
     compute = rounds * tc * g.count
 
@@ -293,9 +344,10 @@ def gemm_timing(p: DesignPoint, g: Gemm,
 
 
 def workload_timing(p: DesignPoint, gemms: list[Gemm],
-                    mem: MemoryConfig | None = None) -> DataflowTiming:
+                    mem: MemoryConfig | None = None,
+                    shape_aware: bool = False) -> DataflowTiming:
     """Sum a list of GEMMs (a model's layer workload) on one design point."""
-    parts = [gemm_timing(p, g, mem) for g in gemms]
+    parts = [gemm_timing(p, g, mem, shape_aware=shape_aware) for g in gemms]
     tot = sum(t.total_cycles for t in parts)
     ideal = sum(t.ideal_cycles for t in parts)
     return DataflowTiming(

@@ -417,6 +417,98 @@ def scheduled_fidelity_sweep(
     return out
 
 
+def joint_fidelity_sweep(
+    key: jax.Array,
+    gemms: Sequence[Gemm] | None = None,
+    n_samples: int = 512,
+    min_passes: int = 3,
+    dataflows: Sequence[DataflowName] = tuple(ALL_DATAFLOWS),
+    mem: MemoryConfig | None = None,
+    fixed: dict | None = None,
+    mesh=None,
+):
+    """``scheduled_fidelity_sweep`` under the mapping IR's shape-aware
+    port model — the sixth ``joint`` regime of the CI smoke gate.
+
+    Depths come from the shape-aware depth solver
+    (``schedule.schedule_gemms(shape_aware=True)``, the inner solver of
+    ``mapping.joint_mapping``), and every GEMM g is charged the
+    GEMM-shape-aware per-round fetch ``dataflow.gemm_round_fetch_cycles``
+    instead of the full-array round bundle: edge tiles pay only the bits
+    they actually stream, so F_g < F for every ragged GEMM in the mix
+    (SMOKE_SCHED_GEMMS's decode projection clamps hard on most sampled
+    arrays). The same F_g drives both sides of the contract — the batched
+    simulator via its ``fetch_cycles`` override (bucketing and event
+    rules unchanged, only the gate's F value differs) and the closed-form
+    roofline via ``steady_pass_cycles(fetch_cycles=...)`` — so the sweep
+    validates that the shape-aware port model keeps the three-level
+    fidelity chain intact at every (depth, F_g) actually chosen by the
+    joint mapper. Deferral, slack accounting, and the report shape match
+    ``scheduled_fidelity_sweep``.
+    """
+    from .dataflow import gemm_round_fetch_cycles
+
+    if mem is None:
+        mem = SMOKE_MEM
+    gemms = list(gemms) if gemms is not None else list(SMOKE_SCHED_GEMMS)
+    n_samples = _round_to_mesh(n_samples, mesh)
+    out = {}
+    for dfn in dataflows:
+        key, k = jax.random.split(key)
+        pop = _sample(
+            k, n_samples, mesh,
+            dataflow=dfn.dataflow, interconnect=dfn.interconnect,
+            OL=dfn.ol, **(fixed or {}),
+        )
+        valid = np.asarray(population_valid(pop, mem, mesh))
+        sched = schedule_gemms(pop, gemms, mem, shape_aware=True)
+        pf = np.asarray(sched.pf)                       # (n_gemms, n)
+        fg = np.stack([np.asarray(gemm_round_fetch_cycles(pop, g, mem),
+                                  np.float64) for g in gemms])
+
+        measurable = np.ones_like(valid)
+        for gi in range(len(gemms)):
+            pg = pop._replace(PF=jnp.asarray(pf[gi]))
+            measurable &= np.asarray(cycle_sim_jax.steady_measurable(
+                pg, mem=mem, fetch_cycles=fg[gi]))
+        n_deferred = int((valid & ~measurable).sum())
+        valid = valid & measurable
+        popv = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[valid]), pop)
+        pfv = pf[:, valid]
+        fgv = fg[:, valid]
+
+        nv = int(valid.sum())
+        rel = np.zeros((nv,), np.float64)
+        total = np.zeros((nv,), np.float64)
+        expect = np.zeros((nv,), np.float64)
+        slack = np.zeros((nv,), np.float64)
+        for gi in range(len(gemms)):
+            pg = popv._replace(PF=jnp.asarray(pfv[gi]))
+            passes = cycle_sim_jax.steady_state_passes(
+                pg, min_passes=min_passes, mem=mem, fetch_cycles=fgv[gi])
+            sim = cycle_sim_jax.simulate_batched(pg, passes, mem=mem,
+                                                 mesh=mesh,
+                                                 fetch_cycles=fgv[gi])
+            closed = np.asarray(
+                steady_pass_cycles(pg, mem, fetch_cycles=fgv[gi]), np.float64)
+            pps = np.asarray(sim.per_pass_steady, np.float64)
+            rel = np.maximum(rel, np.abs(pps - closed) / np.maximum(closed, 1.0))
+            total += np.asarray(sim.total_cycles, np.float64)
+            expect += passes * closed
+            slack += cycle_sim_jax.fill_drain_slack(pg, mem=mem,
+                                                    fetch_cycles=fgv[gi])
+        within = np.abs(total - expect) <= slack
+
+        out[dfn.label] = dict(
+            n=nv,
+            n_deferred=n_deferred,
+            max_rel_err=float(rel.max()) if rel.size else 0.0,
+            mean_rel_err=float(rel.mean()) if rel.size else 0.0,
+            frac_within_slack=float(within.mean()) if rel.size else 1.0,
+        )
+    return out
+
+
 def optimize_for_model(
     key: jax.Array,
     cfg: ArchConfig,
@@ -519,8 +611,9 @@ def _fidelity_main(argv=None):  # pragma: no cover - exercised by CI smoke run
     """CLI gate: ``python -m repro.core [--smoke]`` runs the fidelity
     sweep — in the paper's infinite-bandwidth regime, in the
     weight-bandwidth-bound, activation-bound, and shallow-prefetch regimes
-    under ``SMOKE_MEM``, and in the ``scheduled`` regime (per-GEMM
-    prefetch depths over a mixed-size GEMM list) — and fails (exit 1)
+    under ``SMOKE_MEM``, in the ``scheduled`` regime (per-GEMM prefetch
+    depths over a mixed-size GEMM list), and in the ``joint`` regime (the
+    mapping IR's shape-aware port model at those depths) — and fails (exit 1)
     when simulator-vs-closed-form drift exceeds the per-variant error
     budget in any regime — CI's defense against any side rotting."""
     import argparse
@@ -561,12 +654,16 @@ def _fidelity_main(argv=None):  # pragma: no cover - exercised by CI smoke run
         # fifth regime: per-GEMM prefetch-depth schedules over a mixed-size
         # GEMM list; PF stays free so every FIFO capacity is sampled
         regimes += [("scheduled", mem, dict(BC=1))]
+        # sixth regime: the joint mapper's shape-aware port model — the
+        # same mixed-size list with per-GEMM F_g (edge tiles pay only the
+        # bits they stream) driving both simulator and closed forms
+        regimes += [("joint", mem, dict(BC=1))]
 
     print("regime,variant,n,n_deferred,max_rel_err,mean_rel_err,"
           "frac_within_slack")
     for regime, mem, fixed in regimes:
-        sweep = scheduled_fidelity_sweep if regime == "scheduled" \
-            else fidelity_sweep
+        sweep = {"scheduled": scheduled_fidelity_sweep,
+                 "joint": joint_fidelity_sweep}.get(regime, fidelity_sweep)
         rep = sweep(jax.random.key(args.seed), n_samples=n,
                     mem=mem, fixed=fixed, mesh=mesh)
         worst = 0.0

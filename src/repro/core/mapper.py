@@ -1,19 +1,38 @@
-"""Model -> multi-core CIM engine mapping and the paper's QoR objective.
+"""Model -> multi-core CIM engine mapping: the greedy lowering passes of
+the mapping IR, plus the paper's QoR objective.
 
-Table 3 maps each LLM onto `#CIM Core` cores; we follow the paper: cores
-split the token dimension (M) of every GEMM evenly (data-parallel prefill),
-each core runs the same dataflow design, and the engine's latency is the
-per-core latency. Power and area scale by core count; the scalarized QoR is
-latency^2 * power * area (per core, as Table 3 reports per-core power/area).
+The explicit IR lives in ``core/mapping.py``: a lowered workload is a
+``Mapping`` (per-GEMM tiling splits nm/nk/nn, a weight/act buffer
+partition fraction, per-GEMM prefetch depths) attached to a
+``MappedWorkload``. This module supplies the *greedy* ingredients that
+IR's ``greedy_mapping`` strategy is built from — and that the pinned
+bit-exactness contract is stated against:
 
-With a memory model (``mem``, see memory.py), GEMMs are additionally tiled
-so each tile's weight working set fits the global weight buffer and its
-activation working set fits the global activation buffer
-(``tile_gemms_for_memory``), and the evaluation charges DRAM bandwidth
+  * ``split_gemms_across_cores`` — Table 3 maps each LLM onto `#CIM Core`
+    cores; cores split the token dimension (M) of every GEMM evenly
+    (data-parallel prefill), each core runs the same dataflow design, and
+    the engine's latency is the per-core latency. The split is total-MAC
+    conserving even when n_cores > M (the per-core M floor of 1 scales
+    ``count`` down by the same factor).
+  * ``tile_splits_for_memory`` / ``tile_gemms_for_memory`` — greedy
+    capacity tiling: N-then-K splits against the weight buffer,
+    M-then-K against the activation buffer, exact fractions so MACs are
+    conserved identically.
+  * the depth sub-solver (``schedule.py``) then argmins each tiled GEMM's
+    effective prefetch depth <= the design's PF capacity.
+
+``evaluate_model`` lowers through ``mapping.lower_workload`` with the
+greedy strategy — bit-exact to the historical implicit chain
+``model_gemms -> dedupe -> split -> tile -> evaluate_workload`` (pinned
+by tests/test_mapping.py and the mapping_gap bench).
+``mapping.joint_mapping`` searches tiling x buffer split x depth jointly
+under the shape-aware port model and dominates this greedy path.
+
+Power and area scale by core count; the scalarized QoR is
+latency^2 * power * area (per core, as Table 3 reports per-core
+power/area). With a memory model the evaluation charges DRAM bandwidth
 (weight + activation round bundles through the prefetch FIFO) and access
-energy. ``schedule=True`` further runs each (split, tiled) GEMM at its
-own effective prefetch depth <= the design's PF capacity
-(``schedule.scheduled_workload_timing``) — the per-GEMM scheduling layer.
+energy.
 """
 from __future__ import annotations
 
@@ -27,7 +46,7 @@ from .dataflow import Gemm
 from .design_space import IBW, WBW, DesignPoint
 from .memory import MemoryConfig
 from .ppa import (ArrayPPA, ServingQoR, array_peak_tops, evaluate_serving,
-                  evaluate_workload, qor_objective)
+                  qor_objective)
 from .workload import TraceArrays, dedupe_gemms, model_gemms, trace_phase_gemms
 
 
@@ -42,13 +61,27 @@ class EngineQoR(NamedTuple):
 
 
 def split_gemms_across_cores(gemms: list[Gemm], n_cores: int) -> list[Gemm]:
-    return [Gemm(max(g.M / n_cores, 1.0), g.K, g.N, g.count) for g in gemms]
+    """Data-parallel core split on the token dimension: per-core M is
+    M / n_cores floored at one token row. When the floor engages
+    (n_cores > M), ``count`` scales down by the same factor so the
+    engine-level MAC total n_cores * sum(per-core macs) stays exactly
+    M*K*N*count — the floor widens the modeled tile (a sub-row tile is
+    not a real array shape) but must not mint extra work. Unclamped GEMMs
+    are bit-identical to the plain split (the scale is exactly 1.0)."""
+    out = []
+    for g in gemms:
+        m = g.M / n_cores
+        floored = max(m, 1.0)
+        out.append(Gemm(floored, g.K, g.N, g.count * (m / floored)))
+    return out
 
 
-def tile_gemm_for_memory(g: Gemm, mem: MemoryConfig) -> Gemm:
-    """Capacity-aware tiling: split a GEMM until each tile's weight working
-    set K_i * N_j * WBW fits the global weight buffer AND its activation
-    working set M_i * K_i * IBW fits the global activation buffer.
+def tile_splits_for_memory(g: Gemm, mem: MemoryConfig) -> tuple[int, int, int]:
+    """Greedy capacity splits (nm, nk, nn) of a GEMM so each tile's weight
+    working set K_i * N_j * WBW fits the global weight buffer AND its
+    activation working set M_i * K_i * IBW fits the global activation
+    buffer — the split triple the mapping IR (``core/mapping.py``) carries
+    per GEMM.
 
     Weight buffer: N splits first — they are free of partial-sum
     recombination; K splits are the last resort (the recombination adds are
@@ -59,10 +92,6 @@ def tile_gemm_for_memory(g: Gemm, mem: MemoryConfig) -> Gemm:
     column). Activation buffer: M splits first (free — tokens are
     independent), K splits as the last resort; a K split for activations
     also shrinks the weight tile, never growing it.
-
-    Splits are exact fractions so total MACs are conserved identically:
-    (M/nm) * (K/nk) * (N/nn) * (count*nm*nk*nn) == M*K*N*count.
-    Returns the (possibly identical) tiled GEMM.
     """
     wcap = float(mem.weight_buf_bits)
     K, N = g.K, g.N
@@ -88,10 +117,22 @@ def tile_gemm_for_memory(g: Gemm, mem: MemoryConfig) -> Gemm:
             nm = max(math.ceil(M), 1)
             nk2 = max(math.ceil((M / nm) * (K / nk) * IBW / acap), 1)
             nk *= nk2
+    return nm, nk, nn
 
+
+def apply_splits(g: Gemm, nm: int, nk: int, nn: int) -> Gemm:
+    """Apply a (nm, nk, nn) split triple: exact fractions so total MACs are
+    conserved identically —
+    (M/nm) * (K/nk) * (N/nn) * (count*nm*nk*nn) == M*K*N*count."""
     if nn == nk == nm == 1:
         return g
-    return Gemm(M / nm, K / nk, N / nn, g.count * nm * nk * nn)
+    return Gemm(g.M / nm, g.K / nk, g.N / nn, g.count * nm * nk * nn)
+
+
+def tile_gemm_for_memory(g: Gemm, mem: MemoryConfig) -> Gemm:
+    """Greedy capacity-aware tiling: ``tile_splits_for_memory`` applied.
+    Returns the (possibly identical) tiled GEMM."""
+    return apply_splits(g, *tile_splits_for_memory(g, mem))
 
 
 def tile_gemms_for_memory(gemms: list[Gemm], mem: MemoryConfig | None) -> list[Gemm]:
@@ -130,11 +171,13 @@ def evaluate_model(
     mem: MemoryConfig | None = None,
     schedule: bool = False,
 ) -> EngineQoR:
-    per_core = per_core_gemms(cfg, n_cores=n_cores, batch=batch, seq=seq,
-                              mode=mode, include_attention=include_attention,
-                              mem=mem)
-    ppa: ArrayPPA = evaluate_workload(p, per_core, mem,
-                                      schedule=True if schedule else None)
+    from .mapping import evaluate_mapped, lower_workload  # deferred: mapping
+    # builds on this module's greedy passes (no import cycle at load time)
+
+    mw = lower_workload(p, cfg, n_cores=n_cores, batch=batch, seq=seq,
+                        mode=mode, include_attention=include_attention,
+                        mem=mem, schedule=schedule)
+    ppa: ArrayPPA = evaluate_mapped(p, mw)
     return EngineQoR(
         latency_s=ppa.latency_s,
         power_w=ppa.power_w,

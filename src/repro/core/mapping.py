@@ -1,0 +1,292 @@
+"""The mapping IR: explicit workload lowering with interchangeable
+greedy / joint mapping strategies.
+
+Historically the lowering pipeline was an *implicit* chain of greedy
+passes — ``model_gemms -> dedupe_gemms -> split_gemms_across_cores ->
+tile_gemms_for_memory -> evaluate_workload(schedule=...)`` — each pass
+deciding its axis independently: the tiler picks ceil-splits against a
+fixed buffer split, then the depth solver argmins prefetch depth per
+GEMM. CIM-Tuner (hardware-mapping co-exploration) and MIREDO (MIP-driven
+dataflow optimization) both show the joint space is where the wins are
+(PAPERS.md); the port-model gap that makes it matter here is that edge
+tiles used to fetch the full array's round bundle, so a GEMM-shape-aware
+port (``dataflow.gemm_round_fetch_cycles``) changes which mappings win.
+
+This module reifies the lowering decision as data:
+
+  ``Mapping``         per-GEMM tiling splits (nm, nk, nn), the weight/act
+                      buffer partition fraction wfrac (a new mapping axis:
+                      the pooled staging capacity is re-split by
+                      ``memory.partition``), and per-GEMM effective
+                      prefetch depths pf.
+  ``MappedWorkload``  the lowered workload: the per-core GEMM list, its
+                      tiled form under the mapping, the depth
+                      ``schedule.Schedule``, the (possibly re-partitioned)
+                      ``MemoryConfig``, and the port-model flag.
+  ``lower_workload``  model config -> ``MappedWorkload`` via a strategy.
+  ``evaluate_mapped`` ``MappedWorkload`` -> ``ppa.ArrayPPA``.
+
+Strategies:
+
+  ``greedy_mapping``  exactly the historical chain, **bit-exact and
+      pinned** (tests/test_mapping.py, benchmarks/mapping_gap.py): greedy
+      capacity splits (``mapper.tile_splits_for_memory``), the legacy
+      buffer split, depths from ``schedule.schedule_gemms`` under the
+      shape-oblivious port model. ``mapper.evaluate_model`` lowers through
+      this strategy.
+
+  ``joint_mapping``   one exact coordinate-descent sweep over the
+      split-menu x buffer-split x depth-menu cross-product, scored under
+      the shape-aware port model: for each buffer split phi (the legacy
+      split plus a unit-grid menu at the same cell-center encoding
+      ``bayesopt.encode`` uses for every other axis, (i + 0.5) / n), each
+      GEMM tries a menu of split triples (greedy N-first, K-first, and the
+      identity) whose inner depth solver is the exact per-GEMM argmin of
+      ``schedule.schedule_gemm`` — so each coordinate is minimized exactly
+      given the outer ones, and a single sweep is optimal over the
+      enumerated cross-product. The greedy strategy's exact choice
+      (legacy split, greedy triples, its depths) is always in the menu,
+      and the shape-aware per-round fetch never exceeds the
+      shape-oblivious one, so **joint dominates greedy structurally**:
+      cost(joint) <= cost(greedy splits @ shape-aware best depths)
+                  <= cost(greedy splits @ greedy depths, shape-aware F)
+                  <= cost(greedy), the legacy evaluation. The dominance
+      property and a pinned bandwidth-bound strictly-better config live
+      in tests/test_mapping.py; ``dse.joint_fidelity_sweep`` (the sixth
+      ``--smoke`` regime) holds the shape-aware closed forms to the same
+      1e-4 budget against both event simulators.
+
+The mapping search is eager python over small static menus (like the
+greedy tiler's ceils — tile shapes must be static for the closed forms
+anyway); everything *inside* a candidate (depth argmin, costs) is batched
+jnp, so a whole population prices one candidate in one fused evaluation.
+For batched points the per-GEMM split and buffer-split coordinates are
+chosen on the population-summed cost (one mapping per workload), while
+depths stay per-point; with a single point every coordinate is per-point
+optimal.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from .dataflow import Gemm, gemm_rounds
+from .design_space import DesignPoint, IBW, WBW
+from .memory import (MemoryConfig, fits_buffers, partition, weight_fraction)
+from .ppa import ArrayPPA, evaluate_workload
+from .schedule import Schedule, schedule_gemm, schedule_gemms
+
+#: Buffer-split menu for ``joint_mapping``: unit-grid cell centers,
+#: the same (i + 0.5) / n encoding ``bayesopt.encode`` maps every design
+#: axis onto (so a BO loop over the mapping axis reuses its [0,1]^d space
+#: unchanged). The legacy split of the given MemoryConfig is always tried
+#: first, in addition to this menu.
+WFRAC_CHOICES = tuple((i + 0.5) / 8.0 for i in range(8))
+
+
+class Mapping(NamedTuple):
+    """One lowering decision: how a workload's GEMMs land on the memory
+    hierarchy. ``splits`` is a per-GEMM tuple of (nm, nk, nn) tiling
+    splits (static python ints — tile shapes are static for the closed
+    forms); ``wfrac`` is the weight share of the pooled staging capacity
+    (``memory.partition``); ``pf`` is the per-GEMM effective prefetch
+    depths, stacked on axis 0 like ``Schedule.pf`` (None when the depth
+    axis was not solved)."""
+
+    splits: tuple[tuple[int, int, int], ...]
+    wfrac: float
+    pf: jnp.ndarray | None = None
+
+
+class MappedWorkload(NamedTuple):
+    """A workload lowered by a mapping strategy — everything
+    ``evaluate_mapped`` needs, made explicit."""
+
+    gemms: tuple[Gemm, ...]        # per-core GEMMs before tiling
+    tiled: tuple[Gemm, ...]        # after applying mapping.splits
+    mapping: Mapping
+    schedule: Schedule | None      # per-GEMM depth schedule (None: fixed PF)
+    mem: MemoryConfig | None       # possibly re-partitioned by mapping.wfrac
+    shape_aware: bool = False      # port model the mapping was scored under
+
+
+def _apply_splits(g: Gemm, s: tuple[int, int, int]) -> Gemm:
+    from .mapper import apply_splits
+    return apply_splits(g, *s)
+
+
+def _tile_fits(g: Gemm, s: tuple[int, int, int], mem: MemoryConfig) -> bool:
+    """Whether the split triple's tile working sets fit the staging
+    buffers (the constraint the greedy tiler satisfies by construction)."""
+    nm, nk, nn = s
+    return ((g.K / nk) * (g.N / nn) * WBW <= mem.weight_buf_bits
+            and (g.M / nm) * (g.K / nk) * IBW <= mem.act_buf_bits)
+
+
+def _kfirst_splits(g: Gemm, mem: MemoryConfig) -> tuple[int, int, int]:
+    """The K-first alternative to the greedy tiler's N-first weight split:
+    prefer K splits (smaller weight tiles shrink the activation working
+    set too), N splits as the last resort; activation side unchanged
+    (M first, then K)."""
+    wcap = float(mem.weight_buf_bits)
+    K, N = g.K, g.N
+    nn = nk = 1
+    wbits = K * N * WBW
+    if math.isfinite(wcap) and wbits > wcap:
+        nk = math.ceil(wbits / wcap)
+        if nk > K:
+            nk = max(math.ceil(K), 1)
+            nn = max(math.ceil((K / nk) * N * WBW / wcap), 1)
+    acap = float(mem.act_buf_bits)
+    M, nm = g.M, 1
+    abits = M * (K / nk) * IBW
+    if math.isfinite(acap) and abits > acap:
+        nm = math.ceil(abits / acap)
+        if nm > M:
+            nm = max(math.ceil(M), 1)
+            nk2 = max(math.ceil((M / nm) * (K / nk) * IBW / acap), 1)
+            nk *= nk2
+    return nm, nk, nn
+
+
+def _split_menu(g: Gemm, mem: MemoryConfig) -> list[tuple[int, int, int]]:
+    """Candidate split triples for one GEMM under one buffer split: the
+    greedy N-first triple (always feasible by construction), the K-first
+    alternative, and the identity when it fits. Deduplicated, greedy
+    first (equal-cost ties resolve toward the greedy choice)."""
+    from .mapper import tile_splits_for_memory
+
+    menu = [tile_splits_for_memory(g, mem)]
+    for s in (_kfirst_splits(g, mem), (1, 1, 1)):
+        if s not in menu and _tile_fits(g, s, mem):
+            menu.append(s)
+    return menu
+
+
+def greedy_mapping(p: DesignPoint, gemms: Sequence[Gemm],
+                   mem: MemoryConfig | None,
+                   schedule: bool = True) -> MappedWorkload:
+    """The pinned legacy lowering as an explicit mapping: greedy capacity
+    splits, the memory config's own buffer split, depths from the
+    shape-oblivious depth solver (``schedule=False`` leaves the depth axis
+    unsolved — the fixed-PF path). Bit-exact to the historical
+    ``tile_gemms_for_memory`` + ``evaluate_workload(schedule=...)`` chain:
+    latencies AND chosen depths are identical (tests/test_mapping.py)."""
+    from .mapper import tile_splits_for_memory
+
+    gemms = tuple(gemms)
+    if mem is None:
+        splits = tuple((1, 1, 1) for _ in gemms)
+    else:
+        splits = tuple(tile_splits_for_memory(g, mem) for g in gemms)
+    tiled = tuple(_apply_splits(g, s) for g, s in zip(gemms, splits))
+    sched = schedule_gemms(p, tiled, mem) if schedule else None
+    return MappedWorkload(
+        gemms=gemms, tiled=tiled,
+        mapping=Mapping(splits=splits,
+                        wfrac=weight_fraction(mem) if mem else 0.5,
+                        pf=sched.pf if sched is not None else None),
+        schedule=sched, mem=mem, shape_aware=False)
+
+
+def joint_mapping(p: DesignPoint, gemms: Sequence[Gemm],
+                  mem: MemoryConfig | None,
+                  shape_aware: bool = True) -> MappedWorkload:
+    """Joint tiling x buffer-split x depth co-optimization (see module
+    docstring for the search structure and the dominance argument).
+    Eager python over the candidate menus; batched jnp inside each
+    candidate, so ``p`` may be a scalar point or a population."""
+    gemms = tuple(gemms)
+    mem_cands = [mem]
+    if mem is not None and math.isfinite(mem.weight_buf_bits
+                                         + mem.act_buf_bits):
+        legacy = weight_fraction(mem)
+        mem_cands += [partition(mem, w) for w in WFRAC_CHOICES
+                      if w != legacy]
+
+    best = None  # (agg_cost, phi_cost, mem, per_gemm entries)
+    for mphi in mem_cands:
+        per_gemm = []
+        total = None
+        for g in gemms:
+            if mphi is None:
+                menu = [(1, 1, 1)]
+            else:
+                menu = _split_menu(g, mphi)
+            entries = []
+            for s in menu:
+                gt = _apply_splits(g, s)
+                pf, t = schedule_gemm(p, gt, mphi, shape_aware=shape_aware)
+                entries.append((s, gt, pf, t.total_cycles))
+            agg = [float(jnp.sum(c)) for _, _, _, c in entries]
+            e = entries[int(np.argmin(agg))]
+            per_gemm.append(e)
+            total = e[3] if total is None else total + e[3]
+        # point-level residency: a re-partitioned split may starve one
+        # buffer below the array's resident working set
+        if mphi is not None:
+            total = jnp.where(fits_buffers(p, mphi), total, jnp.inf)
+        agg_cost = float(jnp.sum(jnp.where(jnp.isfinite(total), total,
+                                           jnp.float32(1e30))))
+        if best is None or agg_cost < best[0]:
+            best = (agg_cost, total, mphi, per_gemm)
+
+    _, cost, mphi, per_gemm = best
+    splits = tuple(e[0] for e in per_gemm)
+    tiled = tuple(e[1] for e in per_gemm)
+    pf = jnp.stack([e[2] for e in per_gemm])
+    sched = Schedule(
+        pf=pf,
+        cost=jnp.stack([jnp.broadcast_to(e[3], pf.shape[1:]) for e in per_gemm]),
+        rounds=jnp.stack([jnp.broadcast_to(gemm_rounds(p, e[1]), pf.shape[1:])
+                          for e in per_gemm]))
+    return MappedWorkload(
+        gemms=gemms, tiled=tiled,
+        mapping=Mapping(splits=splits,
+                        wfrac=weight_fraction(mphi) if mphi else 0.5,
+                        pf=pf),
+        schedule=sched, mem=mphi, shape_aware=shape_aware)
+
+
+def lower_workload(
+    p: DesignPoint,
+    cfg: ArchConfig,
+    n_cores: int = 1,
+    batch: int = 8,
+    seq: int = 1024,
+    mode: str = "prefill",
+    include_attention: bool = False,
+    mem: MemoryConfig | None = None,
+    strategy: str = "greedy",
+    schedule: bool = True,
+) -> MappedWorkload:
+    """Model config -> ``MappedWorkload``: the explicit replacement for the
+    implicit ``model_gemms -> dedupe -> split -> tile -> evaluate`` chain.
+    ``strategy`` selects ``greedy_mapping`` (bit-exact legacy lowering;
+    ``schedule=False`` keeps the fixed-PF path) or ``joint_mapping``
+    (shape-aware joint co-optimization; always depth-solved)."""
+    from .workload import dedupe_gemms, model_gemms
+    from .mapper import split_gemms_across_cores
+
+    gemms = split_gemms_across_cores(
+        dedupe_gemms(model_gemms(cfg, mode=mode, batch=batch, seq=seq,
+                                 include_attention=include_attention)),
+        n_cores)
+    if strategy == "greedy":
+        return greedy_mapping(p, gemms, mem, schedule=schedule)
+    if strategy == "joint":
+        return joint_mapping(p, gemms, mem)
+    raise ValueError(f"unknown mapping strategy: {strategy!r}")
+
+
+def evaluate_mapped(p: DesignPoint, mw: MappedWorkload) -> ArrayPPA:
+    """Price a lowered workload with the full PPA stack — the single
+    evaluation entry every strategy funnels into, so greedy and joint
+    mappings are always compared under one model."""
+    return evaluate_workload(p, list(mw.tiled), mw.mem,
+                             schedule=mw.schedule,
+                             shape_aware=mw.shape_aware)

@@ -117,6 +117,35 @@ def make_memory(
 
 
 # ---------------------------------------------------------------------------
+# Buffer partitioning (the mapping IR's wfrac axis)
+# ---------------------------------------------------------------------------
+
+def partition(mem: MemoryConfig, wfrac: float) -> MemoryConfig:
+    """Re-split the pooled staging capacity (weight + act buffer bits) so a
+    fraction ``wfrac`` goes to weights and ``1 - wfrac`` to activations —
+    the buffer-partition axis of the mapping IR (``core/mapping.py``).
+
+    Identity when either buffer is unbounded (the pool is infinite, so no
+    split decision exists); bandwidth and DRAM energy are untouched. The
+    legacy fixed split corresponds to
+    ``wfrac = weight_buf_bits / (weight_buf_bits + act_buf_bits)``."""
+    pool = mem.weight_buf_bits + mem.act_buf_bits
+    if not math.isfinite(pool):
+        return mem
+    return mem._replace(weight_buf_bits=wfrac * pool,
+                        act_buf_bits=(1.0 - wfrac) * pool)
+
+
+def weight_fraction(mem: MemoryConfig) -> float:
+    """The buffer split ``mem`` already encodes, as a wfrac in [0, 1];
+    0.5 for an unbounded pool (where the axis is inert)."""
+    pool = mem.weight_buf_bits + mem.act_buf_bits
+    if not math.isfinite(pool):
+        return 0.5
+    return mem.weight_buf_bits / pool
+
+
+# ---------------------------------------------------------------------------
 # DRAM port timing
 # ---------------------------------------------------------------------------
 

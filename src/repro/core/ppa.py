@@ -87,7 +87,8 @@ def _act_delivery_energy_per_bit(p: DesignPoint) -> jnp.ndarray:
 
 def evaluate_workload(p: DesignPoint, gemms: list[Gemm],
                       mem: MemoryConfig | None = None,
-                      schedule: Schedule | bool | None = None) -> ArrayPPA:
+                      schedule: Schedule | bool | None = None,
+                      shape_aware: bool = False) -> ArrayPPA:
     """End-to-end QoRs of design point p running a GEMM workload.
 
     Power integrates (as the paper does from simulation traces):
@@ -110,14 +111,21 @@ def evaluate_workload(p: DesignPoint, gemms: list[Gemm],
     dram_cycles, leakage energy, and every latency-derived QoR then
     reflect the chosen depths; ``None`` keeps the PR 3 single-depth path
     bit-exactly.
+
+    ``shape_aware=True`` charges the port with the GEMM-shape-aware
+    per-round fetch (``dataflow.gemm_round_fetch_cycles`` — edge tiles pay
+    only the bits they stream) instead of the full-array round bundle; the
+    default keeps the legacy port model bit-exact.
     """
     # falsy (None or False) selects the fixed-depth path; a Schedule pytree
     # is always truthy (non-empty NamedTuple)
     if not schedule:
-        timing: DataflowTiming = workload_timing(p, gemms, mem)
+        timing: DataflowTiming = workload_timing(p, gemms, mem,
+                                                 shape_aware=shape_aware)
     else:
         timing = scheduled_workload_timing(
-            p, gemms, mem, schedule if isinstance(schedule, Schedule) else None)
+            p, gemms, mem, schedule if isinstance(schedule, Schedule) else None,
+            shape_aware=shape_aware)
     f = mm.frequency(p)
     latency = timing.total_cycles / f
 
@@ -260,6 +268,7 @@ def evaluate_serving(
     mem: MemoryConfig | None = None,
     schedule: Schedule | bool | None = None,
     slo_p99_latency_s: float = float("inf"),
+    shape_aware: bool = False,
 ) -> ServingQoR:
     """Score a design point against a request trace: evaluate the two
     serving phases with the full PPA stack (closed forms + memory model +
@@ -268,9 +277,21 @@ def evaluate_serving(
     ``macro_model.frequency``), and push the trace through the lane queue
     model. The scalarized search objective is p99 end-to-end latency x
     joules/token, +inf when p99 exceeds the SLO — minimize energy and
-    tail latency jointly, subject to the SLO."""
-    pre = evaluate_workload(p, prefill_gemms, mem, schedule=schedule)
-    dec = evaluate_workload(p, decode_gemms, mem, schedule=schedule)
+    tail latency jointly, subject to the SLO.
+
+    ``schedule`` may also be a ``(prefill_schedule, decode_schedule)``
+    tuple of precomputed ``Schedule`` pytrees (one per phase — the phases
+    run different GEMM lists, so one Schedule cannot serve both);
+    ``shape_aware`` selects the GEMM-shape-aware port model as in
+    ``evaluate_workload``."""
+    if isinstance(schedule, tuple):
+        pre_sched, dec_sched = schedule
+    else:
+        pre_sched = dec_sched = schedule
+    pre = evaluate_workload(p, prefill_gemms, mem, schedule=pre_sched,
+                            shape_aware=shape_aware)
+    dec = evaluate_workload(p, decode_gemms, mem, schedule=dec_sched,
+                            shape_aware=shape_aware)
     t_pre_unit = pre.latency_s / mean_prompt
     ttft, lat = serving_latency_samples(
         arrival_s, prompt_lens, decode_lens, t_pre_unit, dec.latency_s,

@@ -1,15 +1,17 @@
-"""Per-GEMM prefetch-depth scheduling: FIFO *capacity* vs *effective depth*.
+"""Per-GEMM prefetch-depth selection — the mapping IR's depth sub-solver.
 
-PR 3 made the prefetch FIFO depth ``DesignPoint.PF`` a first-class timing
-resource, but as a single per-design axis: a llama3 decode workload runs
-its tiny QKV GEMMs and its huge MLP GEMMs at the same depth. This module
-splits the knob in two:
-
-  * ``PF`` stays the **physical capacity** of the prefetch FIFO — an
-    area/search axis, sampled and BO-encoded like every other design axis;
-  * each GEMM g of a workload runs at an **effective depth** pf_g <= PF,
-    selected per GEMM from ``design_space.PF_CHOICES`` by minimizing the
-    closed-form cost of that GEMM.
+Within the mapping IR (``core/mapping.py``) a lowered workload is a
+``Mapping``: per-GEMM tiling splits, a weight/act buffer partition
+fraction, and per-GEMM prefetch depths. This module solves the *depth*
+axis of that IR for a fixed tiling: ``DesignPoint.PF`` is the **physical
+capacity** of the prefetch FIFO (an area/search axis, sampled and
+BO-encoded like every other design axis), while each GEMM g runs at an
+**effective depth** pf_g <= PF, selected per GEMM from
+``design_space.PF_CHOICES`` by minimizing the closed-form cost of that
+GEMM. ``mapping.greedy_mapping`` calls this solver after the legacy greedy
+tiler (reproducing the pre-IR lowering bit-exactly);
+``mapping.joint_mapping`` calls it inside its coordinate search, once per
+(tiling split, buffer split) candidate, under the shape-aware port model.
 
 Derivation (from the PR 3 max-plus model): a GEMM whose round bundles
 stream through a depth-pf FIFO has the steady critical-circuit mean
@@ -43,17 +45,25 @@ d <= PF is *in* the candidate menu, so the scheduled cost is <= the
 fixed-d cost GEMM by GEMM — the property tests/test_schedule.py pins and
 the guarantee behind fig14 (scheduled latency <= best fixed depth).
 
-The ``Schedule`` pytree (chosen depths + per-GEMM closed-form costs)
-threads through ``ppa.evaluate_workload(schedule=...)``,
+``shape_aware=True`` charges every candidate with the GEMM-shape-aware
+per-round fetch (``dataflow.gemm_round_fetch_cycles`` — edge tiles pay
+only the bits they stream) instead of the full-array bundle; the default
+keeps the legacy port model bit-exact.
+
+The ``Schedule`` pytree (chosen depths + per-GEMM closed-form costs +
+per-GEMM round counts, so re-charging a precomputed schedule never
+recomputes the tile math) threads through
+``ppa.evaluate_workload(schedule=...)``,
 ``mapper.evaluate_model(schedule=True)``, ``dse.evaluate_population`` and
 the BO objective. Both event simulators honor per-GEMM depths
 (``cycle_sim.simulate_scheduled`` / ``cycle_sim_jax.simulate_scheduled``:
 each GEMM is dispatched to its own static-depth-specialized runner and
 the totals stitched, the array and DRAM port draining at GEMM boundaries
 — the same accumulation ``scheduled_workload_timing`` performs on the
-closed forms), and ``dse.scheduled_fidelity_sweep`` extends the
-sim-vs-closed-form CI contract to scheduled mixed-size workloads
-(the fifth ``scheduled`` regime of ``python -m repro.core --smoke``).
+closed forms), and ``dse.scheduled_fidelity_sweep`` /
+``dse.joint_fidelity_sweep`` extend the sim-vs-closed-form CI contract to
+scheduled and jointly-mapped workloads (the fifth and sixth regimes of
+``python -m repro.core --smoke``).
 """
 from __future__ import annotations
 
@@ -75,10 +85,15 @@ class Schedule(NamedTuple):
     population evaluation carries shape (n_gemms, *batch). ``pf`` is the
     *physical* depth each GEMM runs at (always <= the point's PF capacity);
     ``cost`` is the closed-form total-cycle cost of each GEMM at that
-    depth, the quantity the argmin selected on."""
+    depth, the quantity the argmin selected on; ``rounds`` is each GEMM's
+    per-instance round count (``dataflow.gemm_rounds``), stored so
+    re-charging a precomputed schedule reuses it instead of recomputing
+    the tile math per GEMM. ``cost``/``rounds`` default to None (an empty
+    pytree subtree) for hand-built schedules."""
 
     pf: jnp.ndarray
-    cost: jnp.ndarray
+    cost: jnp.ndarray | None = None
+    rounds: jnp.ndarray | None = None
 
 
 def engaged_depth(pf, rounds) -> jnp.ndarray:
@@ -90,16 +105,18 @@ def engaged_depth(pf, rounds) -> jnp.ndarray:
 
 
 def _timing_at_depth(p: DesignPoint, g: Gemm, pf, rounds,
-                     mem: MemoryConfig | None) -> DataflowTiming:
+                     mem: MemoryConfig | None,
+                     shape_aware: bool = False) -> DataflowTiming:
     """GEMM timing at effective depth ``pf`` with the engagement rule
     applied (``pf`` may be a scalar candidate or a per-point array)."""
     eff = engaged_depth(jnp.broadcast_to(jnp.asarray(pf, jnp.float32),
                                          jnp.shape(rounds)), rounds)
-    return gemm_timing(p._replace(PF=eff), g, mem)
+    return gemm_timing(p._replace(PF=eff), g, mem, shape_aware=shape_aware)
 
 
 def gemm_depth_menu(p: DesignPoint, g: Gemm,
-                    mem: MemoryConfig | None) -> list[DataflowTiming]:
+                    mem: MemoryConfig | None,
+                    shape_aware: bool = False) -> list[DataflowTiming]:
     """The candidate timings of GEMM g, one per ``PF_CHOICES`` depth (each
     charged at its engaged effective depth), in menu (ascending) order."""
     rounds = gemm_rounds(p, g)
@@ -107,18 +124,21 @@ def gemm_depth_menu(p: DesignPoint, g: Gemm,
     for d in PF_CHOICES:
         if math.isinf(d):
             inf = jnp.full(jnp.shape(rounds), jnp.inf, jnp.float32)
-            menu.append(gemm_timing(p._replace(PF=inf), g, mem))
+            menu.append(gemm_timing(p._replace(PF=inf), g, mem,
+                                    shape_aware=shape_aware))
         else:
-            menu.append(_timing_at_depth(p, g, d, rounds, mem))
+            menu.append(_timing_at_depth(p, g, d, rounds, mem,
+                                         shape_aware=shape_aware))
     return menu
 
 
-def schedule_gemm(p: DesignPoint, g: Gemm, mem: MemoryConfig | None):
+def schedule_gemm(p: DesignPoint, g: Gemm, mem: MemoryConfig | None,
+                  shape_aware: bool = False):
     """Select the effective depth of one GEMM: argmin of the closed-form
     cost over the allowed menu {d in PF_CHOICES : d <= PF}, ties broken
     toward the shallowest depth (PF_CHOICES is ascending and jnp.argmin
     returns the first minimum). Returns (pf, DataflowTiming at pf)."""
-    menu = gemm_depth_menu(p, g, mem)
+    menu = gemm_depth_menu(p, g, mem, shape_aware=shape_aware)
     depths = jnp.asarray(PF_CHOICES, jnp.float32)
     costs = jnp.stack([t.total_cycles for t in menu])           # (5, *batch)
     batch = costs.shape[1:]
@@ -135,35 +155,44 @@ def schedule_gemm(p: DesignPoint, g: Gemm, mem: MemoryConfig | None):
 
 
 def schedule_gemms(p: DesignPoint, gemms: Sequence[Gemm],
-                   mem: MemoryConfig | None) -> Schedule:
+                   mem: MemoryConfig | None,
+                   shape_aware: bool = False) -> Schedule:
     """Schedule a whole workload: one effective depth per GEMM (stacked on
     axis 0). Without a memory model (or at infinite bandwidth) every depth
     costs the same and the scheduler picks depth 1 everywhere — the FIFO
     cannot bind, so the choice is observationally irrelevant."""
-    pfs, costs = [], []
+    pfs, costs, rounds = [], [], []
     for g in gemms:
-        pf, t = schedule_gemm(p, g, mem)
+        pf, t = schedule_gemm(p, g, mem, shape_aware=shape_aware)
         pfs.append(pf)
         costs.append(t.total_cycles)
-    return Schedule(pf=jnp.stack(pfs), cost=jnp.stack(costs))
+        rounds.append(jnp.broadcast_to(gemm_rounds(p, g),
+                                       jnp.shape(t.total_cycles)))
+    return Schedule(pf=jnp.stack(pfs), cost=jnp.stack(costs),
+                    rounds=jnp.stack(rounds))
 
 
 def scheduled_workload_timing(p: DesignPoint, gemms: Sequence[Gemm],
                               mem: MemoryConfig | None = None,
-                              schedule: Schedule | None = None) -> DataflowTiming:
+                              schedule: Schedule | None = None,
+                              shape_aware: bool = False) -> DataflowTiming:
     """Accumulate per-GEMM *scheduled* rooflines over a workload — the
     schedule-aware replacement for ``dataflow.workload_timing``'s single
     design-wide depth. ``schedule=None`` selects depths internally (the
     usual path, jit-safe); passing a precomputed ``Schedule`` re-charges
-    the workload at those depths (engagement rule still applied, so the
+    the workload at those depths (engagement rule still applied, reusing
+    the schedule's stored per-GEMM ``rounds`` when present, so the
     accumulated cost equals ``Schedule.cost`` for a schedule produced by
     ``schedule_gemms`` on the same point/workload/memory)."""
     parts = []
     for i, g in enumerate(gemms):
         if schedule is None:
-            _, t = schedule_gemm(p, g, mem)
+            _, t = schedule_gemm(p, g, mem, shape_aware=shape_aware)
         else:
-            t = _timing_at_depth(p, g, schedule.pf[i], gemm_rounds(p, g), mem)
+            rounds = (schedule.rounds[i] if schedule.rounds is not None
+                      else gemm_rounds(p, g))
+            t = _timing_at_depth(p, g, schedule.pf[i], rounds, mem,
+                                 shape_aware=shape_aware)
         parts.append(t)
     tot = sum(t.total_cycles for t in parts)
     ideal = sum(t.ideal_cycles for t in parts)

@@ -31,11 +31,14 @@ def test_split_across_cores_divides_m():
 
 def test_split_across_cores_m_floor():
     """M never drops below one token row per core — tiny-M GEMMs (decode,
-    MoE stragglers) are replicated rather than sliced into fractions."""
+    MoE stragglers) are replicated rather than sliced into fractions, and
+    ``count`` scales down by the replication factor so the floor never
+    mints extra MACs (Gemm(2,...) over 8 cores: the floor widens per-core
+    M by 4x, so count drops to 1/4)."""
     out = split_gemms_across_cores([Gemm(2, 512, 1024)], 8)
     assert out[0].M == 1.0
-    # K, N, count untouched by the core split
-    assert (out[0].K, out[0].N, out[0].count) == (512, 1024, 1.0)
+    # K, N untouched by the core split; count carries the floor's rescale
+    assert (out[0].K, out[0].N, out[0].count) == (512, 1024, 0.25)
 
 
 @given(M=st.floats(1, 1e6), n_cores=st.integers(1, 64))
@@ -43,6 +46,20 @@ def test_split_across_cores_m_floor():
 def test_split_across_cores_floor_property(M, n_cores):
     (out,) = split_gemms_across_cores([Gemm(M, 64, 64)], n_cores)
     assert out.M == max(M / n_cores, 1.0)
+
+
+@given(g=gemms(), n_cores=st.integers(1, 64))
+@settings(max_examples=60, deadline=None)
+def test_split_across_cores_conserves_total_macs(g, n_cores):
+    """Engine-total MACs are exact under the core split: n_cores x the
+    per-core MACs equals the original M*K*N*count whether or not the
+    per-core M floor engages (the old clamp inflated engine MACs by
+    n_cores/M when n_cores > M)."""
+    (out,) = split_gemms_across_cores([g], n_cores)
+    assert n_cores * out.macs == pytest.approx(g.macs, rel=1e-12)
+    # unclamped splits stay bit-identical to the plain division
+    if g.M / n_cores >= 1.0:
+        assert out.count == g.count
 
 
 # ---------------------------------------------------------------------------
