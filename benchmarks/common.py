@@ -5,16 +5,26 @@ import csv
 import time
 from pathlib import Path
 
+import jax
+
 RESULTS = Path(__file__).resolve().parent.parent / "results"
 
 
 def timed(fn, *args, repeat: int = 3, **kw):
-    """Returns (result, best_us_per_call)."""
-    fn(*args, **kw)  # warmup / compile
+    """Returns (result, best_us_per_call), blocking on the returned pytree.
+
+    JAX dispatch is asynchronous: without ``jax.block_until_ready`` the
+    stopwatch measures enqueue time, not compute (the pre-fix helper
+    under-reported every ``us`` column the benches emit). Blocking inside
+    the loop — including after the warmup call, so compilation never
+    leaks into the first timed repeat — makes this the one timing path
+    every harness (paper figures, sim/dse throughput, kernel_bench)
+    shares."""
+    jax.block_until_ready(fn(*args, **kw))  # warmup / compile
     best = float("inf")
     for _ in range(repeat):
         t0 = time.perf_counter()
-        out = fn(*args, **kw)
+        out = jax.block_until_ready(fn(*args, **kw))
         best = min(best, (time.perf_counter() - t0) * 1e6)
     return out, best
 

@@ -17,14 +17,13 @@ from __future__ import annotations
 import json
 import subprocess
 import sys
-import time
 from pathlib import Path
 
 import jax
 
 from repro.core import design_space as ds, dse
 
-from .common import write_csv
+from .common import timed, write_csv
 
 N_POINTS = 65536
 SEED = 42
@@ -88,13 +87,9 @@ def dse_throughput():
         ppa = dse.evaluate_population(pop, gemms, mem)
         return valid, ppa
 
-    pipeline()  # warm the traces
-    best = float("inf")
-    for _ in range(3):
-        t0 = time.perf_counter()
-        _, ppa = pipeline()
-        jax.block_until_ready(ppa.latency_s)
-        best = min(best, time.perf_counter() - t0)
+    # the shared blocking timer (warmup + best-of-3 over the whole pytree)
+    _, best_us = timed(pipeline)
+    best = best_us / 1e6
     single_pts = N_POINTS / best
 
     proc = subprocess.run(

@@ -1,0 +1,161 @@
+"""Kernel autotune + calibration bench: measured Pallas GEMM time.
+
+Sweeps ``cim_gemm_int32`` block sizes (bm, bn, bk) — the (TL, PC, AL)
+analogs of the paper's macro geometry — over the real GEMM shapes
+``workload.model_gemms`` emits for the smoke configs (prefill + decode M,
+both ``os``/``ws`` dataflows, bit_serial on and off), timing each
+configuration through the shared blocking ``timed()`` helper and verifying
+every timed run bit-identical to ``ref.cim_gemm_ref``. The best block
+configuration per (shape, dataflow, bit_serial) cell becomes one row of
+``results/bench/kernel_cycles.csv``; ``core.calibrate`` then fits the
+analytical timing model (shape-aware port model at each row's analog
+design point) to the measured times and the fits land in
+``results/bench/kernel_calibration.csv``.
+
+Gate semantics (scripts/check_perf_regression.py --kernel-current): the
+mismatch count is machine-invariant — the kernel's bit-identity contract —
+and must be 0; the fit R^2 and relative error are printed and tracked only
+(absolute timings move with the host, and on CPU the kernel runs in
+Pallas interpret mode, so only the *ranking* fidelity is meaningful).
+
+Runs standalone too:  python benchmarks/kernel_bench.py
+"""
+from __future__ import annotations
+
+import functools
+import sys
+from pathlib import Path
+
+try:
+    from .common import RESULTS, timed, write_csv
+except ImportError:  # standalone: python benchmarks/kernel_bench.py
+    _ROOT = Path(__file__).resolve().parent.parent
+    sys.path[:0] = [str(_ROOT), str(_ROOT / "src")]
+    from benchmarks.common import RESULTS, timed, write_csv
+
+import jax
+import numpy as np
+
+from repro.configs.smoke import smoke_config
+from repro.core import workload
+from repro.core.calibrate import (CalibrationTable, KernelMeasurement,
+                                  modeled_kernel_seconds)
+from repro.core.dataflow import Gemm
+from repro.kernels import ref
+from repro.kernels.cim_gemm import cim_gemm_int32
+
+MODELS = ("llama3-8b", "yi-6b")
+MODES = (("prefill", dict(batch=1, seq=128)), ("decode", dict(batch=8)))
+DATAFLOWS = ("os", "ws")
+# compact (TL, PC, AL)-analog grid: enough spread that decode (M=8) and
+# prefill (M=128) pick different winners, small enough that the full
+# cross product stays a CI-budget bench
+BM_GRID = (32, 128)
+BN_GRID = (64, 128)
+BK_GRID = (64, 128)
+
+
+def _pad_to(a: np.ndarray, m: int, axis: int) -> np.ndarray:
+    r = (-a.shape[axis]) % m
+    if r == 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, r)
+    return np.pad(a, pad)
+
+
+def model_shapes() -> list[tuple[tuple[int, int, int], str]]:
+    """Unique (M, K, N) GEMM shapes the smoke configs emit, with the first
+    (model, mode) that produced each as provenance."""
+    seen: dict[tuple[int, int, int], str] = {}
+    for name in MODELS:
+        cfg = smoke_config(name)
+        for mode, kw in MODES:
+            for g in workload.model_gemms(cfg, mode=mode, **kw):
+                key = (int(g.M), int(g.K), int(g.N))
+                seen.setdefault(key, f"{name}:{mode}")
+    return sorted(seen.items())
+
+
+def _autotune_cell(x: np.ndarray, w: np.ndarray, ref_out: np.ndarray,
+                   dataflow: str, bit_serial: bool):
+    """Best (bm, bn, bk) for one (shape, dataflow, bit_serial) cell.
+    Returns (bm, bn, bk, best_us, total_mismatches_across_the_sweep)."""
+    M, N = x.shape[0], w.shape[1]
+    best = (None, float("inf"))
+    mismatches = 0
+    for bm in BM_GRID:
+        for bn in BN_GRID:
+            for bk in BK_GRID:
+                xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+                wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+                fn = jax.jit(functools.partial(
+                    cim_gemm_int32, bm=bm, bn=bn, bk=bk,
+                    dataflow=dataflow, bit_serial=bit_serial))
+                out, us = timed(fn, xp, wp)  # shared timer, best-of-3
+                mismatches += int(np.sum(
+                    np.asarray(out)[:M, :N] != ref_out))
+                if us < best[1]:
+                    best = ((bm, bn, bk), us)
+    (bm, bn, bk), us = best
+    return bm, bn, bk, us, mismatches
+
+
+def kernel_bench():
+    rng = np.random.default_rng(42)
+    shapes = model_shapes()
+
+    measurements: list[KernelMeasurement] = []
+    for (M, K, N), source in shapes:
+        x = rng.integers(-127, 128, (M, K), dtype=np.int8)
+        w = rng.integers(-127, 128, (K, N), dtype=np.int8)
+        ref_out = np.asarray(ref.cim_gemm_ref(x, w))
+        for dataflow in DATAFLOWS:
+            for bit_serial in (False, True):
+                bm, bn, bk, us, mism = _autotune_cell(
+                    x, w, ref_out, dataflow, bit_serial)
+                modeled_s = modeled_kernel_seconds(
+                    Gemm(float(M), float(K), float(N)), bm, bn, bk, dataflow)
+                measurements.append(KernelMeasurement(
+                    M=M, K=K, N=N, dataflow=dataflow, bit_serial=bit_serial,
+                    bm=bm, bn=bn, bk=bk, measured_s=us / 1e6,
+                    modeled_s=modeled_s, mismatches=mism, source=source))
+
+    total_mism = sum(m.mismatches for m in measurements)
+    if total_mism:
+        raise AssertionError(
+            f"kernel bench found {total_mism} output mismatches vs "
+            f"ref.cim_gemm_ref — the kernel bit-identity contract is broken")
+
+    table = CalibrationTable.fit(measurements)
+    rows = []
+    for m in measurements:
+        fit = table.fits[m.dataflow]
+        pred = float(table.predict_seconds(m.dataflow, m.modeled_s))
+        rel = abs(pred - m.measured_s) / max(m.measured_s, 1e-12)
+        rows.append([m.source, m.M, m.K, m.N, m.dataflow, int(m.bit_serial),
+                     m.bm, m.bn, m.bk, f"{m.measured_s * 1e6:.2f}",
+                     f"{m.modeled_s * 1e6:.4f}", f"{pred * 1e6:.2f}",
+                     f"{rel:.4f}", f"{fit.r2:.6f}", m.mismatches])
+    write_csv(
+        "bench/kernel_cycles.csv",
+        ["source", "M", "K", "N", "dataflow", "bit_serial", "bm", "bn", "bk",
+         "best_us", "modeled_us", "calibrated_us", "rel_err", "fit_r2",
+         "mismatches"],
+        rows,
+    )
+    table.to_csv(RESULTS / "bench" / "kernel_calibration.csv")
+    print(table.report())
+
+    direct = [m for m in measurements if not m.bit_serial]
+    mean_us = sum(m.measured_s for m in direct) / len(direct) * 1e6
+    r2s = " ".join(f"R2[{df}]={f.r2:.3f}" for df, f in sorted(table.fits.items()))
+    derived = (f"shapes={len(shapes)} rows={len(measurements)} "
+               f"mismatches={total_mism} {r2s} "
+               f"agg_err={table.aggregate_rel_err:.3f}")
+    return mean_us, derived
+
+
+if __name__ == "__main__":
+    us, derived = kernel_bench()
+    print(f"kernel_bench,{us:.1f},{derived}")

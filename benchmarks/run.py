@@ -17,6 +17,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from .dse_throughput import dse_throughput
+    from .kernel_bench import kernel_bench
     from .mapping_gap import mapping_gap
     from .paper_figures import ALL, table3_llm_case_study
     from .roofline import roofline_table
@@ -30,6 +31,7 @@ def main() -> None:
     benches["dse_throughput"] = dse_throughput
     benches["serve_throughput"] = serve_throughput
     benches["mapping_gap"] = mapping_gap
+    benches["kernel_bench"] = kernel_bench
 
     print("name,us_per_call,derived")
     failed = []

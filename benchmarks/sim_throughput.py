@@ -20,7 +20,7 @@ from repro.core import cycle_sim, cycle_sim_jax
 from repro.core import design_space as ds
 from repro.core.design_space import point_rows
 
-from .common import write_csv
+from .common import timed, write_csv
 
 N_POINTS = 1024
 N_PASSES = 3
@@ -30,14 +30,9 @@ NUMPY_SUBSAMPLE = 64  # the python loop is ~3 orders slower; sample + extrapolat
 def sim_throughput():
     pop = ds.sample_random(jax.random.key(42), N_POINTS)
 
-    # --- batched JAX: warm the jit caches, then best-of-3 full dispatches
-    res = cycle_sim_jax.simulate_batched(pop, N_PASSES)
-    best = float("inf")
-    for _ in range(3):
-        t0 = time.perf_counter()
-        res = cycle_sim_jax.simulate_batched(pop, N_PASSES)
-        jax.block_until_ready(res.total_cycles)
-        best = min(best, time.perf_counter() - t0)
+    # --- batched JAX: the shared blocking timer (warmup + best-of-3)
+    res, best_us = timed(cycle_sim_jax.simulate_batched, pop, N_PASSES)
+    best = best_us / 1e6
     jax_pts_per_s = N_POINTS / best
 
     # --- per-point numpy event loop on a subsample of the same population

@@ -45,12 +45,21 @@ joint rows' gap must be nonnegative (structural dominance), while the
 gap magnitude is printed and tracked only (it is workload/design
 dependent).
 
+``--kernel-current`` gates the measured-kernel calibration CSV
+(``benchmarks.kernel_bench``): every autotuned cell's mismatch count vs
+``ref.cim_gemm_ref`` is the machine-invariant signal (the Pallas kernel's
+bit-identity contract) and must be 0, and the per-dataflow calibration
+fit columns must be finite, while the fit R^2 and model-vs-measured
+relative error are printed and tracked only (interpret-mode timings move
+with the host).
+
     python scripts/check_perf_regression.py \
         --baseline /tmp/sim_throughput.baseline.csv \
         --current results/bench/sim_throughput.csv [--min-ratio 0.5] \
         [--dse-current results/bench/dse_throughput.csv] \
         [--serve-current results/bench/serve_throughput.csv] \
-        [--mapping-current results/bench/mapping_gap.csv]
+        [--mapping-current results/bench/mapping_gap.csv] \
+        [--kernel-current results/bench/kernel_cycles.csv]
 """
 from __future__ import annotations
 
@@ -156,6 +165,51 @@ def check_mapping_consistency(path: Path) -> bool:
     return not bad
 
 
+def check_kernel_consistency(path: Path) -> bool:
+    """Gate the kernel-calibration bench CSV: every autotuned cell's
+    mismatch count vs ``ref.cim_gemm_ref`` must be 0 (the kernel's
+    bit-identity contract is machine-invariant) and the per-dataflow fit
+    columns must be finite real numbers (a NaN/inf fit means the
+    calibration regression degenerated); the fit R^2 and relative error
+    magnitudes are printed and tracked only — absolute timings move with
+    the host, and on CPU the kernel runs in interpret mode."""
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    if not rows:
+        print(f"FAIL: {path}: empty kernel bench CSV")
+        return False
+    bad = False
+    for r in rows:
+        if int(float(r["mismatches"])) != 0:
+            print(f"FAIL: kernel_bench {r['M']}x{r['K']}x{r['N']} "
+                  f"{r['dataflow']}/bs={r['bit_serial']} reports "
+                  f"{r['mismatches']} mismatches vs ref.cim_gemm_ref "
+                  f"(kernel bit-identity contract broken)")
+            bad = True
+        for col in ("best_us", "modeled_us", "calibrated_us", "rel_err",
+                    "fit_r2"):
+            v = float(r[col])
+            if v != v or v in (float("inf"), float("-inf")):
+                print(f"FAIL: kernel_bench {r['M']}x{r['K']}x{r['N']} "
+                      f"{r['dataflow']} has non-finite {col}={r[col]}")
+                bad = True
+    for df in ("os", "ws"):
+        if not any(r["dataflow"] == df for r in rows):
+            print(f"FAIL: {path} lacks '{df}' dataflow rows")
+            bad = True
+    if not bad:
+        r2 = {df: next(float(r["fit_r2"]) for r in rows
+                       if r["dataflow"] == df and r["bit_serial"] == "0")
+              for df in ("os", "ws")}
+        direct = [r for r in rows if r["bit_serial"] == "0"]
+        mean_err = sum(float(r["rel_err"]) for r in direct) / len(direct)
+        print(f"OK: kernel bench bit-identical to ref on {len(rows)} "
+              f"autotuned cells; calibration fit R2[os]={r2['os']:.3f} "
+              f"R2[ws]={r2['ws']:.3f}, direct-path mean rel err "
+              f"{mean_err:.3f} (tracked, not enforced)")
+    return not bad
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", type=Path)
@@ -176,6 +230,10 @@ def main() -> int:
                     help="mapping_gap bench CSV to gate for greedy-vs-legacy "
                          "bit-exactness (mismatches must be 0) and joint "
                          "dominance (gap_pct >= 0)")
+    ap.add_argument("--kernel-current", type=Path,
+                    help="kernel_bench CSV to gate for kernel-vs-ref "
+                         "bit-identity (mismatches must be 0) and finite "
+                         "calibration fits (R2/err tracked, not enforced)")
     args = ap.parse_args()
 
     aux_ok = True
@@ -185,11 +243,15 @@ def main() -> int:
         aux_ok &= check_serve_consistency(args.serve_current)
     if args.mapping_current is not None:
         aux_ok &= check_mapping_consistency(args.mapping_current)
+    if args.kernel_current is not None:
+        aux_ok &= check_kernel_consistency(args.kernel_current)
     if args.baseline is None or args.current is None:
         if (args.dse_current is None and args.serve_current is None
-                and args.mapping_current is None):
+                and args.mapping_current is None
+                and args.kernel_current is None):
             ap.error("--baseline/--current (and/or --dse-current/"
-                     "--serve-current/--mapping-current) required")
+                     "--serve-current/--mapping-current/--kernel-current) "
+                     "required")
         return 0 if aux_ok else 1
 
     base = read_points_per_s(args.baseline)

@@ -1,7 +1,9 @@
 """AccelCIM core: the paper's dataflow design space, evaluators, and DSE."""
-from . import (bayesopt, cycle_sim, cycle_sim_jax, dataflow, design_space,
-               dse, macro_model, mapper, mapping, memory, pareto, ppa,
-               schedule, workload)
+from . import (bayesopt, calibrate, cycle_sim, cycle_sim_jax, dataflow,
+               design_space, dse, macro_model, mapper, mapping, memory,
+               pareto, ppa, schedule, workload)
+from .calibrate import (CalibrationTable, DataflowFit, KernelMeasurement,
+                        analog_point, modeled_kernel_seconds)
 from .cycle_sim import SimResult
 from .cycle_sim_jax import simulate_batched
 from .dataflow import (DataflowTiming, Gemm, gemm_round_fetch_cycles,
@@ -28,9 +30,11 @@ from .schedule import Schedule, schedule_gemms, scheduled_workload_timing
 from .workload import TraceArrays, trace_phase_gemms
 
 __all__ = [
-    "bayesopt", "cycle_sim", "cycle_sim_jax", "dataflow", "design_space",
-    "dse", "macro_model", "mapper", "mapping", "memory", "pareto", "ppa",
-    "schedule", "workload",
+    "bayesopt", "calibrate", "cycle_sim", "cycle_sim_jax", "dataflow",
+    "design_space", "dse", "macro_model", "mapper", "mapping", "memory",
+    "pareto", "ppa", "schedule", "workload",
+    "CalibrationTable", "DataflowFit", "KernelMeasurement", "analog_point",
+    "modeled_kernel_seconds",
     "SimResult", "simulate_batched",
     "DataflowTiming", "Gemm", "gemm_round_fetch_cycles", "gemm_rounds",
     "gemm_timing", "round_cycles", "steady_pass_cycles", "workload_timing",

@@ -1,0 +1,242 @@
+"""Measured-kernel calibration: fit the analytical timing model to Pallas.
+
+The repo's fidelity chain so far relates three *modeled* quantities —
+closed forms (``dataflow.gemm_timing``) == numpy event sim == batched JAX
+sim, all in cycles of a hypothetical CIM array. This module adds the
+fourth, *measured* level: ``benchmarks/kernel_bench.py`` times the actual
+``cim_gemm_int32`` Pallas kernel over the real model GEMM shapes, and a
+:class:`CalibrationTable` least-squares-fits modeled seconds to measured
+seconds per dataflow.
+
+What the fit means: the modeled axis is ``gemm_timing(point, gemm, mem,
+shape_aware=True).total_cycles / macro_model.frequency(point)`` at the
+*analog* design point of the timed block configuration (bn -> PC parallel
+output channels, bk -> AL accumulation length, bm -> TL activation block,
+ws/os grid order -> WS/OS dataflow) under the shape-aware DRAM port model.
+A single affine map per dataflow (measured ~= scale * modeled + intercept)
+then absorbs the platform constant between the modeled CIM clock and the
+host actually executing the kernel. The fit QUALITY (R^2, per-shape
+relative error) is the calibration signal: high R^2 says the model ranks
+and spaces real shapes the way real execution does, so DSE conclusions
+transfer; the scale magnitude is just the unit change and is tracked, not
+judged.
+
+Consumers call :meth:`CalibrationTable.calibrated_latency` to turn any
+(point, gemms) the mapper/ppa layers already evaluate into measured-frame
+seconds, and :meth:`CalibrationTable.report` for the per-shape +
+aggregate model-vs-measured error table. CSV round-trip (``to_csv`` /
+``from_csv``) lets CI regenerate the measured side and gate on the
+machine-invariant parts (mismatches, finite fits) while timings float.
+"""
+from __future__ import annotations
+
+import csv
+import math
+from pathlib import Path
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from . import macro_model
+from .dataflow import Gemm, gemm_timing, workload_timing
+from .design_space import OS, WS, DesignPoint, make_point
+from .memory import LPDDR5, MemoryConfig
+
+_EPS = 1e-12
+
+
+class KernelMeasurement(NamedTuple):
+    """One autotuned (shape, dataflow) cell of the kernel bench."""
+
+    M: int
+    K: int
+    N: int
+    dataflow: str            # "ws" | "os"
+    bit_serial: bool
+    bm: int                  # best block config found by the sweep
+    bn: int                  # -> PC analog
+    bk: int                  # -> AL analog
+    measured_s: float        # best-of-repeats wall time, seconds
+    modeled_s: float         # analytical seconds at the analog point
+    mismatches: int          # vs ref.cim_gemm_ref — must be 0
+    source: str = ""         # provenance tag, e.g. "llama3-8b:prefill"
+
+
+class DataflowFit(NamedTuple):
+    """Affine fit measured ~= scale * modeled + intercept for one dataflow."""
+
+    dataflow: str
+    scale: float
+    intercept: float
+    r2: float
+    mean_rel_err: float      # mean |pred - measured| / measured over shapes
+    max_rel_err: float
+    n: int
+
+
+def analog_point(bm: int, bn: int, bk: int, dataflow: str) -> DesignPoint:
+    """The design point a timed block configuration stands in for: the
+    (bn x bk) VMEM block is the macro (bn -> PC, bk -> AL), bm -> TL the
+    activation block, grid order -> dataflow."""
+    return make_point(AL=bk, PC=bn, TL=bm,
+                      dataflow=WS if dataflow == "ws" else OS)
+
+
+def modeled_kernel_seconds(g: Gemm, bm: int, bn: int, bk: int,
+                           dataflow: str,
+                           mem: MemoryConfig | None = LPDDR5) -> float:
+    """Analytical seconds for GEMM g at the block config's analog point,
+    under the shape-aware port model (edge tiles charge what they stream)."""
+    p = analog_point(bm, bn, bk, dataflow)
+    cycles = gemm_timing(p, g, mem, shape_aware=True).total_cycles
+    return float(cycles / macro_model.frequency(p))
+
+
+def _fit_one(dataflow: str, modeled: list[float],
+             measured: list[float]) -> DataflowFit:
+    n = len(modeled)
+    assert n == len(measured) and n >= 1
+    mean_m = sum(modeled) / n
+    mean_t = sum(measured) / n
+    var_m = sum((m - mean_m) ** 2 for m in modeled)
+    if n >= 2 and var_m > _EPS * max(mean_m, 1.0) ** 2:
+        cov = sum((m - mean_m) * (t - mean_t)
+                  for m, t in zip(modeled, measured))
+        scale = cov / var_m
+        intercept = mean_t - scale * mean_m
+    else:
+        # one point (or a degenerate all-equal modeled axis): pure ratio
+        scale = mean_t / max(mean_m, _EPS)
+        intercept = 0.0
+    pred = [scale * m + intercept for m in modeled]
+    ss_res = sum((p - t) ** 2 for p, t in zip(pred, measured))
+    ss_tot = sum((t - mean_t) ** 2 for t in measured)
+    if ss_tot > _EPS * max(mean_t, 1.0) ** 2:
+        r2 = 1.0 - ss_res / ss_tot
+    else:
+        r2 = 1.0 if ss_res <= _EPS else 0.0
+    rel = [abs(p - t) / max(t, _EPS) for p, t in zip(pred, measured)]
+    return DataflowFit(dataflow=dataflow, scale=float(scale),
+                       intercept=float(intercept), r2=float(r2),
+                       mean_rel_err=float(sum(rel) / n),
+                       max_rel_err=float(max(rel)), n=n)
+
+
+class CalibrationTable:
+    """Per-dataflow affine fits from modeled to measured kernel seconds."""
+
+    def __init__(self, fits: dict[str, DataflowFit],
+                 measurements: list[KernelMeasurement] | None = None):
+        self.fits = dict(fits)
+        self.measurements = list(measurements or [])
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def fit(cls, measurements: list[KernelMeasurement]) -> "CalibrationTable":
+        """Least-squares fit per dataflow over the direct-path measurements
+        (bit-serial rows are excluded from the fit — 16 plane matmuls per
+        block is a different arithmetic regime than the model's one-MAC-
+        per-cycle macro — but kept in ``measurements`` for the record)."""
+        direct = [m for m in measurements if not m.bit_serial]
+        assert direct, "no direct-path (bit_serial=False) measurements to fit"
+        fits = {}
+        for df in sorted({m.dataflow for m in direct}):
+            rows = [m for m in direct if m.dataflow == df]
+            fits[df] = _fit_one(df, [m.modeled_s for m in rows],
+                                [m.measured_s for m in rows])
+        return cls(fits, measurements)
+
+    # -- prediction -------------------------------------------------------
+
+    def _fit_for(self, dataflow: str) -> DataflowFit:
+        if dataflow in self.fits:
+            return self.fits[dataflow]
+        # identity fallback: an uncalibrated dataflow passes modeled time
+        # through unchanged rather than failing the whole evaluation
+        return DataflowFit(dataflow, 1.0, 0.0, float("nan"),
+                           float("nan"), float("nan"), 0)
+
+    def predict_seconds(self, dataflow: str, modeled_s) -> jnp.ndarray:
+        """Measured-frame seconds for a modeled-seconds value (array ok)."""
+        f = self._fit_for(dataflow)
+        return jnp.maximum(f.scale * jnp.asarray(modeled_s) + f.intercept,
+                           0.0)
+
+    def calibrated_latency(self, p: DesignPoint, gemms: list[Gemm],
+                           mem: MemoryConfig | None = LPDDR5) -> jnp.ndarray:
+        """Measured-frame latency of a GEMM workload on design point(s) p.
+
+        Computes the same modeled quantity the fits were built against
+        (shape-aware total cycles over the modeled clock) and applies the
+        per-dataflow affine map, selected elementwise so batched
+        populations with mixed dataflows evaluate in one call."""
+        t = workload_timing(p, gemms, mem, shape_aware=True)
+        modeled_s = t.total_cycles / macro_model.frequency(p)
+        ws, os_ = self._fit_for("ws"), self._fit_for("os")
+        scale = jnp.where(p.dataflow == WS, ws.scale, os_.scale)
+        intercept = jnp.where(p.dataflow == WS, ws.intercept, os_.intercept)
+        return jnp.maximum(scale * modeled_s + intercept, 0.0)
+
+    # -- reporting --------------------------------------------------------
+
+    @property
+    def aggregate_rel_err(self) -> float:
+        """Measurement-weighted mean relative fit error across dataflows."""
+        tot = sum(f.n for f in self.fits.values())
+        if tot == 0:
+            return float("nan")
+        return sum(f.mean_rel_err * f.n for f in self.fits.values()) / tot
+
+    def report(self) -> str:
+        """Per-shape + aggregate model-vs-measured error table (text)."""
+        lines = ["shape                    df  bs     measured_us  "
+                 "calibrated_us  rel_err"]
+        for m in self.measurements:
+            pred = float(self.predict_seconds(m.dataflow, m.modeled_s))
+            rel = abs(pred - m.measured_s) / max(m.measured_s, _EPS)
+            tag = f"{m.M}x{m.K}x{m.N}"
+            lines.append(f"{tag:<24} {m.dataflow:<3} {int(m.bit_serial):<5}"
+                         f"{m.measured_s * 1e6:>12.1f}"
+                         f"{pred * 1e6:>15.1f}{rel:>9.3f}")
+        for df, f in sorted(self.fits.items()):
+            lines.append(f"fit[{df}]: scale={f.scale:.3e} "
+                         f"intercept={f.intercept:.3e} R2={f.r2:.4f} "
+                         f"mean_rel_err={f.mean_rel_err:.3f} "
+                         f"max_rel_err={f.max_rel_err:.3f} n={f.n}")
+        lines.append(f"aggregate mean_rel_err={self.aggregate_rel_err:.3f}")
+        return "\n".join(lines)
+
+    # -- CSV round-trip ---------------------------------------------------
+
+    FIT_HEADER = ("dataflow", "scale", "intercept", "r2",
+                  "mean_rel_err", "max_rel_err", "n")
+
+    def to_csv(self, path: str | Path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with open(path, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(self.FIT_HEADER)
+            for df in sorted(self.fits):
+                fit = self.fits[df]
+                w.writerow([fit.dataflow, repr(fit.scale),
+                            repr(fit.intercept), repr(fit.r2),
+                            repr(fit.mean_rel_err), repr(fit.max_rel_err),
+                            fit.n])
+        return path
+
+    @classmethod
+    def from_csv(cls, path: str | Path) -> "CalibrationTable":
+        fits = {}
+        with open(path, newline="") as f:
+            for r in csv.DictReader(f):
+                fits[r["dataflow"]] = DataflowFit(
+                    dataflow=r["dataflow"], scale=float(r["scale"]),
+                    intercept=float(r["intercept"]), r2=float(r["r2"]),
+                    mean_rel_err=float(r["mean_rel_err"]),
+                    max_rel_err=float(r["max_rel_err"]), n=int(r["n"]))
+        assert fits, f"{path}: no calibration fits"
+        for fit in fits.values():
+            assert math.isfinite(fit.scale), fit
+        return cls(fits)

@@ -11,14 +11,30 @@ subarray/bank adder trees — and tests prove it bit-identical to the direct
 path, validating that the CIM dataflow computes the same GEMM the model
 expects.
 
+Accumulation is int32 END TO END: the OS path holds its running tile in an
+int32 VMEM scratch, the WS path round-trips int32 partial sums through the
+int32 output ref, and ``cim_gemm_int32`` *returns* int32. Any f32 in the
+chain would silently round |acc| > 2^24 (reachable from K ~ 1040 at full
+int8 range; every real model K >= 4096), so the f32 conversion happens only
+in the dequant epilogue (``ops.cim_matmul``), where it is a documented
+quantization effect rather than a GEMM accumulation bug.
+
+This kernel is also the repo's *measured* hardware: ``benchmarks/
+kernel_bench.py`` autotunes (bm, bn, bk) over the real model GEMM shapes,
+verifies every timed run bit-identical to ``ref.cim_gemm_ref``, and
+``core/calibrate.py`` fits the analytical timing model to those
+measurements — the fourth level of the fidelity chain (event sims ==
+closed forms == measured Pallas time, see ROADMAP "calibration budget").
+
 Paper-concept mapping inside the kernel:
   * OS dataflow   -> grid (m, n, k): the int32 accumulator tile stays
                      resident in VMEM scratch while K-blocks stream through
                      (output stationary).
   * WS dataflow   -> grid (n, k, m): the (bk x bn) weight block stays
-                     resident while M-blocks stream through it; partial
-                     sums round-trip through the output (the array-level
-                     reduction-to-core-buffer cost the paper models).
+                     resident while M-blocks stream through it; int32
+                     partial sums round-trip through the output (the
+                     array-level reduction-to-core-buffer cost the paper
+                     models).
   * compute-I/O overlap -> Pallas's implicit double-buffered HBM->VMEM
                      pipeline: the next weight block loads while the MXU
                      consumes the current one (OL=True in paper terms).
@@ -72,11 +88,15 @@ def _os_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, bit_serial: bool):
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(jnp.float32)
+        o_ref[...] = acc_ref[...]
 
 
 def _ws_kernel(x_ref, w_ref, o_ref, *, bit_serial: bool):
-    part = _partial_product(x_ref[...], w_ref[...], bit_serial).astype(jnp.float32)
+    """M streams through the resident (bk x bn) weight block; the int32
+    partial sums round-trip through the int32 output ref across K-blocks
+    (the array-level reduction-to-core-buffer path the paper models) —
+    integer adds, so arbitrarily deep K accumulates exactly."""
+    part = _partial_product(x_ref[...], w_ref[...], bit_serial)
 
     @pl.when(pl.program_id(1) == 0)
     def _first():
@@ -98,7 +118,8 @@ def cim_gemm_int32(
     bit_serial: bool = False,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Integer GEMM accumulated in int32, returned as f32 (pre-dequant).
+    """Integer GEMM accumulated AND returned in int32 (pre-dequant) — exact
+    for any K (the old f32 return rounded |acc| > 2^24; see module doc).
     Shapes must be multiples of the block sizes (ops.py pads)."""
     M, K = x_q.shape
     K2, N = w_q.shape
@@ -116,7 +137,7 @@ def cim_gemm_int32(
                 pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
             ],
             out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
-            out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+            out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
             interpret=interpret,
         )(x_q, w_q)
@@ -131,6 +152,6 @@ def cim_gemm_int32(
             pl.BlockSpec((bk, bn), lambda n, k, m: (k, n)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda n, k, m: (m, n)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
         interpret=interpret,
     )(x_q, w_q)

@@ -3,6 +3,18 @@
 `interpret` defaults to True because this container is CPU-only; on a real
 TPU deployment the launcher flips it to False and the same call sites lower
 to Mosaic.
+
+These wrappers are the repo's executable hardware — the fourth level of
+the fidelity chain (closed forms == event sims == *measured Pallas time*):
+``benchmarks/kernel_bench.py`` times ``cim_gemm_int32`` through the same
+padding path over the real model GEMM shapes, and ``core/calibrate.py``
+fits the analytical timing model to those measurements.
+
+Numerics contract: the GEMM accumulates and returns int32 (exact for any
+K); f32 appears only in the dequant epilogue here, where the int32 -> f32
+conversion rounds |acc| > 2^24 by <= 0.5 ulp of the accumulator — a
+documented quantization effect bounded far below the int8 quantization
+noise, not an accumulation error (see ``cim_matmul``).
 """
 from __future__ import annotations
 
@@ -55,7 +67,14 @@ def cim_matmul(
     interpret: bool = True,
     out_dtype=jnp.bfloat16,
 ) -> jnp.ndarray:
-    """W8A8 matmul through the CIM-GEMM kernel with dequant epilogue."""
+    """W8A8 matmul through the CIM-GEMM kernel with dequant epilogue.
+
+    The kernel accumulates and returns exact int32; the f32 ceiling lives
+    HERE: the int32 -> f32 conversion below rounds |acc| > 2^24 to the
+    nearest representable f32 (<= 0.5 accumulator ulp, relative error
+    <= 2^-24) before the scale multiply — identical to what
+    ``ref.w8a8_matmul_ref`` does, and negligible against the int8
+    quantization error the scales already carry."""
     M, K = x.shape
     N = w_q.shape[1]
     x_q, x_scale = quantize_a8(x)
@@ -63,24 +82,33 @@ def cim_matmul(
     w_p = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
     acc = cim_gemm_int32(x_q, w_p, bm=bm, bn=bn, bk=bk, dataflow=dataflow,
                          bit_serial=bit_serial, interpret=interpret)
-    acc = acc[:M, :N]
+    acc = acc[:M, :N].astype(jnp.float32)
     return (acc * x_scale * w_scale[None, :]).astype(out_dtype)
 
 
-@partial(jax.jit, static_argnames=("causal", "cap", "window", "bq", "bkv", "interpret"))
+@partial(jax.jit, static_argnames=("causal", "cap", "window", "bq", "bkv",
+                                   "q_offset", "interpret"))
 def mha_flash(
-    q: jnp.ndarray,             # (B, S, H, D)
-    k: jnp.ndarray,             # (B, S, Hkv, D)
-    v: jnp.ndarray,             # (B, S, Hkv, Dv)
+    q: jnp.ndarray,             # (B, Sq, H, D)
+    k: jnp.ndarray,             # (B, Skv, Hkv, D)
+    v: jnp.ndarray,             # (B, Skv, Hkv, Dv)
     *,
     causal: bool = True,
     cap: float = 0.0,
     window: int = 0,
     bq: int = 128, bkv: int = 128,
+    q_offset: int | None = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """GQA-aware flash attention: kv heads repeated to q heads, flattened to
-    (B*H, S, D) for the kernel."""
+    (B*H, S, D) for the kernel.
+
+    ``Sq != Skv`` is first-class: with the default ``q_offset=None`` the
+    queries are the LAST Sq positions of the Skv-long context (KV-cache
+    decode, speculative windows, the final prefill chunk — full prefill is
+    the Sq == Skv special case at offset 0). A mid-context chunk passes
+    its absolute start position explicitly. The offset is computed from
+    the *unpadded* lengths, so block padding never shifts the diagonal."""
     B, Sq, H, D = q.shape
     Hkv = k.shape[2]
     rep = H // Hkv
@@ -93,9 +121,11 @@ def mha_flash(
     qp = _pad_to(qf, bq, 1)
     kp = _pad_to(kf, bkv, 1)
     vp = _pad_to(vf, bkv, 1)
+    if q_offset is None:
+        q_offset = kf.shape[1] - Sq
     o = flash_attention(qp, kp, vp, scale=scale, causal=causal, cap=cap,
                         window=window, bq=bq, bkv=bkv, kv_len=kf.shape[1],
-                        interpret=interpret)
+                        q_offset=int(q_offset), interpret=interpret)
     o = o[:, :Sq]
     return o.reshape(B, H, Sq, -1).transpose(0, 2, 1, 3)
 

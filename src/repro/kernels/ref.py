@@ -6,8 +6,11 @@ import jax.numpy as jnp
 
 
 def cim_gemm_ref(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
-    """int8 x int8 -> int32 GEMM, as f32."""
-    return jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32)).astype(jnp.float32)
+    """int8 x int8 -> int32 GEMM, kept in int32: exact for any K. (The old
+    f32 return rounded |acc| > 2^24 — it mapped 33032065 -> 33032064 — so
+    large-K bit-identity checks against it were vacuous; the f32 conversion
+    now lives only in the dequant epilogue, see ``ops.cim_matmul``.)"""
+    return jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
 
 
 def w8a8_matmul_ref(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
@@ -20,13 +23,21 @@ def w8a8_matmul_ref(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
     return (acc * x_scale * w_scale[None, :]).astype(out_dtype)
 
 
-def flash_attention_ref(q, k, v, *, scale, causal=True, cap=0.0, window=0):
-    """(BH, Sq, d) x (BH, Skv, d) -> (BH, Sq, dv), f32 softmax."""
+def flash_attention_ref(q, k, v, *, scale, causal=True, cap=0.0, window=0,
+                        q_offset=None):
+    """(BH, Sq, d) x (BH, Skv, d) -> (BH, Sq, dv), f32 softmax.
+
+    ``q_offset`` places query row 0 at that absolute KV position for the
+    causal/window masks; ``None`` defaults to ``Skv - Sq`` (queries are the
+    last Sq context positions — exact full-attention semantics for
+    KV-cache decode and the final prefill chunk), matching the kernel."""
     s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
     if cap > 0:
         s = cap * jnp.tanh(s / cap)
     Sq, Skv = q.shape[1], k.shape[1]
-    q_pos = jnp.arange(Sq)[:, None]
+    if q_offset is None:
+        q_offset = Skv - Sq
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
     k_pos = jnp.arange(Skv)[None, :]
     mask = jnp.ones((Sq, Skv), bool)
     if causal:

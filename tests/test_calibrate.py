@@ -1,0 +1,164 @@
+"""Measured-kernel calibration layer: fit properties, CSV round-trip, and
+the calibrated-latency consumer path (core/calibrate.py)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import design_space as ds
+from repro.core.calibrate import (CalibrationTable, DataflowFit,
+                                  KernelMeasurement, analog_point,
+                                  modeled_kernel_seconds)
+from repro.core.dataflow import Gemm
+from repro.core.design_space import make_point
+from repro.core.memory import LPDDR5
+
+
+def _meas(df, modeled, measured, bit_serial=False, **kw):
+    base = dict(M=128, K=64, N=64, dataflow=df, bit_serial=bit_serial,
+                bm=32, bn=64, bk=64, mismatches=0)
+    base.update(kw)
+    return KernelMeasurement(measured_s=measured, modeled_s=modeled, **base)
+
+
+def test_fit_exact_on_synthetic_linear_data():
+    """When measured time IS an affine function of modeled time, the fit
+    recovers it exactly: R^2 == 1 and zero relative error."""
+    rows = [_meas("os", m, 3.5 * m + 2e-6) for m in (1e-6, 2e-6, 5e-6, 9e-6)]
+    rows += [_meas("ws", m, 7.0 * m) for m in (1e-6, 4e-6, 8e-6)]
+    t = CalibrationTable.fit(rows)
+    assert t.fits["os"].scale == pytest.approx(3.5, rel=1e-6)
+    assert t.fits["os"].intercept == pytest.approx(2e-6, rel=1e-6)
+    assert t.fits["ws"].scale == pytest.approx(7.0, rel=1e-6)
+    for f in t.fits.values():
+        assert f.r2 == pytest.approx(1.0, abs=1e-9)
+        assert f.mean_rel_err == pytest.approx(0.0, abs=1e-9)
+        assert f.max_rel_err == pytest.approx(0.0, abs=1e-9)
+    assert t.aggregate_rel_err == pytest.approx(0.0, abs=1e-9)
+
+
+@given(
+    scale=st.floats(10.0, 1e4),
+    noise=st.floats(0.0, 0.3),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=15, deadline=None)
+def test_fit_error_properties(scale, noise, seed):
+    """Fit errors are non-negative and finite for any noisy measurement
+    set; R^2 <= 1 always; mean <= max relative error."""
+    rng = np.random.default_rng(seed)
+    modeled = rng.uniform(1e-6, 1e-4, 6)
+    measured = scale * modeled * (1.0 + noise * rng.uniform(-1, 1, 6))
+    rows = [_meas("os", float(m), float(t))
+            for m, t in zip(modeled, np.abs(measured))]
+    f = CalibrationTable.fit(rows).fits["os"]
+    assert f.n == 6
+    assert math.isfinite(f.scale) and math.isfinite(f.intercept)
+    assert f.r2 <= 1.0 + 1e-9
+    assert 0.0 <= f.mean_rel_err <= f.max_rel_err
+    assert math.isfinite(f.max_rel_err)
+
+
+def test_fit_single_point_is_pure_ratio():
+    f = CalibrationTable.fit([_meas("ws", 2e-6, 1e-4)]).fits["ws"]
+    assert f.scale == pytest.approx(50.0)
+    assert f.intercept == 0.0
+    assert f.n == 1
+
+
+def test_fit_excludes_bit_serial_rows():
+    """Bit-serial rows (a different arithmetic regime) stay recorded but
+    never steer the fit."""
+    rows = [_meas("os", m, 2.0 * m) for m in (1e-6, 2e-6, 4e-6)]
+    rows.append(_meas("os", 1e-6, 1e-2, bit_serial=True))  # wild outlier
+    t = CalibrationTable.fit(rows)
+    assert t.fits["os"].scale == pytest.approx(2.0, rel=1e-6)
+    assert t.fits["os"].n == 3
+    assert len(t.measurements) == 4
+
+
+def test_csv_round_trip(tmp_path):
+    rows = [_meas("os", m, 3.0 * m + 1e-6) for m in (1e-6, 3e-6, 6e-6)]
+    rows += [_meas("ws", m, 9.0 * m) for m in (2e-6, 5e-6)]
+    t = CalibrationTable.fit(rows)
+    path = t.to_csv(tmp_path / "fits.csv")
+    back = CalibrationTable.from_csv(path)
+    assert set(back.fits) == {"os", "ws"}
+    for df in ("os", "ws"):
+        a, b = t.fits[df], back.fits[df]
+        assert a.scale == b.scale and a.intercept == b.intercept
+        assert a.r2 == b.r2 and a.n == b.n
+        assert a.mean_rel_err == b.mean_rel_err
+        assert a.max_rel_err == b.max_rel_err
+    # and predictions agree exactly after the round trip
+    for m in (1e-6, 1e-5):
+        assert float(back.predict_seconds("os", m)) == \
+            float(t.predict_seconds("os", m))
+
+
+def test_predict_is_nonnegative():
+    """A negative intercept must never yield negative latency."""
+    t = CalibrationTable({"os": DataflowFit("os", 2.0, -1e-3, 1.0, 0.0,
+                                            0.0, 2)})
+    assert float(t.predict_seconds("os", 1e-9)) == 0.0
+    assert float(t.predict_seconds("os", 1.0)) == pytest.approx(2.0 - 1e-3)
+
+
+def test_unknown_dataflow_falls_back_to_identity():
+    t = CalibrationTable.fit([_meas("os", 1e-6, 5e-6)])
+    assert float(t.predict_seconds("ws", 7e-6)) == pytest.approx(7e-6)
+
+
+def test_analog_point_mapping():
+    p = analog_point(bm=32, bn=64, bk=128, dataflow="ws")
+    assert float(p.TL) == 32 and float(p.PC) == 64 and float(p.AL) == 128
+    assert float(p.dataflow) == ds.WS
+    assert float(analog_point(32, 64, 128, "os").dataflow) == ds.OS
+
+
+def test_modeled_seconds_positive_and_shape_monotone():
+    g_small = Gemm(8.0, 64.0, 64.0)
+    g_big = Gemm(128.0, 64.0, 256.0)
+    s_small = modeled_kernel_seconds(g_small, 32, 64, 64, "os")
+    s_big = modeled_kernel_seconds(g_big, 32, 64, 64, "os")
+    assert 0.0 < s_small < s_big
+
+
+def test_calibrated_latency_matches_scalar_prediction():
+    """calibrated_latency on a batched mixed-dataflow population applies
+    each point's own dataflow fit — elementwise identical to predicting
+    from that point's modeled seconds directly."""
+    rows = [_meas("os", m, 100.0 * m + 1e-6) for m in (1e-6, 2e-6, 4e-6)]
+    rows += [_meas("ws", m, 250.0 * m) for m in (1e-6, 3e-6)]
+    t = CalibrationTable.fit(rows)
+    gemms = [Gemm(128.0, 64.0, 128.0), Gemm(8.0, 64.0, 256.0)]
+    pts = [make_point(AL=64, PC=64, TL=32, dataflow=ds.OS),
+           make_point(AL=128, PC=128, TL=128, dataflow=ds.WS)]
+    batched = ds.stack_points(pts)
+    lat = t.calibrated_latency(batched, gemms, mem=LPDDR5)
+    assert lat.shape == (2,)
+    from repro.core import macro_model
+    from repro.core.dataflow import workload_timing
+    for i, (p, df) in enumerate(zip(pts, ("os", "ws"))):
+        modeled = float(workload_timing(p, gemms, LPDDR5,
+                                        shape_aware=True).total_cycles
+                        / macro_model.frequency(p))
+        want = float(t.predict_seconds(df, modeled))
+        assert float(lat[i]) == pytest.approx(want, rel=1e-6)
+        assert float(lat[i]) > 0.0
+
+
+def test_checked_in_calibration_csv_loads():
+    """The committed fit artifact must stay loadable and finite."""
+    from pathlib import Path
+    path = (Path(__file__).resolve().parent.parent
+            / "results" / "bench" / "kernel_calibration.csv")
+    t = CalibrationTable.from_csv(path)
+    assert set(t.fits) == {"os", "ws"}
+    for f in t.fits.values():
+        assert math.isfinite(f.scale) and f.scale > 0.0
+        assert math.isfinite(f.r2) and f.n >= 2
+    lat = t.calibrated_latency(make_point(dataflow=ds.OS),
+                               [Gemm(128.0, 64.0, 128.0)])
+    assert math.isfinite(float(lat)) and float(lat) >= 0.0

@@ -150,6 +150,60 @@ def test_table3_ideal_columns_reeval(table3_rows):
             assert _close(got[k], want[k]), (model, seq, k, got[k], want[k])
 
 
+def test_kernel_cycles_csv_schema_and_invariants():
+    """Pin the measured-kernel bench artifact (results/bench/
+    kernel_cycles.csv): the schema and its machine-invariant content.
+    Timings are NOT regenerated (they move with the host and the bench
+    costs minutes) — the pinned facts are the header, full dataflow x
+    bit_serial coverage of every shape, zero mismatches, block configs
+    from the advertised grid, and finite positive measured/modeled/fit
+    columns. The calibration fit file must round-trip consistently."""
+    import csv as _csv
+
+    from benchmarks.kernel_bench import BK_GRID, BM_GRID, BN_GRID
+    from repro.core.calibrate import CalibrationTable
+
+    bench_dir = RESULTS.parent / "bench"
+    with open(bench_dir / "kernel_cycles.csv", newline="") as f:
+        rd = _csv.DictReader(f)
+        rows = list(rd)
+        header = rd.fieldnames
+    assert list(header) == [
+        "source", "M", "K", "N", "dataflow", "bit_serial", "bm", "bn", "bk",
+        "best_us", "modeled_us", "calibrated_us", "rel_err", "fit_r2",
+        "mismatches"]
+    assert rows
+    cells = set()
+    for r in rows:
+        key = (r["M"], r["K"], r["N"], r["dataflow"], r["bit_serial"])
+        assert key not in cells, f"duplicate cell {key}"
+        cells.add(key)
+        assert r["dataflow"] in ("os", "ws")
+        assert r["bit_serial"] in ("0", "1")
+        assert int(r["mismatches"]) == 0
+        assert int(r["bm"]) in BM_GRID
+        assert int(r["bn"]) in BN_GRID
+        assert int(r["bk"]) in BK_GRID
+        for col in ("best_us", "modeled_us", "calibrated_us"):
+            v = float(r[col])
+            assert math.isfinite(v) and v >= 0.0, (col, r)
+        assert math.isfinite(float(r["rel_err"]))
+        assert math.isfinite(float(r["fit_r2"]))
+    # every (shape) appears for both dataflows, bit-serial on and off
+    shapes = {(r["M"], r["K"], r["N"]) for r in rows}
+    for s in shapes:
+        for df in ("os", "ws"):
+            for bs in ("0", "1"):
+                assert (*s, df, bs) in cells, (s, df, bs)
+    # the fit artifact loads and agrees with the per-row fit_r2 column
+    # (stored at 6 decimals, so compare absolutely at that precision)
+    table = CalibrationTable.from_csv(bench_dir / "kernel_calibration.csv")
+    assert set(table.fits) == {"os", "ws"}
+    for r in rows:
+        assert abs(float(r["fit_r2"]) - table.fits[r["dataflow"]].r2) <= 1e-6, \
+            (r["dataflow"], r["fit_r2"], table.fits[r["dataflow"]].r2)
+
+
 def test_table3_memory_columns_bounded_by_depth_extremes(table3_rows):
     """The mem_* columns were produced at the searched (unrecorded) PF:
     depth monotonicity bounds them between the PF=inf and PF=1 evaluations

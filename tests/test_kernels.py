@@ -48,6 +48,26 @@ def test_cim_gemm_ws_equals_os():
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.parametrize("dataflow", ["os", "ws"])
+@pytest.mark.parametrize("bit_serial", [False, True])
+def test_cim_gemm_large_k_adversarial_exact(dataflow, bit_serial):
+    """Deep-K accumulation at adversarial magnitudes: values in [100, 128)
+    never cancel, so K = 2048 drives |acc| well past 2^24 (~26M vs the
+    16.7M f32 integer ceiling). The old f32 accumulation/return rounded
+    thousands of entries here; int32 end-to-end must match the int64
+    oracle bit-for-bit on every element."""
+    kx, kw = jax.random.split(jax.random.key(9))
+    x = jax.random.randint(kx, (128, 2048), 100, 128, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(kw, (2048, 128), 100, 128, jnp.int32).astype(jnp.int8)
+    out = cim_gemm_int32(x, w, dataflow=dataflow, bit_serial=bit_serial)
+    assert out.dtype == jnp.int32
+    oracle = np.asarray(x, np.int64) @ np.asarray(w, np.int64)
+    assert oracle.max() > 2**24  # the regime the old f32 path rounded
+    np.testing.assert_array_equal(np.asarray(out, np.int64), oracle)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.cim_gemm_ref(x, w)))
+
+
 @given(
     m=st.sampled_from([64, 128, 200]),
     k=st.sampled_from([64, 128, 300]),
@@ -138,6 +158,72 @@ def test_mha_flash_gqa_property(sq, skv, h, hkv, dtype):
     tol = 3e-2 if dtype == "bfloat16" else 3e-4
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(oracle, np.float32), rtol=tol, atol=tol)
+
+
+def test_mha_flash_decode_matches_full_context():
+    """KV-cache decode (Sq=1 against Skv=256): the causal mask must treat
+    the single query as context position 255, not position 0 (which
+    blinded it to all but the first KV block pre-fix, ~3.0 max abs err)."""
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 256, 2, 64), jnp.float32)
+    full = mha_flash(q, k, v, causal=True)
+    dec = mha_flash(q[:, -1:], k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mha_flash_decode_sliding_window():
+    """Windowed decode: the window anchors at the query's absolute
+    position, so the decode step attends to the LAST 64 positions."""
+    ks = jax.random.split(jax.random.key(12), 3)
+    q = jax.random.normal(ks[0], (2, 256, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 256, 2, 64), jnp.float32)
+    full = mha_flash(q, k, v, causal=True, window=64)
+    dec = mha_flash(q[:, -1:], k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("start,stop", [(128, 256), (64, 192), (0, 128)])
+def test_mha_flash_chunked_prefill_offsets(start, stop):
+    """Chunked prefill: every chunk of queries against its prefix context
+    must agree with the same rows of the one-shot full pass. The final
+    chunk uses the default offset (queries are the last Sq positions); a
+    mid-context chunk passes its absolute start explicitly."""
+    ks = jax.random.split(jax.random.key(13), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    full = mha_flash(q, k, v, causal=True)
+    kw = {} if stop == k.shape[1] or start == 0 else {"q_offset": start}
+    chunk = mha_flash(q[:, start:stop], k[:, :stop], v[:, :stop],
+                      causal=True, **kw)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(full[:, start:stop]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_offset_matches_offset_aware_ref():
+    """Sq != Skv at the kernel level, non-causal AND causal, against the
+    offset-aware reference (which defaults to the same last-Sq-positions
+    convention)."""
+    ks = jax.random.split(jax.random.key(14), 3)
+    q = jax.random.normal(ks[0], (2, 128, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 384, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 384, 64), jnp.float32)
+    for causal in (True, False):
+        out = flash_attention(q, k, v, scale=0.125, causal=causal)
+        oracle = ref.flash_attention_ref(q, k, v, scale=0.125, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                                   rtol=2e-4, atol=2e-4)
+    # explicit mid-context offset, kernel vs ref
+    out = flash_attention(q, k, v, scale=0.125, causal=True, q_offset=100)
+    oracle = ref.flash_attention_ref(q, k, v, scale=0.125, causal=True,
+                                     q_offset=100)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=2e-4, atol=2e-4)
 
 
 def test_flash_padding_does_not_leak():
