@@ -23,6 +23,7 @@ def main() -> None:
     from .roofline import roofline_table
     from .serve_throughput import serve_throughput
     from .sim_throughput import sim_throughput
+    from .sparsity_sweep import sparsity_sweep
 
     benches = dict(ALL)
     benches["table3_llm_case_study"] = lambda: table3_llm_case_study(args.budget)
@@ -32,6 +33,7 @@ def main() -> None:
     benches["serve_throughput"] = serve_throughput
     benches["mapping_gap"] = mapping_gap
     benches["kernel_bench"] = kernel_bench
+    benches["sparsity_sweep"] = sparsity_sweep
 
     print("name,us_per_call,derived")
     failed = []

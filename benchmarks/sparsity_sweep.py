@@ -1,0 +1,112 @@
+"""Density x dataflow sensitivity of the sparse workload axis.
+
+Sweeps structured-sparsity configs (weight N:M x activation density) over
+all 8 dataflow variants on one fixed design running the llama3-8b prefill
+workload under the smoke-class memory model, scoring each cell with the
+scheduled shape-aware evaluator (``ppa.evaluate_workload(schedule=True,
+shape_aware=True, sparsity=...)`` — the full sparse stack: compressed-K
+tiling, sparse per-GEMM F, per-GEMM depths).
+
+Emitted per cell: scheduled latency, utilization, energy, effective MACs,
+and the speedup over that dataflow's dense baseline. The dense row of
+every dataflow is additionally recomputed through the *gated* sparse path
+(``SparsityConfig(1, 1, 1.0)``) and compared field-by-field against the
+plain dense evaluation — any mismatch hard-fails the bench before the CSV
+is written (the tentpole's bit-identity contract, enforced on the real
+workload, not just unit shapes). The CSV is machine-invariant (closed
+forms only), so tests/test_golden_results.py regenerates it in full and
+``check_perf_regression.py --sparsity-current`` gates the contracts:
+dense bit-identity, MAC conservation vs N/M * act_density, monotone
+speedups, finite columns.
+"""
+from __future__ import annotations
+
+from .common import timed, write_csv
+
+#: (weight_n, weight_m, act_density) grid: the dense identity, three
+#: hardware-plausible N:M weight patterns, and two activation densities
+#: riding on 2:4 weights.
+DENSITY_GRID = (
+    (1, 1, 1.0),
+    (4, 8, 1.0),
+    (2, 4, 1.0),
+    (1, 4, 1.0),
+    (2, 4, 0.5),
+    (1, 4, 0.5),
+)
+
+MODEL = "llama3-8b"
+BATCH, SEQ = 1, 1024
+
+HEADER = ["dataflow", "weight_n", "weight_m", "act_density", "latency_ms",
+          "utilization", "energy_mj", "macs", "dense_macs",
+          "speedup_vs_dense", "mismatches"]
+
+
+def _design(dfn):
+    from repro.core.design_space import make_point
+
+    return make_point(LSL=8, AL=64, PC=4, PL=4, BC=2, BR=8, TL=64,
+                      OL=dfn.ol, dataflow=dfn.dataflow,
+                      interconnect=dfn.interconnect, PF=8.0)
+
+
+def sparsity_sweep_rows() -> list[list]:
+    """The CSV rows, split from emission so the golden test regenerates
+    them byte-for-byte comparable (deterministic closed forms)."""
+    import jax
+
+    from repro.configs import PAPER_MODELS
+    from repro.core.dse import ALL_DATAFLOWS, SMOKE_MEM
+    from repro.core.ppa import evaluate_workload
+    from repro.core.sparsity import SparsityConfig, effective_macs
+    from repro.core.workload import dedupe_gemms, model_gemms
+
+    gemms = dedupe_gemms(model_gemms(PAPER_MODELS[MODEL], mode="prefill",
+                                     batch=BATCH, seq=SEQ))
+    dense_macs = sum(g.macs for g in gemms)
+    rows = []
+    for dfn in ALL_DATAFLOWS:
+        p = _design(dfn)
+
+        def score(sparsity=None):
+            q = evaluate_workload(p, gemms, mem=SMOKE_MEM, schedule=True,
+                                  shape_aware=True, sparsity=sparsity)
+            return jax.tree.map(float, q)
+
+        dense_q = score()
+        # gated-path bit-identity: density 1.0 through the sparse argument
+        # must reproduce the plain dense evaluation field for field
+        gated_q = score(SparsityConfig(1, 1, 1.0))
+        mismatches = sum(a != b for a, b in zip(dense_q, gated_q))
+        if mismatches:
+            raise AssertionError(
+                f"dense-path bit-identity violated on {dfn.label}: "
+                f"{mismatches} QoR fields differ between sparsity=None and "
+                f"SparsityConfig(1, 1, 1.0)")
+        for wn, wm, ad in DENSITY_GRID:
+            sp = SparsityConfig(wn, wm, ad)
+            q = dense_q if sp.is_dense else score(sp)
+            rows.append([
+                dfn.label, wn, wm, ad,
+                q.latency_s * 1e3,
+                q.utilization,
+                q.energy_j * 1e3,
+                effective_macs(gemms, sp),
+                dense_macs,
+                dense_q.latency_s / q.latency_s,
+                mismatches if sp.is_dense else 0,
+            ])
+    return rows
+
+
+def sparsity_sweep():
+    rows, us = timed(sparsity_sweep_rows, repeat=1)
+    write_csv("bench/sparsity_sweep.csv", HEADER, rows)
+    dense = [r for r in rows if r[1] == r[2] and r[3] == 1.0]
+    sparse = [r for r in rows if not (r[1] == r[2] and r[3] == 1.0)]
+    best = max(sparse, key=lambda r: r[9])
+    return us, (f"{len(rows)} cells; dense mismatches="
+                f"{sum(r[10] for r in dense)}; best speedup "
+                f"{best[9]:.2f}x ({best[0]} {best[1]}:{best[2]} "
+                f"act={best[3]})")

@@ -53,13 +53,24 @@ fit columns must be finite, while the fit R^2 and model-vs-measured
 relative error are printed and tracked only (interpret-mode timings move
 with the host).
 
+``--sparsity-current`` gates the sparsity-sweep bench CSV
+(``benchmarks.sparsity_sweep``): the dense rows' gated-path mismatch
+count is the machine-invariant signal (density 1.0 through the sparse
+argument must be bit-identical to the plain dense evaluation) and must
+be 0 with speedup exactly 1, effective MACs must conserve
+``dense_macs * N/M * act_density``, sparse speedups must be >= 1
+(compressing work can't slow the closed forms down), and every numeric
+column must be finite, while the sparse speedup magnitudes are printed
+and tracked only (they move with the density grid and workload).
+
     python scripts/check_perf_regression.py \
         --baseline /tmp/sim_throughput.baseline.csv \
         --current results/bench/sim_throughput.csv [--min-ratio 0.5] \
         [--dse-current results/bench/dse_throughput.csv] \
         [--serve-current results/bench/serve_throughput.csv] \
         [--mapping-current results/bench/mapping_gap.csv] \
-        [--kernel-current results/bench/kernel_cycles.csv]
+        [--kernel-current results/bench/kernel_cycles.csv] \
+        [--sparsity-current results/bench/sparsity_sweep.csv]
 """
 from __future__ import annotations
 
@@ -210,6 +221,86 @@ def check_kernel_consistency(path: Path) -> bool:
     return not bad
 
 
+def check_sparsity_consistency(path: Path) -> bool:
+    """Gate the sparsity-sweep bench CSV (``benchmarks.sparsity_sweep``)
+    on its machine-invariant contracts: dense rows must report 0
+    dense-vs-gated-sparse QoR mismatches and a speedup of exactly 1.0
+    (bit-identity of the density-1.0 path), every row's effective MACs
+    must conserve ``dense_macs * N/M * act_density`` (python-float
+    arithmetic — checked tight), sparse speedups must be >= 1 (a
+    compressed workload can never run slower on the same design), and
+    every numeric column must be finite. The speedup magnitudes
+    themselves are density/dataflow physics, printed and tracked only."""
+    import math
+
+    # pinned coverage contract (self-contained: this gate runs without
+    # PYTHONPATH=src): all 8 dataflow variants x the bench's density grid
+    labels = [f"{df}-{ic}-{ol}" for df in ("WS", "OS")
+              for ic in ("Broadcast", "Systolic") for ol in ("NOL", "OL")]
+    density_grid = ((1, 1, 1.0), (4, 8, 1.0), (2, 4, 1.0), (1, 4, 1.0),
+                    (2, 4, 0.5), (1, 4, 0.5))
+
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    if not rows:
+        print(f"FAIL: {path}: empty sparsity bench CSV")
+        return False
+    bad = False
+    seen = {(r["dataflow"], r["weight_n"], r["weight_m"], r["act_density"])
+            for r in rows}
+    for label in labels:
+        for wn, wm, ad in density_grid:
+            if (label, str(wn), str(wm), str(float(ad))) not in seen:
+                print(f"FAIL: sparsity_sweep lacks cell "
+                      f"{label} {wn}:{wm} act={ad}")
+                bad = True
+    for r in rows:
+        cell = f"{r['dataflow']} {r['weight_n']}:{r['weight_m']}" \
+               f" act={r['act_density']}"
+        for col in ("latency_ms", "utilization", "energy_mj", "macs",
+                    "dense_macs", "speedup_vs_dense"):
+            if not math.isfinite(float(r[col])):
+                print(f"FAIL: sparsity_sweep {cell} has non-finite "
+                      f"{col}={r[col]}")
+                bad = True
+                continue
+        dense = (r["weight_n"] == r["weight_m"]
+                 and float(r["act_density"]) == 1.0)
+        if dense:
+            if int(float(r["mismatches"])) != 0:
+                print(f"FAIL: sparsity_sweep {cell} reports "
+                      f"{r['mismatches']} dense-vs-gated-sparse QoR "
+                      f"mismatches (density-1.0 bit-identity broken)")
+                bad = True
+            if float(r["speedup_vs_dense"]) != 1.0:
+                print(f"FAIL: sparsity_sweep {cell} dense speedup "
+                      f"{r['speedup_vs_dense']} != 1.0")
+                bad = True
+        elif float(r["speedup_vs_dense"]) < 1.0 - 1e-9:
+            print(f"FAIL: sparsity_sweep {cell} sparse speedup "
+                  f"{r['speedup_vs_dense']} < 1 (compressed workload ran "
+                  f"slower than dense on the same design)")
+            bad = True
+        want = (float(r["dense_macs"]) * float(r["weight_n"])
+                / float(r["weight_m"]) * float(r["act_density"]))
+        got = float(r["macs"])
+        if abs(got - want) > 1e-2 * max(want, 1.0):
+            print(f"FAIL: sparsity_sweep {cell} effective MACs {got} do "
+                  f"not conserve dense*N/M*act_density={want}")
+            bad = True
+    if not bad:
+        best = max((r for r in rows
+                    if not (r["weight_n"] == r["weight_m"]
+                            and float(r["act_density"]) == 1.0)),
+                   key=lambda r: float(r["speedup_vs_dense"]))
+        print(f"OK: sparsity sweep dense path bit-identical and MACs "
+              f"conserved on {len(rows)} cells; best sparse speedup "
+              f"{float(best['speedup_vs_dense']):.2f}x ({best['dataflow']} "
+              f"{best['weight_n']}:{best['weight_m']} "
+              f"act={best['act_density']}) (tracked, not enforced)")
+    return not bad
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", type=Path)
@@ -234,6 +325,11 @@ def main() -> int:
                     help="kernel_bench CSV to gate for kernel-vs-ref "
                          "bit-identity (mismatches must be 0) and finite "
                          "calibration fits (R2/err tracked, not enforced)")
+    ap.add_argument("--sparsity-current", type=Path,
+                    help="sparsity_sweep bench CSV to gate for density-1.0 "
+                         "bit-identity (mismatches must be 0, dense speedup "
+                         "exactly 1), MAC conservation, monotone sparse "
+                         "speedups, and finite columns")
     args = ap.parse_args()
 
     aux_ok = True
@@ -245,13 +341,16 @@ def main() -> int:
         aux_ok &= check_mapping_consistency(args.mapping_current)
     if args.kernel_current is not None:
         aux_ok &= check_kernel_consistency(args.kernel_current)
+    if args.sparsity_current is not None:
+        aux_ok &= check_sparsity_consistency(args.sparsity_current)
     if args.baseline is None or args.current is None:
         if (args.dse_current is None and args.serve_current is None
                 and args.mapping_current is None
-                and args.kernel_current is None):
+                and args.kernel_current is None
+                and args.sparsity_current is None):
             ap.error("--baseline/--current (and/or --dse-current/"
-                     "--serve-current/--mapping-current/--kernel-current) "
-                     "required")
+                     "--serve-current/--mapping-current/--kernel-current/"
+                     "--sparsity-current) required")
         return 0 if aux_ok else 1
 
     base = read_points_per_s(args.baseline)

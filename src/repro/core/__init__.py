@@ -1,7 +1,7 @@
 """AccelCIM core: the paper's dataflow design space, evaluators, and DSE."""
 from . import (bayesopt, calibrate, cycle_sim, cycle_sim_jax, dataflow,
                design_space, dse, macro_model, mapper, mapping, memory,
-               pareto, ppa, schedule, workload)
+               pareto, ppa, schedule, sparsity, workload)
 from .calibrate import (CalibrationTable, DataflowFit, KernelMeasurement,
                         analog_point, modeled_kernel_seconds)
 from .cycle_sim import SimResult
@@ -15,7 +15,8 @@ from .design_space import (BROADCAST, OS, SYSTOLIC, WS, DesignPoint,
                            sample_random_sharded)
 from .dse import (ALL_DATAFLOWS, DataflowName, dataflow_pareto_sweep,
                   fidelity_sweep, joint_fidelity_sweep, optimize_for_model,
-                  population_valid, scheduled_fidelity_sweep)
+                  population_valid, scheduled_fidelity_sweep,
+                  sparse_fidelity_sweep)
 from .mapper import (EngineQoR, evaluate_model, evaluate_model_serving,
                      serving_objective, tile_gemms_for_memory,
                      tile_splits_for_memory)
@@ -27,12 +28,14 @@ from .pareto import PARETO_BLOCK, pareto_front, pareto_mask, pareto_mask_blocked
 from .ppa import (ArrayPPA, ServingQoR, evaluate_peak, evaluate_serving,
                   evaluate_workload, qor_objective, serving_latency_samples)
 from .schedule import Schedule, schedule_gemms, scheduled_workload_timing
-from .workload import TraceArrays, trace_phase_gemms
+from .sparsity import DENSE, SparsityConfig, effective_macs
+from .workload import (TraceArrays, routed_moe_gemms, ssd_scan_gemms,
+                       trace_phase_gemms)
 
 __all__ = [
     "bayesopt", "calibrate", "cycle_sim", "cycle_sim_jax", "dataflow",
     "design_space", "dse", "macro_model", "mapper", "mapping", "memory",
-    "pareto", "ppa", "schedule", "workload",
+    "pareto", "ppa", "schedule", "sparsity", "workload",
     "CalibrationTable", "DataflowFit", "KernelMeasurement", "analog_point",
     "modeled_kernel_seconds",
     "SimResult", "simulate_batched",
@@ -43,7 +46,7 @@ __all__ = [
     "sample_random_sharded",
     "ALL_DATAFLOWS", "DataflowName", "dataflow_pareto_sweep",
     "fidelity_sweep", "joint_fidelity_sweep", "optimize_for_model",
-    "population_valid", "scheduled_fidelity_sweep",
+    "population_valid", "scheduled_fidelity_sweep", "sparse_fidelity_sweep",
     "EngineQoR", "evaluate_model", "evaluate_model_serving",
     "serving_objective", "tile_gemms_for_memory", "tile_splits_for_memory",
     "MappedWorkload", "Mapping", "evaluate_mapped", "greedy_mapping",
@@ -54,5 +57,7 @@ __all__ = [
     "ArrayPPA", "ServingQoR", "evaluate_peak", "evaluate_serving",
     "evaluate_workload", "qor_objective", "serving_latency_samples",
     "Schedule", "schedule_gemms", "scheduled_workload_timing",
-    "TraceArrays", "trace_phase_gemms",
+    "DENSE", "SparsityConfig", "effective_macs",
+    "TraceArrays", "routed_moe_gemms", "ssd_scan_gemms",
+    "trace_phase_gemms",
 ]

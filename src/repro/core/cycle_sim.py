@@ -86,6 +86,8 @@ import numpy as np
 from .design_space import BROADCAST, OS, SYSTOLIC, WS, DesignPoint
 from .dataflow import t_c as _t_c, t_s as _t_s
 from .memory import MemoryConfig, round_fetch_cycles
+from .sparsity import (SparsityConfig, normalize as _normalize_sparsity,
+                       sparse_round_fetch_cycles)
 
 
 @dataclass
@@ -148,16 +150,24 @@ def simulate_scheduled(p: DesignPoint, depths, n_passes,
 
 def simulate(p: DesignPoint, n_passes: int,
              mem: MemoryConfig | None = None,
-             fetch_cycles: float | None = None) -> SimResult:
+             fetch_cycles: float | None = None,
+             sparsity: SparsityConfig | None = None) -> SimResult:
     """``fetch_cycles`` overrides the per-round fetch latency F (a
     nonnegative integer-valued scalar, e.g. the GEMM-shape-aware
     ``dataflow.gemm_round_fetch_cycles``); by default F comes from the
-    shape-oblivious full-array bundle ``memory.round_fetch_cycles``."""
+    shape-oblivious full-array bundle ``memory.round_fetch_cycles``.
+    ``sparsity`` (ignored when ``fetch_cycles`` is given) derives F from
+    the compressed round bundle (``sparsity.sparse_round_fetch_cycles``)
+    — the event rules are untouched, so the dense/density-1.0 path is
+    the identical simulation bit for bit."""
     BR, BC, LSL = int(p.BR), int(p.BC), int(p.LSL)
     tc, ts = float(_t_c(p)), float(_t_s(p))
     df, ic, ol = int(p.dataflow), int(p.interconnect), bool(int(p.OL))
+    sparsity = _normalize_sparsity(sparsity)
     if fetch_cycles is not None:
         F = float(fetch_cycles)
+    elif mem is not None and sparsity is not None:
+        F = float(sparse_round_fetch_cycles(p, mem, sparsity))
     else:
         F = 0.0 if mem is None else float(round_fetch_cycles(p, mem))
     D = fifo_depth(p, F)

@@ -89,6 +89,8 @@ from .dataflow import (round_cycles as _round_cycles,
                        t_c as _t_c, t_s as _t_s)
 from .design_space import BROADCAST, OS, SYSTOLIC, WS, DesignPoint
 from .memory import MemoryConfig, round_fetch_cycles
+from .sparsity import (SparsityConfig, normalize as _normalize_sparsity,
+                       sparse_round_fetch_cycles)
 
 _NEG = -1.0e30  # -inf stand-in that survives float32 arithmetic
 
@@ -471,7 +473,8 @@ def _get_runner(key: str, statics: tuple, mesh):
 
 def simulate_batched(p: DesignPoint, n_passes,
                      mem: MemoryConfig | None = None,
-                     mesh=None, fetch_cycles=None) -> SimResult:
+                     mesh=None, fetch_cycles=None,
+                     sparsity: SparsityConfig | None = None) -> SimResult:
     """Simulate a batch of design points in one (or a few) jitted dispatches.
 
     ``p`` follows the ``evaluate_population`` convention: every field is a
@@ -500,7 +503,14 @@ def simulate_batched(p: DesignPoint, n_passes,
     GEMM-shape-aware ``dataflow.gemm_round_fetch_cycles``); the FIFO-depth
     bucketing and every event rule are unchanged — only the gate's F value
     differs, exactly as in ``cycle_sim.simulate``.
+
+    ``sparsity`` (ignored when ``fetch_cycles`` is given) derives the
+    default F from the compressed round bundle
+    (``sparsity.sparse_round_fetch_cycles``) — the event rules, FIFO
+    bucketing, and runner dispatch are untouched, so density 1.0 is the
+    identical simulation bit for bit.
     """
+    sparsity = _normalize_sparsity(sparsity)
     shape = jnp.shape(p.AL)
     ndev = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
     flat = jax.tree.map(
@@ -518,6 +528,9 @@ def simulate_batched(p: DesignPoint, n_passes,
             np.asarray(fetch_cycles, dtype=np.float32).reshape(-1), (n,))
     elif mem is None:
         F_all = np.zeros((n,), dtype=np.float32)
+    elif sparsity is not None:
+        F_all = np.asarray(sparse_round_fetch_cycles(flat, mem, sparsity),
+                           dtype=np.float32)
     else:
         F_all = np.asarray(round_fetch_cycles(flat, mem), dtype=np.float32)
     ol_all = np.asarray(flat.OL) > 0.5
@@ -651,11 +664,13 @@ def simulate_scheduled(p: DesignPoint, depths, n_passes,
 
 def simulate(p: DesignPoint, n_passes: int,
              mem: MemoryConfig | None = None,
-             fetch_cycles: float | None = None) -> SimResult:
+             fetch_cycles: float | None = None,
+             sparsity: SparsityConfig | None = None) -> SimResult:
     """Scalar-point convenience wrapper returning python floats, API-matched
     to ``cycle_sim.simulate`` (the numpy reference this module is tested
     against)."""
-    r = simulate_batched(p, n_passes, mem=mem, fetch_cycles=fetch_cycles)
+    r = simulate_batched(p, n_passes, mem=mem, fetch_cycles=fetch_cycles,
+                         sparsity=sparsity)
     return SimResult(
         total_cycles=float(r.total_cycles),
         per_pass_steady=float(r.per_pass_steady),

@@ -73,6 +73,8 @@ import jax.numpy as jnp
 from .design_space import (BROADCAST, IBW, KAPPA, SYSTOLIC, WBW, WS,
                            DesignPoint)
 from .memory import MemoryConfig, round_fetch_cycles
+from .sparsity import (SparsityConfig, apply_sparsity, normalize,
+                       per_gemm, sparse_act_bits, sparse_round_fetch_cycles)
 
 
 class Gemm(NamedTuple):
@@ -158,7 +160,8 @@ def _port_roofline(p: DesignPoint, base: jnp.ndarray,
 
 
 def round_cycles(p: DesignPoint, mem: MemoryConfig | None = None,
-                 fetch_cycles: jnp.ndarray | None = None) -> jnp.ndarray:
+                 fetch_cycles: jnp.ndarray | None = None,
+                 sparsity: SparsityConfig | None = None) -> jnp.ndarray:
     """Steady-state cycles of one (compute one weight row + make its update
     happen) round, per the 8-variant table above. With a memory model the
     DRAM port must also deliver the round's bundle (weight + act bits)
@@ -168,7 +171,11 @@ def round_cycles(p: DesignPoint, mem: MemoryConfig | None = None,
 
     ``fetch_cycles`` overrides the per-round fetch latency F (e.g. the
     GEMM-shape-aware ``gemm_round_fetch_cycles``, which charges edge tiles
-    only the bits they actually stream); when given, ``mem`` may be None."""
+    only the bits they actually stream); when given, ``mem`` may be None.
+    ``sparsity`` (ignored when ``fetch_cycles`` is given) derives F from
+    the compressed round bundle instead
+    (``sparsity.sparse_round_fetch_cycles``); density 1.0 takes the dense
+    branch, bit-exactly."""
     tc, ts = t_c(p), t_s(p)
     ws_b = jnp.where(p.OL > 0.5, jnp.maximum(tc, p.BR * ts), tc + p.BR * ts)
     ws_s = jnp.where(p.OL > 0.5, jnp.maximum(tc, ts), tc + ts)
@@ -182,19 +189,23 @@ def round_cycles(p: DesignPoint, mem: MemoryConfig | None = None,
     if fetch_cycles is None:
         if mem is None:
             return base
-        fetch_cycles = round_fetch_cycles(p, mem)
+        sparsity = normalize(sparsity)
+        fetch_cycles = round_fetch_cycles(p, mem) if sparsity is None \
+            else sparse_round_fetch_cycles(p, mem, sparsity)
     return _port_roofline(p, base, jnp.asarray(fetch_cycles, jnp.float32))
 
 
 def steady_pass_cycles(p: DesignPoint, mem: MemoryConfig | None = None,
-                       fetch_cycles: jnp.ndarray | None = None) -> jnp.ndarray:
+                       fetch_cycles: jnp.ndarray | None = None,
+                       sparsity: SparsityConfig | None = None) -> jnp.ndarray:
     """Closed-form steady-state cost of one block pass (LSL rounds) — the
     quantity the cycle simulators' ``per_pass_steady`` is validated against
     (see cycle_sim.py for the three-level fidelity chain), in both the
     infinite-bandwidth and the bandwidth-bound (``mem``) regimes.
-    ``fetch_cycles`` overrides the per-round fetch latency as in
-    ``round_cycles``."""
-    return p.LSL * round_cycles(p, mem, fetch_cycles=fetch_cycles)
+    ``fetch_cycles`` / ``sparsity`` override or compress the per-round
+    fetch latency as in ``round_cycles``."""
+    return p.LSL * round_cycles(p, mem, fetch_cycles=fetch_cycles,
+                                sparsity=sparsity)
 
 
 # backwards-compatible private alias (pre-fidelity-suite name)
@@ -229,14 +240,17 @@ def _gemm_tiles(p: DesignPoint, g: Gemm):
     return (ws_nk, ws_nn, ws_nm), (os_nm, os_nn, os_kr)
 
 
-def gemm_rounds(p: DesignPoint, g: Gemm) -> jnp.ndarray:
+def gemm_rounds(p: DesignPoint, g: Gemm,
+                sparsity: SparsityConfig | None = None) -> jnp.ndarray:
     """Per-instance (count = 1) round count of GEMM g on design p — the
     length of the round-bundle stream the DRAM port feeds through the
     prefetch FIFO. The schedule layer compares this against candidate
     depths: a GEMM of rounds <= pf never takes the FIFO feedback edge
     free(j - pf) -> fetch(j), so it executes bit-exactly on the unbounded
-    affine gate (see ``schedule.py``)."""
-    (ws_nk, ws_nn, ws_nm), (os_nm, os_nn, os_kr) = _gemm_tiles(p, g)
+    affine gate (see ``schedule.py``). ``sparsity`` counts rounds of the
+    K-compressed effective GEMM (identity when dense)."""
+    (ws_nk, ws_nn, ws_nm), (os_nm, os_nn, os_kr) = \
+        _gemm_tiles(p, apply_sparsity(g, sparsity))
     return jnp.where(p.dataflow == WS,
                      ws_nk * ws_nn * ws_nm * p.LSL,
                      os_nm * os_nn * os_kr)
@@ -274,7 +288,9 @@ def _gemm_traffic(p: DesignPoint, g: Gemm):
 
 
 def gemm_round_fetch_cycles(p: DesignPoint, g: Gemm,
-                            mem: MemoryConfig) -> jnp.ndarray:
+                            mem: MemoryConfig,
+                            sparsity: SparsityConfig | None = None
+                            ) -> jnp.ndarray:
     """GEMM-shape-aware per-round fetch latency: the cycles the DRAM port
     needs per round when each round's bundle carries only the bits GEMM g
     actually streams — total streamed traffic (edge tiles clamped to the
@@ -284,14 +300,23 @@ def gemm_round_fetch_cycles(p: DesignPoint, g: Gemm,
     Always <= the shape-oblivious ``memory.round_fetch_cycles`` (whose
     bundle assumes every tile is full), and exactly equal to it when the
     GEMM fills the array (no edge tiles). Integer-valued so event times in
-    the simulators stay exactly representable in float32."""
-    rounds, _, wbits, abits = _gemm_traffic(p, g)
+    the simulators stay exactly representable in float32.
+
+    ``sparsity`` streams the compressed operands: the traffic is that of
+    the K-compressed effective GEMM, with the activation share further
+    scaled by the activation density (then re-ceiled — bits are
+    integers). Dense configs take the identical dense path."""
+    sparsity = normalize(sparsity)
+    rounds, _, wbits, abits = _gemm_traffic(p, apply_sparsity(g, sparsity))
+    if sparsity is not None:
+        abits = sparse_act_bits(abits, sparsity)
     return jnp.ceil((wbits + abits) / rounds / mem.dram_bw_bits_per_cycle)
 
 
 def gemm_timing(p: DesignPoint, g: Gemm,
                 mem: MemoryConfig | None = None,
-                shape_aware: bool = False) -> DataflowTiming:
+                shape_aware: bool = False,
+                sparsity: SparsityConfig | None = None) -> DataflowTiming:
     """End-to-end cycle count of GEMM (M,K,N) on the array described by p.
 
     All tile counts are ceilings — edge-tile waste shows up as utilization
@@ -309,18 +334,31 @@ def gemm_timing(p: DesignPoint, g: Gemm,
     ``shape_aware=True`` replaces the shape-oblivious per-round fetch F
     with ``gemm_round_fetch_cycles`` (edge tiles charge only the bits they
     stream); the default keeps the legacy full-bundle port model bit-exact.
+
+    ``sparsity`` times the structured-sparse GEMM: rounds/tiles/traffic
+    and the ideal floor come from the K-compressed effective GEMM, and F
+    (shape-aware or not) charges the compressed streams. Dense configs
+    (and ``None``) take the identical dense code path.
     """
+    sparsity = normalize(sparsity)
+    ge = apply_sparsity(g, sparsity)
     tc = t_c(p)
     fill = _fill_cycles(p)
 
-    rounds, fill_passes, wbits, abits = _gemm_traffic(p, g)
+    rounds, fill_passes, wbits, abits = _gemm_traffic(p, ge)
+    if sparsity is not None:
+        abits = sparse_act_bits(abits, sparsity)
 
     if mem is None:
         round_c = round_cycles(p, None)
         dram = jnp.zeros_like(rounds * round_c)
     else:
-        F = gemm_round_fetch_cycles(p, g, mem) if shape_aware \
-            else round_fetch_cycles(p, mem)
+        if shape_aware:
+            F = jnp.ceil((wbits + abits) / rounds / mem.dram_bw_bits_per_cycle)
+        elif sparsity is not None:
+            F = sparse_round_fetch_cycles(p, mem, sparsity)
+        else:
+            F = round_fetch_cycles(p, mem)
         round_c = round_cycles(p, mem, fetch_cycles=F)
         # port-busy cycles: every round's bundle crosses the DRAM port
         dram = rounds * F
@@ -330,7 +368,7 @@ def gemm_timing(p: DesignPoint, g: Gemm,
     total = (steady + fill_part) * g.count
     compute = rounds * tc * g.count
 
-    ideal = g.macs / array_macs_per_cycle(p)
+    ideal = ge.macs / array_macs_per_cycle(p)
     return DataflowTiming(
         total_cycles=total,
         ideal_cycles=ideal,
@@ -345,9 +383,13 @@ def gemm_timing(p: DesignPoint, g: Gemm,
 
 def workload_timing(p: DesignPoint, gemms: list[Gemm],
                     mem: MemoryConfig | None = None,
-                    shape_aware: bool = False) -> DataflowTiming:
-    """Sum a list of GEMMs (a model's layer workload) on one design point."""
-    parts = [gemm_timing(p, g, mem, shape_aware=shape_aware) for g in gemms]
+                    shape_aware: bool = False,
+                    sparsity=None) -> DataflowTiming:
+    """Sum a list of GEMMs (a model's layer workload) on one design point.
+    ``sparsity``: a single :class:`SparsityConfig` broadcast over the
+    workload, or one (possibly ``None``) entry per GEMM."""
+    parts = [gemm_timing(p, g, mem, shape_aware=shape_aware, sparsity=sp)
+             for g, sp in zip(gemms, per_gemm(sparsity, len(gemms)))]
     tot = sum(t.total_cycles for t in parts)
     ideal = sum(t.ideal_cycles for t in parts)
     return DataflowTiming(

@@ -40,6 +40,7 @@ from .memory import MemoryConfig
 from .pareto import pareto_front
 from .ppa import evaluate_peak, evaluate_workload
 from .schedule import Schedule, schedule_gemms
+from .sparsity import SparsityConfig
 
 
 @dataclass
@@ -509,6 +510,101 @@ def joint_fidelity_sweep(
     return out
 
 
+def sparse_fidelity_sweep(
+    key: jax.Array,
+    gemms: Sequence[Gemm] | None = None,
+    n_samples: int = 512,
+    min_passes: int = 3,
+    dataflows: Sequence[DataflowName] = tuple(ALL_DATAFLOWS),
+    mem: MemoryConfig | None = None,
+    fixed: dict | None = None,
+    mesh=None,
+    sparsity=None,
+):
+    """``joint_fidelity_sweep`` under structured sparsity — the seventh
+    ``sparse`` regime of the CI smoke gate.
+
+    Every GEMM is timed at ``SMOKE_SPARSITY`` (2:4 weights, 0.5
+    activation density): the shape-aware depth solver schedules the
+    K-compressed effective GEMMs, and each GEMM's per-round fetch F_g
+    comes from ``dataflow.gemm_round_fetch_cycles(..., sparsity=...)`` —
+    the compressed streams (fewer weight rows, ceil'd scaled activation
+    bits). The same sparse F_g drives both sides of the contract: the
+    batched simulator via its ``fetch_cycles`` override (event rules and
+    FIFO bucketing untouched — the tentpole's gating discipline) and the
+    closed-form roofline via ``steady_pass_cycles(fetch_cycles=...)``.
+    The sweep therefore validates that the sparse axis keeps the
+    three-level fidelity chain intact at every (depth, sparse F_g) the
+    scheduler actually picks. Deferral, slack accounting, and the report
+    shape match ``joint_fidelity_sweep``.
+    """
+    from .dataflow import gemm_round_fetch_cycles
+
+    if mem is None:
+        mem = SMOKE_MEM
+    if sparsity is None:
+        sparsity = SMOKE_SPARSITY
+    gemms = list(gemms) if gemms is not None else list(SMOKE_SCHED_GEMMS)
+    n_samples = _round_to_mesh(n_samples, mesh)
+    out = {}
+    for dfn in dataflows:
+        key, k = jax.random.split(key)
+        pop = _sample(
+            k, n_samples, mesh,
+            dataflow=dfn.dataflow, interconnect=dfn.interconnect,
+            OL=dfn.ol, **(fixed or {}),
+        )
+        valid = np.asarray(population_valid(pop, mem, mesh))
+        sched = schedule_gemms(pop, gemms, mem, shape_aware=True,
+                               sparsity=sparsity)
+        pf = np.asarray(sched.pf)                       # (n_gemms, n)
+        fg = np.stack([np.asarray(
+            gemm_round_fetch_cycles(pop, g, mem, sparsity=sparsity),
+            np.float64) for g in gemms])
+
+        measurable = np.ones_like(valid)
+        for gi in range(len(gemms)):
+            pg = pop._replace(PF=jnp.asarray(pf[gi]))
+            measurable &= np.asarray(cycle_sim_jax.steady_measurable(
+                pg, mem=mem, fetch_cycles=fg[gi]))
+        n_deferred = int((valid & ~measurable).sum())
+        valid = valid & measurable
+        popv = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[valid]), pop)
+        pfv = pf[:, valid]
+        fgv = fg[:, valid]
+
+        nv = int(valid.sum())
+        rel = np.zeros((nv,), np.float64)
+        total = np.zeros((nv,), np.float64)
+        expect = np.zeros((nv,), np.float64)
+        slack = np.zeros((nv,), np.float64)
+        for gi in range(len(gemms)):
+            pg = popv._replace(PF=jnp.asarray(pfv[gi]))
+            passes = cycle_sim_jax.steady_state_passes(
+                pg, min_passes=min_passes, mem=mem, fetch_cycles=fgv[gi])
+            sim = cycle_sim_jax.simulate_batched(pg, passes, mem=mem,
+                                                 mesh=mesh,
+                                                 fetch_cycles=fgv[gi])
+            closed = np.asarray(
+                steady_pass_cycles(pg, mem, fetch_cycles=fgv[gi]), np.float64)
+            pps = np.asarray(sim.per_pass_steady, np.float64)
+            rel = np.maximum(rel, np.abs(pps - closed) / np.maximum(closed, 1.0))
+            total += np.asarray(sim.total_cycles, np.float64)
+            expect += passes * closed
+            slack += cycle_sim_jax.fill_drain_slack(pg, mem=mem,
+                                                    fetch_cycles=fgv[gi])
+        within = np.abs(total - expect) <= slack
+
+        out[dfn.label] = dict(
+            n=nv,
+            n_deferred=n_deferred,
+            max_rel_err=float(rel.max()) if rel.size else 0.0,
+            mean_rel_err=float(rel.mean()) if rel.size else 0.0,
+            frac_within_slack=float(within.mean()) if rel.size else 1.0,
+        )
+    return out
+
+
 def optimize_for_model(
     key: jax.Array,
     cfg: ArchConfig,
@@ -606,14 +702,22 @@ SMOKE_SCHED_GEMMS = (
     Gemm(8192.0, 4096.0, 4096.0),
 )
 
+#: Sparsity for the seventh, ``sparse`` smoke regime: 2:4 structured
+#: weights (the hardware-standard pattern) + half-density activations —
+#: both axes non-trivial, so the compressed-K tiling AND the scaled
+#: activation share of the round bundle are exercised together.
+SMOKE_SPARSITY = SparsityConfig(weight_n=2, weight_m=4, act_density=0.5)
+
 
 def _fidelity_main(argv=None):  # pragma: no cover - exercised by CI smoke run
     """CLI gate: ``python -m repro.core [--smoke]`` runs the fidelity
     sweep — in the paper's infinite-bandwidth regime, in the
     weight-bandwidth-bound, activation-bound, and shallow-prefetch regimes
     under ``SMOKE_MEM``, in the ``scheduled`` regime (per-GEMM prefetch
-    depths over a mixed-size GEMM list), and in the ``joint`` regime (the
-    mapping IR's shape-aware port model at those depths) — and fails (exit 1)
+    depths over a mixed-size GEMM list), in the ``joint`` regime (the
+    mapping IR's shape-aware port model at those depths), and in the
+    ``sparse`` regime (``SMOKE_SPARSITY`` structured sparsity driving
+    compressed-K schedules and sparse per-GEMM F) — and fails (exit 1)
     when simulator-vs-closed-form drift exceeds the per-variant error
     budget in any regime — CI's defense against any side rotting."""
     import argparse
@@ -658,12 +762,17 @@ def _fidelity_main(argv=None):  # pragma: no cover - exercised by CI smoke run
         # same mixed-size list with per-GEMM F_g (edge tiles pay only the
         # bits they stream) driving both simulator and closed forms
         regimes += [("joint", mem, dict(BC=1))]
+        # seventh regime: structured sparsity (SMOKE_SPARSITY, 2:4 weights
+        # + 0.5 act density) — compressed-K scheduling and sparse F_g
+        # driving both simulator and closed forms
+        regimes += [("sparse", mem, dict(BC=1))]
 
     print("regime,variant,n,n_deferred,max_rel_err,mean_rel_err,"
           "frac_within_slack")
     for regime, mem, fixed in regimes:
         sweep = {"scheduled": scheduled_fidelity_sweep,
-                 "joint": joint_fidelity_sweep}.get(regime, fidelity_sweep)
+                 "joint": joint_fidelity_sweep,
+                 "sparse": sparse_fidelity_sweep}.get(regime, fidelity_sweep)
         rep = sweep(jax.random.key(args.seed), n_samples=n,
                     mem=mem, fixed=fixed, mesh=mesh)
         worst = 0.0

@@ -25,6 +25,7 @@ from .design_space import BROADCAST, DesignPoint
 from .dataflow import DataflowTiming, Gemm, workload_timing
 from .memory import MemoryConfig
 from .schedule import Schedule, scheduled_workload_timing
+from .sparsity import effective_macs
 
 
 class ArrayPPA(NamedTuple):
@@ -88,7 +89,8 @@ def _act_delivery_energy_per_bit(p: DesignPoint) -> jnp.ndarray:
 def evaluate_workload(p: DesignPoint, gemms: list[Gemm],
                       mem: MemoryConfig | None = None,
                       schedule: Schedule | bool | None = None,
-                      shape_aware: bool = False) -> ArrayPPA:
+                      shape_aware: bool = False,
+                      sparsity=None) -> ArrayPPA:
     """End-to-end QoRs of design point p running a GEMM workload.
 
     Power integrates (as the paper does from simulation traces):
@@ -116,20 +118,29 @@ def evaluate_workload(p: DesignPoint, gemms: list[Gemm],
     per-round fetch (``dataflow.gemm_round_fetch_cycles`` — edge tiles pay
     only the bits they stream) instead of the full-array round bundle; the
     default keeps the legacy port model bit-exact.
+
+    ``sparsity`` (a single ``SparsityConfig`` or one entry per GEMM) times
+    and charges the structured-sparse workload: the timing runs on the
+    K-compressed effective GEMMs with compressed DRAM streams, and the
+    energy-bearing MAC count drops to ``sparsity.effective_macs`` (zero
+    activations burn no MAC energy). ``None``/density-1.0 is bit-exact
+    with the dense path.
     """
     # falsy (None or False) selects the fixed-depth path; a Schedule pytree
     # is always truthy (non-empty NamedTuple)
     if not schedule:
         timing: DataflowTiming = workload_timing(p, gemms, mem,
-                                                 shape_aware=shape_aware)
+                                                 shape_aware=shape_aware,
+                                                 sparsity=sparsity)
     else:
         timing = scheduled_workload_timing(
             p, gemms, mem, schedule if isinstance(schedule, Schedule) else None,
-            shape_aware=shape_aware)
+            shape_aware=shape_aware, sparsity=sparsity)
     f = mm.frequency(p)
     latency = timing.total_cycles / f
 
-    total_macs = sum(g.macs for g in gemms)
+    total_macs = effective_macs(gemms, sparsity) if sparsity is not None \
+        else sum(g.macs for g in gemms)
     e_compute = mm.energy_per_mac(p) * total_macs
     e_weights = timing.weight_bits * (mm.C.e_write_bit + mm.C.e_io_bit) \
         * mm._ol_energy_mult(p)

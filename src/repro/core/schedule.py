@@ -76,6 +76,7 @@ import jax.numpy as jnp
 from .dataflow import DataflowTiming, Gemm, gemm_rounds, gemm_timing
 from .design_space import PF_CHOICES, DesignPoint
 from .memory import MemoryConfig
+from .sparsity import SparsityConfig, per_gemm
 
 
 class Schedule(NamedTuple):
@@ -106,39 +107,50 @@ def engaged_depth(pf, rounds) -> jnp.ndarray:
 
 def _timing_at_depth(p: DesignPoint, g: Gemm, pf, rounds,
                      mem: MemoryConfig | None,
-                     shape_aware: bool = False) -> DataflowTiming:
+                     shape_aware: bool = False,
+                     sparsity: SparsityConfig | None = None) -> DataflowTiming:
     """GEMM timing at effective depth ``pf`` with the engagement rule
     applied (``pf`` may be a scalar candidate or a per-point array)."""
     eff = engaged_depth(jnp.broadcast_to(jnp.asarray(pf, jnp.float32),
                                          jnp.shape(rounds)), rounds)
-    return gemm_timing(p._replace(PF=eff), g, mem, shape_aware=shape_aware)
+    return gemm_timing(p._replace(PF=eff), g, mem, shape_aware=shape_aware,
+                       sparsity=sparsity)
 
 
 def gemm_depth_menu(p: DesignPoint, g: Gemm,
                     mem: MemoryConfig | None,
-                    shape_aware: bool = False) -> list[DataflowTiming]:
+                    shape_aware: bool = False,
+                    sparsity: SparsityConfig | None = None
+                    ) -> list[DataflowTiming]:
     """The candidate timings of GEMM g, one per ``PF_CHOICES`` depth (each
-    charged at its engaged effective depth), in menu (ascending) order."""
-    rounds = gemm_rounds(p, g)
+    charged at its engaged effective depth), in menu (ascending) order.
+    ``sparsity`` threads to the timing model AND the engagement rule: the
+    round-bundle stream being compared against each depth is that of the
+    K-compressed effective GEMM."""
+    rounds = gemm_rounds(p, g, sparsity=sparsity)
     menu = []
     for d in PF_CHOICES:
         if math.isinf(d):
             inf = jnp.full(jnp.shape(rounds), jnp.inf, jnp.float32)
             menu.append(gemm_timing(p._replace(PF=inf), g, mem,
-                                    shape_aware=shape_aware))
+                                    shape_aware=shape_aware,
+                                    sparsity=sparsity))
         else:
             menu.append(_timing_at_depth(p, g, d, rounds, mem,
-                                         shape_aware=shape_aware))
+                                         shape_aware=shape_aware,
+                                         sparsity=sparsity))
     return menu
 
 
 def schedule_gemm(p: DesignPoint, g: Gemm, mem: MemoryConfig | None,
-                  shape_aware: bool = False):
+                  shape_aware: bool = False,
+                  sparsity: SparsityConfig | None = None):
     """Select the effective depth of one GEMM: argmin of the closed-form
     cost over the allowed menu {d in PF_CHOICES : d <= PF}, ties broken
     toward the shallowest depth (PF_CHOICES is ascending and jnp.argmin
     returns the first minimum). Returns (pf, DataflowTiming at pf)."""
-    menu = gemm_depth_menu(p, g, mem, shape_aware=shape_aware)
+    menu = gemm_depth_menu(p, g, mem, shape_aware=shape_aware,
+                           sparsity=sparsity)
     depths = jnp.asarray(PF_CHOICES, jnp.float32)
     costs = jnp.stack([t.total_cycles for t in menu])           # (5, *batch)
     batch = costs.shape[1:]
@@ -156,17 +168,20 @@ def schedule_gemm(p: DesignPoint, g: Gemm, mem: MemoryConfig | None,
 
 def schedule_gemms(p: DesignPoint, gemms: Sequence[Gemm],
                    mem: MemoryConfig | None,
-                   shape_aware: bool = False) -> Schedule:
+                   shape_aware: bool = False,
+                   sparsity=None) -> Schedule:
     """Schedule a whole workload: one effective depth per GEMM (stacked on
     axis 0). Without a memory model (or at infinite bandwidth) every depth
     costs the same and the scheduler picks depth 1 everywhere — the FIFO
-    cannot bind, so the choice is observationally irrelevant."""
+    cannot bind, so the choice is observationally irrelevant. ``sparsity``
+    is a single :class:`SparsityConfig` or one entry per GEMM."""
     pfs, costs, rounds = [], [], []
-    for g in gemms:
-        pf, t = schedule_gemm(p, g, mem, shape_aware=shape_aware)
+    for g, sp in zip(gemms, per_gemm(sparsity, len(gemms))):
+        pf, t = schedule_gemm(p, g, mem, shape_aware=shape_aware,
+                              sparsity=sp)
         pfs.append(pf)
         costs.append(t.total_cycles)
-        rounds.append(jnp.broadcast_to(gemm_rounds(p, g),
+        rounds.append(jnp.broadcast_to(gemm_rounds(p, g, sparsity=sp),
                                        jnp.shape(t.total_cycles)))
     return Schedule(pf=jnp.stack(pfs), cost=jnp.stack(costs),
                     rounds=jnp.stack(rounds))
@@ -175,7 +190,8 @@ def schedule_gemms(p: DesignPoint, gemms: Sequence[Gemm],
 def scheduled_workload_timing(p: DesignPoint, gemms: Sequence[Gemm],
                               mem: MemoryConfig | None = None,
                               schedule: Schedule | None = None,
-                              shape_aware: bool = False) -> DataflowTiming:
+                              shape_aware: bool = False,
+                              sparsity=None) -> DataflowTiming:
     """Accumulate per-GEMM *scheduled* rooflines over a workload — the
     schedule-aware replacement for ``dataflow.workload_timing``'s single
     design-wide depth. ``schedule=None`` selects depths internally (the
@@ -185,14 +201,17 @@ def scheduled_workload_timing(p: DesignPoint, gemms: Sequence[Gemm],
     accumulated cost equals ``Schedule.cost`` for a schedule produced by
     ``schedule_gemms`` on the same point/workload/memory)."""
     parts = []
+    sparsities = per_gemm(sparsity, len(gemms))
     for i, g in enumerate(gemms):
+        sp = sparsities[i]
         if schedule is None:
-            _, t = schedule_gemm(p, g, mem, shape_aware=shape_aware)
+            _, t = schedule_gemm(p, g, mem, shape_aware=shape_aware,
+                                 sparsity=sp)
         else:
             rounds = (schedule.rounds[i] if schedule.rounds is not None
-                      else gemm_rounds(p, g))
+                      else gemm_rounds(p, g, sparsity=sp))
             t = _timing_at_depth(p, g, schedule.pf[i], rounds, mem,
-                                 shape_aware=shape_aware)
+                                 shape_aware=shape_aware, sparsity=sp)
         parts.append(t)
     tot = sum(t.total_cycles for t in parts)
     ideal = sum(t.ideal_cycles for t in parts)

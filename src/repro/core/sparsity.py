@@ -1,0 +1,155 @@
+"""Structured sparsity as a gated workload axis over the dataflow model.
+
+CIMinus (PAPERS.md) shows sparse DNN workloads change the SRAM-CIM cost
+model qualitatively: N:M-pruned weights stream fewer bits per round and
+skip whole reduction slices, while low-density activations shrink the
+activation share of the DRAM bundle. This module is the single source of
+truth for how a :class:`SparsityConfig` maps onto the repo's dense
+machinery — every consumer (closed forms, both event simulators, PPA,
+the per-GEMM scheduler) goes through the three transforms here:
+
+* **Weight N:M density** compresses the reduction axis: an N:M-pruned
+  weight matrix keeps N nonzeros per M-element group along K, so the
+  compressed operand the array actually reduces over has
+  ``K_eff = ceil(K * N/M)`` rows (``apply_sparsity``). Round counts,
+  tiling, fill passes, streamed weight bits, and MAC counts all follow
+  from the effective GEMM — no per-rule special cases.
+* **Activation density** scales only the *streamed activation bits* of
+  the per-round DRAM bundle (``sparse_act_bits``) and the energy-bearing
+  MAC count (``effective_macs``): the array timing itself is unchanged
+  (a CIM array does not skip individual zero activations), which keeps
+  the closed forms and the event simulators describing the same machine.
+* The **per-round fetch latency F** under sparsity is derived from the
+  compressed streams (``sparse_round_fetch_cycles`` for the
+  shape-oblivious bundle; ``dataflow.gemm_round_fetch_cycles`` grows a
+  ``sparsity`` argument for the shape-aware one) and stays
+  integer-valued, preserving the float32-exactness discipline the
+  simulators rely on.
+
+Gating contract (enforced by tests/test_sparsity.py the same way every
+prior axis was): ``normalize`` maps ``None`` and any density-1.0 config
+to ``None``, and every threaded call site branches on that — so the
+dense path is not "sparse math that happens to equal dense", it is the
+*identical code path*, bit for bit, in the closed forms and in both
+simulators.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Sequence, Union
+
+import jax.numpy as jnp
+
+from .memory import (MemoryConfig, round_act_bits, round_fetch_cycles,
+                     round_weight_bits)
+
+
+class SparsityConfig(NamedTuple):
+    """Structured sparsity of one GEMM's operands.
+
+    ``weight_n``/``weight_m``: N:M structured weight sparsity along the
+    reduction axis (N nonzeros kept per M consecutive elements of K);
+    ``1:1`` is dense. ``act_density``: fraction of activation bits that
+    actually stream from DRAM (1.0 = dense). The default is fully dense.
+    """
+
+    weight_n: int = 1
+    weight_m: int = 1
+    act_density: float = 1.0
+
+    @property
+    def weight_density(self) -> float:
+        return self.weight_n / self.weight_m
+
+    @property
+    def is_dense(self) -> bool:
+        return self.weight_n == self.weight_m and self.act_density == 1.0
+
+
+#: The dense identity config (weight 1:1, activation density 1.0).
+DENSE = SparsityConfig()
+
+#: A single config broadcast over a workload, or one entry per GEMM.
+SparsityLike = Optional[Union[SparsityConfig, Sequence[Optional[SparsityConfig]]]]
+
+
+def normalize(sparsity: SparsityConfig | None) -> SparsityConfig | None:
+    """Map ``None`` and any dense config to ``None``.
+
+    Every threaded call site branches on the result, so density 1.0
+    takes the literal dense code path (the bit-exactness gate), and a
+    non-trivial config is the only thing that reaches the sparse math.
+    """
+    if sparsity is None or sparsity.is_dense:
+        return None
+    if not (0 < sparsity.weight_n <= sparsity.weight_m):
+        raise ValueError(f"invalid N:M weight sparsity {sparsity.weight_n}:"
+                         f"{sparsity.weight_m}")
+    if not (0.0 < sparsity.act_density <= 1.0):
+        raise ValueError(f"invalid activation density {sparsity.act_density}")
+    return sparsity
+
+
+def per_gemm(sparsity: SparsityLike, n: int) -> list:
+    """Broadcast a workload-level ``sparsity`` argument to one entry per
+    GEMM: ``None`` / a single config fan out; a sequence must match."""
+    if sparsity is None or isinstance(sparsity, SparsityConfig):
+        return [sparsity] * n
+    out = list(sparsity)
+    if len(out) != n:
+        raise ValueError(f"per-GEMM sparsity length {len(out)} != {n} GEMMs")
+    return out
+
+
+def apply_sparsity(g, sparsity: SparsityConfig | None):
+    """The dense-equivalent GEMM of a structured-sparse one: N:M weight
+    sparsity compresses the reduction axis to ``K_eff = ceil(K * N/M)``
+    (the compressed operand holds only the nonzeros per group). Identity
+    for ``None``/dense, so call sites may apply it unconditionally."""
+    sparsity = normalize(sparsity)
+    if sparsity is None:
+        return g
+    k_eff = float(math.ceil(float(g.K) * sparsity.weight_n / sparsity.weight_m))
+    return g._replace(K=k_eff)
+
+
+def sparse_act_bits(abits, sparsity: SparsityConfig | None):
+    """Streamed activation bits under activation density: scaled and
+    re-ceiled (bits are integers), identity for ``None``/dense."""
+    sparsity = normalize(sparsity)
+    if sparsity is None:
+        return abits
+    return jnp.ceil(abits * jnp.float32(sparsity.act_density))
+
+
+def sparse_round_fetch_cycles(p, mem: MemoryConfig,
+                              sparsity: SparsityConfig | None):
+    """Shape-oblivious per-round fetch latency under compressed streams.
+
+    The sparse analog of ``memory.round_fetch_cycles``: the round bundle
+    streams ``ceil(weight_bits * N/M) + ceil(act_bits * act_density)``
+    bits. Dense configs take ``round_fetch_cycles`` itself (bit-exact
+    gate); the result stays integer-valued either way.
+    """
+    sparsity = normalize(sparsity)
+    if sparsity is None:
+        return round_fetch_cycles(p, mem)
+    wbits = jnp.ceil(round_weight_bits(p)
+                     * jnp.float32(sparsity.weight_n / sparsity.weight_m))
+    abits = jnp.ceil(round_act_bits(p) * jnp.float32(sparsity.act_density))
+    return jnp.ceil((wbits + abits) / mem.dram_bw_bits_per_cycle)
+
+
+def effective_macs(gemms, sparsity: SparsityLike = None) -> float:
+    """Energy-bearing MAC count of a (possibly sparse) workload: the
+    compressed-K GEMM volume scaled by activation density (zero
+    activations burn no MAC energy in the bit-serial array). Equals
+    ``sum(g.macs)`` exactly for ``None``/dense."""
+    total = 0.0
+    for g, sp in zip(gemms, per_gemm(sparsity, len(gemms))):
+        spn = normalize(sp)
+        if spn is None:
+            total += g.macs
+        else:
+            total += apply_sparsity(g, spn).macs * spn.act_density
+    return total

@@ -15,13 +15,38 @@ scopes them out ("focusing on Q/K/V projection operations"). We follow that
 default and expose include_attention=True to map them as streamed-weight
 GEMMs for sensitivity studies.
 
-MoE experts: with balanced top-k routing over E experts, each expert sees
-M * top_k / E tokens; emitted as `count=E` GEMMs of that M (the CIM array
-processes experts back to back with weight streaming between them — exactly
-the regime AccelCIM models).
+MoE experts (``_mlp_gemms``, the balanced summary): with top-k routing
+over E experts, exactly ``M * top_k`` token-slots are dispatched per MoE
+layer. When the batch fills every expert (slots >= E) each expert sees
+``slots / E`` tokens (count = E); when it does not — the deepseek-style
+decode regime, E = 256 >> slots — only ``floor(slots)`` experts can
+receive work, so the emitted counts shrink to match and the total MACs
+stay token-conserving (``total_macs == dense-equivalent * top_k / E``,
+property-tested across the registry). ``routed_moe_gemms`` replaces the
+balanced summary with a *routed* extraction: per-expert token counts
+drawn from a seeded multinomial or from a measured router histogram
+(``models.moe.MoEStats.load``), conserving ``M * top_k`` exactly — many
+small, load-imbalanced GEMMs, the stress case for the per-GEMM
+prefetch-depth scheduler.
+
+Encoder-decoder models lower cross-attention asymmetrically: K/V are
+projected **once over the encoder output** (M = m_enc, cached for every
+decoder position), while the decoder stream contributes only the Q and
+output projections (M = m_dec) — ``_cross_attn_gemms``. Charging all
+four projections at decoder M (the old lowering) undercounts K/V work
+in prefill and double-charges it per decode step; the fixed semantics
+are pinned against hand-computed Whisper MAC totals in
+tests/test_workload_extraction.py.
+
+SSM / recurrent scans: ``ssd_scan_gemms`` extracts the matmul content of
+the chunked SSD scan (``kernels/ssd_scan.py``: per (chunk, head) cell a
+QxQ score GEMM, a QxP intra-chunk output GEMM, and a PxN chunk-state
+GEMM), so mamba2/recurrentgemma configs finally reach the DSE with the
+shapes the kernel actually runs.
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import numpy as np
@@ -74,6 +99,19 @@ def _attn_gemms(cfg: ArchConfig, M: float, li: int) -> list[Gemm]:
     ]
 
 
+def _cross_attn_gemms(cfg: ArchConfig, m_dec: float, m_enc: float) -> list[Gemm]:
+    """Cross-attention projections of one decoder layer: K/V are computed
+    once over the encoder output (M = m_enc; cached and reused by every
+    decoder position), the decoder stream contributes only Q and the
+    output projection (M = m_dec)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    return [
+        Gemm(m_dec, d, cfg.n_heads * hd),            # Q (decoder stream)
+        Gemm(m_enc, d, 2 * cfg.n_kv_heads * hd),     # K/V (encoder output)
+        Gemm(m_dec, cfg.n_heads * hd, d),            # output projection
+    ]
+
+
 def _mlp_gemms(cfg: ArchConfig, M: float, li: int) -> list[Gemm]:
     d = cfg.d_model
     if cfg.attn == "none":
@@ -83,10 +121,17 @@ def _mlp_gemms(cfg: ArchConfig, M: float, li: int) -> list[Gemm]:
         if li < mo.first_k_dense:
             return [Gemm(M, d, mo.dense_d_ff, count=2), Gemm(M, mo.dense_d_ff, d)]
         out = [Gemm(M, d, mo.n_experts)]  # router
-        m_e = max(M * mo.top_k / mo.n_experts, 1.0)
+        # balanced routing dispatches exactly M*top_k token-slots; when
+        # that underfills the expert pool (decode with E >> slots) only
+        # floor(slots) experts can receive work — charging all E at one
+        # token each would over-count MACs by E/slots (up to 4x on
+        # deepseek-v3 decode at batch 8).
+        slots = M * mo.top_k
+        occ = max(min(float(mo.n_experts), np.floor(slots)), 1.0)
+        m_e = slots / occ
         out += [
-            Gemm(m_e, d, mo.d_ff_expert, count=2 * mo.n_experts),
-            Gemm(m_e, mo.d_ff_expert, d, count=mo.n_experts),
+            Gemm(m_e, d, mo.d_ff_expert, count=2 * occ),
+            Gemm(m_e, mo.d_ff_expert, d, count=occ),
         ]
         if mo.n_shared_experts:
             dff = mo.n_shared_experts * mo.d_ff_expert
@@ -133,8 +178,8 @@ def model_gemms(
         for li in range(cfg.n_enc_layers):
             gemms += _attn_gemms(cfg, m_enc, li) + _mlp_gemms(cfg, m_enc, li)
         for li in range(cfg.n_layers):
-            gemms += _attn_gemms(cfg, m_dec, li)      # self
-            gemms += _attn_gemms(cfg, m_dec, li)      # cross (same projections)
+            gemms += _attn_gemms(cfg, m_dec, li)            # self
+            gemms += _cross_attn_gemms(cfg, m_dec, m_enc)   # cross
             gemms += _mlp_gemms(cfg, m_dec, li)
         if include_lm_head:
             gemms.append(Gemm(m_dec, cfg.d_model, cfg.vocab_size))
@@ -149,6 +194,133 @@ def model_gemms(
 
     if mode == "train":
         # backward: dX GEMM + dW GEMM per forward GEMM -> 3x MAC volume
+        gemms = [Gemm(g.M, g.K, g.N, g.count * 3.0) for g in gemms]
+    return gemms
+
+
+def routed_moe_gemms(
+    cfg: ArchConfig,
+    mode: str = "prefill",
+    batch: int = 8,
+    seq: int = 1024,
+    router_load=None,
+    seed: int = 0,
+    include_lm_head: bool = True,
+) -> list[Gemm]:
+    """Expert-routed MoE extraction: the full model workload with each MoE
+    layer's experts charged at *actual* per-expert token counts instead of
+    the balanced ``_mlp_gemms`` summary.
+
+    Per MoE layer, the ``M * top_k`` dispatched token-slots are distributed
+    over the E routed experts by a multinomial draw (``numpy`` Generator
+    seeded with ``seed`` — deterministic, fresh draw per layer so layers
+    are imbalanced differently) with expert probabilities taken from
+    ``router_load`` — a measured (E,)-shaped router histogram, e.g.
+    ``models.moe.MoEStats.load`` — or uniform when None. The draw conserves
+    ``M * top_k`` exactly by construction: experts with c tokens emit
+    ``Gemm(c, d, d_ff_expert)`` GEMMs (gated MLP: 2 up + 1 down per
+    expert), experts with zero tokens emit nothing. The result is many
+    small, load-imbalanced GEMMs — the stress case for the per-GEMM
+    prefetch-depth scheduler — whose total MACs equal the balanced
+    summary's whenever slots >= E and differ only by granularity below.
+
+    Dense-replaced leading layers, the router, shared experts, attention
+    projections, and the LM head are emitted exactly as ``model_gemms``.
+    """
+    assert cfg.moe is not None, "routed_moe_gemms needs an MoE config"
+    assert mode in ("prefill", "decode", "train")
+    mo = cfg.moe
+    d = cfg.d_model
+    E = mo.n_experts
+    M = float(batch * seq) if mode in ("prefill", "train") else float(batch)
+    slots = int(round(M * mo.top_k))
+    if router_load is None:
+        probs = np.full(E, 1.0 / E)
+    else:
+        load = np.asarray(router_load, dtype=np.float64).reshape(-1)
+        if load.shape != (E,):
+            raise ValueError(f"router_load shape {load.shape} != ({E},)")
+        if load.min() < 0 or load.sum() <= 0:
+            raise ValueError("router_load must be a nonnegative histogram")
+        probs = load / load.sum()
+    rng = np.random.default_rng(seed)
+
+    gemms: list[Gemm] = []
+    for li in range(cfg.n_layers):
+        gemms += _attn_gemms(cfg, M, li)
+        if li < mo.first_k_dense:
+            gemms += [Gemm(M, d, mo.dense_d_ff, count=2),
+                      Gemm(M, mo.dense_d_ff, d)]
+            continue
+        gemms.append(Gemm(M, d, E))  # router
+        counts = rng.multinomial(slots, probs)
+        vals, reps = np.unique(counts[counts > 0], return_counts=True)
+        for c, k in zip(vals, reps):
+            gemms += [Gemm(float(c), d, mo.d_ff_expert, count=2.0 * float(k)),
+                      Gemm(float(c), mo.d_ff_expert, d, count=float(k))]
+        if mo.n_shared_experts:
+            dff = mo.n_shared_experts * mo.d_ff_expert
+            gemms += [Gemm(M, d, dff, count=2), Gemm(M, dff, d)]
+    if include_lm_head:
+        gemms.append(Gemm(M, cfg.d_model, cfg.vocab_size))
+    if mode == "train":
+        gemms = [Gemm(g.M, g.K, g.N, g.count * 3.0) for g in gemms]
+    return gemms
+
+
+def ssd_scan_gemms(
+    cfg: ArchConfig,
+    mode: str = "prefill",
+    batch: int = 8,
+    seq: int = 1024,
+) -> list[Gemm]:
+    """Matmul content of the chunked state-space scan — the modeled side
+    of ``kernels/ssd_scan.py``.
+
+    The SSD chunk kernel runs, per (batch*chunk, head) grid cell over
+    chunks of Q timesteps (state dim N, head dim P):
+
+      score   C @ B^T            -> Gemm(Q, N, Q)
+      output  (score * L) @ x*dt -> Gemm(Q, Q, P)
+      state   (x*dt)^T @ B       -> Gemm(P, Q, N)
+
+    (the O(n_chunks) inter-chunk recurrence is elementwise and carries no
+    GEMM content). SSM configs (mamba2) take Q/N/P/H straight from their
+    ``SSMConfig``; hybrid configs (recurrentgemma) model the RG-LRU
+    recurrence of each "rec" layer as the degenerate diagonal scan —
+    scalar state (N = 1) over ``lru_width`` channels grouped into 64-wide
+    lanes, chunked like the SSD kernel (the standard scan-as-matmul
+    lowering of a linear recurrence). Decode degenerates to Q = 1 chunks.
+    ``model_gemms`` already covers the in/out projections; these GEMMs are
+    the scan itself, additive to that list.
+    """
+    assert mode in ("prefill", "decode", "train")
+    L = float(seq) if mode in ("prefill", "train") else 1.0
+    d = cfg.d_model
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        P, N, H = float(s.head_dim), float(s.d_state), float(s.n_heads(d))
+        Q = float(min(s.chunk, int(L)))
+        n_scan_layers = cfg.n_layers
+    elif cfg.hybrid is not None:
+        h = cfg.hybrid
+        P = float(min(64, h.lru_width))
+        N = 1.0
+        H = float(h.lru_width) / P
+        Q = float(min(256, int(L)))
+        n_scan_layers = sum(
+            1 for li in range(cfg.n_layers)
+            if h.pattern[li % len(h.pattern)] == "rec")
+    else:
+        raise ValueError("ssd_scan_gemms needs an SSM or hybrid config")
+    n_chunks = float(math.ceil(L / Q))
+    cells = float(batch) * n_chunks * H * n_scan_layers
+    gemms = [
+        Gemm(Q, N, Q, count=cells),   # score  C @ B^T
+        Gemm(Q, Q, P, count=cells),   # intra-chunk output
+        Gemm(P, Q, N, count=cells),   # chunk-final state
+    ]
+    if mode == "train":
         gemms = [Gemm(g.M, g.K, g.N, g.count * 3.0) for g in gemms]
     return gemms
 

@@ -21,6 +21,7 @@ from repro.core import design_space as ds
 from repro.core.dataflow import Gemm
 from repro.core.design_space import BROADCAST, OS, SYSTOLIC, WS, make_point
 from repro.core.memory import MemoryConfig
+from repro.core.sparsity import SparsityConfig
 
 #: All 8 dataflow variants (dataflow, interconnect, OL) — the parametrize
 #: axis the suites cross their property draws with.
@@ -145,6 +146,24 @@ def buffer_configs(wcaps_kb=(8, 512, 4096), acaps_kb=(8, 512, 4096)):
 def prefetch_depths():
     """The effective/capacity depth menu, shallow first."""
     return st.sampled_from(DEPTHS)
+
+
+#: Hardware-plausible structured weight patterns (N:M with N <= M), dense
+#: identity included — the sparsity suites' weight axis.
+NM_PATTERNS = ((1, 1), (4, 8), (2, 4), (1, 4), (1, 2))
+
+#: Activation-density corners including the dense identity.
+ACT_DENSITIES = (1.0, 0.75, 0.5, 0.25)
+
+
+def sparsity_configs(patterns=NM_PATTERNS, densities=ACT_DENSITIES):
+    """``SparsityConfig`` strategy over the N:M x activation-density grid;
+    includes the dense identity (1:1 @ 1.0), which the gating contract
+    must collapse to the plain dense path."""
+    return st.tuples(st.sampled_from(tuple(patterns)),
+                     st.sampled_from(tuple(densities))).map(
+        lambda t: SparsityConfig(weight_n=t[0][0], weight_m=t[0][1],
+                                 act_density=t[1]))
 
 
 def trace_configs(max_requests=8, max_prompt=12, max_decode=8):

@@ -204,6 +204,34 @@ def test_kernel_cycles_csv_schema_and_invariants():
             (r["dataflow"], r["fit_r2"], table.fits[r["dataflow"]].r2)
 
 
+def test_sparsity_sweep_csv_matches_code():
+    """The sparsity_sweep artifact is a deterministic closed-form grid
+    (like fig13/fig14): regenerate it in full via ``sparsity_sweep_rows``
+    and assert the grid keys exactly and the QoR columns at 1e-4
+    relative. The dense rows must additionally show a perfect gated-path
+    record: zero mismatches and speedup exactly 1."""
+    from benchmarks.sparsity_sweep import HEADER, sparsity_sweep_rows
+
+    with open(RESULTS.parent / "bench" / "sparsity_sweep.csv",
+              newline="") as f:
+        rows = list(csv.reader(f))
+    header, rows = rows[0], rows[1:]
+    assert header == HEADER
+    regen = sparsity_sweep_rows()
+    assert len(rows) == len(regen)
+    for got, want in zip(rows, regen):
+        # grid keys (dataflow label, N, M, act density): exact
+        assert got[0] == str(want[0]), (got, want)
+        assert [float(x) for x in got[1:4]] == [float(w) for w in want[1:4]]
+        for gi, wi in zip(got[4:10], want[4:10]):
+            assert _close(gi, wi), (got, want)
+        assert int(got[10]) == int(want[10]) == 0, (got, want)
+        if float(got[1]) == float(got[2]) and float(got[3]) == 1.0:
+            assert float(got[9]) == 1.0, got  # dense speedup is exact
+        else:
+            assert float(got[9]) >= 1.0 - 1e-9, got
+
+
 def test_table3_memory_columns_bounded_by_depth_extremes(table3_rows):
     """The mem_* columns were produced at the searched (unrecorded) PF:
     depth monotonicity bounds them between the PF=inf and PF=1 evaluations

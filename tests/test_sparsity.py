@@ -1,0 +1,228 @@
+"""Structured-sparsity workload axis (core/sparsity.py + gated threading).
+
+Contract under test (ISSUE 10 tentpole):
+  * gating: ``None`` and every density-1.0 config normalize to ``None``
+    and take the *identical* dense code path — bit-exact equality (not
+    approx) against the plain dense evaluation in the closed forms, the
+    scheduled PPA evaluator, and BOTH event simulators, across all 8
+    dataflow variants;
+  * compression: N:M weight sparsity ceil-compresses the reduction axis
+    (``K_eff = ceil(K * N/M)``) and can only ever remove cost — sparse
+    totals/ideals <= dense on every drawn (point, GEMM, mem, config);
+  * exactness: the sparse per-round fetch F stays integer-valued (the
+    simulators' float32-exact event-time discipline);
+  * conservation: ``effective_macs`` equals the hand-computed
+    ``ceil(K*N/M) * M * N * count * act_density`` sum, and collapses to
+    ``sum(g.macs)`` exactly when dense;
+  * simulators: numpy == JAX bit-exact under a sparsity config, and the
+    ``sparsity=`` entry point == the explicit ``fetch_cycles=`` override
+    it is defined to equal;
+  * fidelity: the seventh CI regime (sparse closed forms vs both event
+    sims at the scheduler's chosen depths and sparse per-GEMM F) stays
+    inside the 1e-4 budget in-suite;
+  * validation: malformed N:M patterns / densities raise, and the
+    per-GEMM broadcast rules hold.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import cycle_sim, cycle_sim_jax
+from repro.core.dataflow import (Gemm, gemm_round_fetch_cycles, gemm_timing,
+                                 steady_pass_cycles)
+from repro.core.design_space import make_point
+from repro.core.dse import SMOKE_MEM, SMOKE_SPARSITY, sparse_fidelity_sweep
+from repro.core.memory import MemoryConfig
+from repro.core.ppa import evaluate_workload
+from repro.core.sparsity import (DENSE, SparsityConfig, apply_sparsity,
+                                 effective_macs, normalize, per_gemm,
+                                 sparse_round_fetch_cycles)
+from tests.strategies import (VARIANTS, design_points, memory_configs,
+                              mixed_gemm_lists, point_params,
+                              sparsity_configs)
+
+MEM = MemoryConfig(dram_bw_bits_per_cycle=1024.0)
+
+#: Density-1.0 spellings the gate must collapse — including a non-1:1
+#: pattern whose density is still 1.0.
+DENSE_SPELLINGS = (None, DENSE, SparsityConfig(1, 1, 1.0),
+                   SparsityConfig(4, 4, 1.0))
+
+GEMMS = [Gemm(8.0, 128.0, 128.0), Gemm(512.0, 1024.0, 1024.0),
+         Gemm(100.0, 300.0, 96.0, count=3.0)]
+
+
+def _fields(t):
+    return [float(x) for x in t]
+
+
+# ---------------------------------------------------------------------------
+# Config surface: normalize / per_gemm / apply_sparsity / effective_macs
+# ---------------------------------------------------------------------------
+
+def test_normalize_gates_dense_and_validates():
+    for sp in DENSE_SPELLINGS:
+        assert normalize(sp) is None, sp
+    sp = SparsityConfig(2, 4, 0.5)
+    assert normalize(sp) is sp
+    for bad in (SparsityConfig(0, 4, 0.5), SparsityConfig(5, 4, 0.5),
+                SparsityConfig(-1, 4, 0.5), SparsityConfig(2, 4, 0.0),
+                SparsityConfig(2, 4, -0.5), SparsityConfig(2, 4, 1.5)):
+        with pytest.raises(ValueError):
+            normalize(bad)
+
+
+def test_per_gemm_broadcast_rules():
+    sp = SparsityConfig(2, 4, 0.5)
+    assert per_gemm(None, 3) == [None, None, None]
+    assert per_gemm(sp, 3) == [sp, sp, sp]
+    assert per_gemm([sp, None, DENSE], 3) == [sp, None, DENSE]
+    with pytest.raises(ValueError):
+        per_gemm([sp, sp], 3)
+
+
+def test_apply_sparsity_compresses_reduction_axis():
+    g = Gemm(8.0, 100.0, 16.0)
+    assert apply_sparsity(g, None) is g
+    assert apply_sparsity(g, DENSE) is g
+    assert apply_sparsity(g, SparsityConfig(2, 4, 1.0)).K == 50.0
+    assert apply_sparsity(g, SparsityConfig(1, 4, 0.5)).K == 25.0
+    # ceiling, not truncation: 10 * 1/3 -> 4 kept rows
+    assert apply_sparsity(Gemm(2.0, 10.0, 2.0), SparsityConfig(1, 3)).K == 4.0
+    # M/N/count untouched
+    ge = apply_sparsity(Gemm(7.0, 64.0, 9.0, count=2.5), SparsityConfig(1, 2))
+    assert (ge.M, ge.N, ge.count) == (7.0, 9.0, 2.5)
+
+
+@given(gs=mixed_gemm_lists(), sp=sparsity_configs())
+@settings(max_examples=40, deadline=None)
+def test_effective_macs_conservation(gs, sp):
+    """effective_macs == hand-computed compressed-K volume * act density;
+    exactly sum(g.macs) for every dense spelling."""
+    want = sum(
+        math.ceil(g.K * sp.weight_n / sp.weight_m) * g.M * g.N * g.count
+        * sp.act_density for g in gs)
+    assert effective_macs(gs, sp) == pytest.approx(want, rel=1e-12)
+    dense = sum(g.macs for g in gs)
+    for spelling in DENSE_SPELLINGS:
+        assert effective_macs(gs, spelling) == dense
+
+
+# ---------------------------------------------------------------------------
+# Gating: density 1.0 is bit-identical to the plain dense path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+def test_density_one_bit_identical_closed_forms(df, ic, ol):
+    p = make_point(AL=32, PC=8, LSL=4, OL=ol, BR=3, BC=1, TL=64,
+                   dataflow=df, interconnect=ic, PF=4)
+    for g in GEMMS:
+        for shape_aware in (False, True):
+            ref = _fields(gemm_timing(p, g, MEM, shape_aware=shape_aware))
+            for sp in DENSE_SPELLINGS:
+                got = _fields(gemm_timing(p, g, MEM, shape_aware=shape_aware,
+                                          sparsity=sp))
+                assert got == ref, (g, shape_aware, sp)
+    ref = _fields(evaluate_workload(p, GEMMS, mem=MEM, schedule=True,
+                                    shape_aware=True))
+    for sp in DENSE_SPELLINGS:
+        got = _fields(evaluate_workload(p, GEMMS, mem=MEM, schedule=True,
+                                        shape_aware=True, sparsity=sp))
+        assert got == ref, sp
+
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+def test_density_one_bit_identical_simulators(df, ic, ol):
+    p = make_point(AL=32, PC=8, LSL=4, OL=ol, BR=3, BC=1, TL=64,
+                   dataflow=df, interconnect=ic, PF=2)
+    ref_np = cycle_sim.simulate(p, 5, mem=MEM)
+    ref_jx = cycle_sim_jax.simulate(p, 5, mem=MEM)
+    for sp in DENSE_SPELLINGS:
+        got_np = cycle_sim.simulate(p, 5, mem=MEM, sparsity=sp)
+        got_jx = cycle_sim_jax.simulate(p, 5, mem=MEM, sparsity=sp)
+        assert got_np == ref_np, sp
+        assert float(got_jx.total_cycles) == float(ref_jx.total_cycles), sp
+        assert float(got_jx.per_pass_steady) == float(ref_jx.per_pass_steady)
+
+
+# ---------------------------------------------------------------------------
+# Sparse math: monotone, integer-valued F, simulator agreement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+@given(kw=point_params(), sp=sparsity_configs(), mem=memory_configs())
+@settings(max_examples=10, deadline=None)
+def test_sparsity_never_costs(df, ic, ol, kw, sp, mem):
+    """Compressing work can only remove cost: sparse total/ideal/streamed
+    bits <= dense, on every drawn (point, GEMM, mem, config)."""
+    p = make_point(OL=ol, dataflow=df, interconnect=ic, **kw)
+    for g in GEMMS:
+        for shape_aware in (False, True):
+            dense = gemm_timing(p, g, mem, shape_aware=shape_aware)
+            sparse = gemm_timing(p, g, mem, shape_aware=shape_aware,
+                                 sparsity=sp)
+            assert float(sparse.total_cycles) <= float(dense.total_cycles)
+            assert float(sparse.ideal_cycles) <= float(dense.ideal_cycles)
+            assert float(sparse.weight_bits) <= float(dense.weight_bits)
+            assert float(sparse.act_bits) <= float(dense.act_bits)
+
+
+@given(kw=point_params(), sp=sparsity_configs(), mem=memory_configs())
+@settings(max_examples=25, deadline=None)
+def test_sparse_fetch_cycles_integer_valued(kw, sp, mem):
+    p = make_point(**kw)
+    f = float(sparse_round_fetch_cycles(p, mem, sp))
+    assert f == math.floor(f) and f >= 0.0
+    for g in GEMMS:
+        fg = float(gemm_round_fetch_cycles(p, g, mem, sparsity=sp))
+        assert fg == math.floor(fg) and fg >= 0.0
+        assert fg <= float(gemm_round_fetch_cycles(p, g, mem))
+
+
+@pytest.mark.parametrize("df,ic,ol", VARIANTS)
+def test_sparse_simulators_bit_exact(df, ic, ol):
+    """numpy == JAX under a sparsity config, and the ``sparsity=`` entry
+    point is exactly the ``fetch_cycles=`` override it is defined as —
+    the event rules themselves never see the sparsity."""
+    p = make_point(AL=32, PC=8, LSL=4, OL=ol, BR=3, BC=1, TL=64,
+                   dataflow=df, interconnect=ic, PF=2)
+    sp = SMOKE_SPARSITY
+    r_np = cycle_sim.simulate(p, 5, mem=MEM, sparsity=sp)
+    r_jx = cycle_sim_jax.simulate(p, 5, mem=MEM, sparsity=sp)
+    assert float(r_jx.total_cycles) == r_np.total_cycles
+    assert float(r_jx.per_pass_steady) == r_np.per_pass_steady
+    f = float(sparse_round_fetch_cycles(p, MEM, sp))
+    assert cycle_sim.simulate(p, 5, mem=MEM, fetch_cycles=f) == r_np
+    # closed-form steady vs the measured per-pass steady at the sparse F
+    closed = float(steady_pass_cycles(p, MEM, sparsity=sp))
+    assert r_np.per_pass_steady == pytest.approx(closed, rel=1e-4)
+
+
+def test_sparse_fidelity_sweep_smoke():
+    """The seventh CI regime in-suite: sparse shape-aware schedules over
+    the smoke GEMM list stay inside the 1e-4 budget on a small
+    population."""
+    rep = sparse_fidelity_sweep(jax.random.key(1), n_samples=12,
+                                fixed=dict(BC=1))
+    assert len(rep) == 8
+    for label, r in rep.items():
+        assert r["n"] + r["n_deferred"] > 0, label
+        assert r["max_rel_err"] <= 1e-4, (label, r)
+        assert r["frac_within_slack"] == 1.0, (label, r)
+
+
+@given(p=design_points(), sp=sparsity_configs())
+@settings(max_examples=15, deadline=None)
+def test_scheduled_sparse_dominates_dense_cost(p, sp):
+    """The sparse scheduled evaluator can only speed the workload up, and
+    dense spellings of the config reproduce the dense QoRs bit for bit."""
+    dense = evaluate_workload(p, GEMMS, mem=SMOKE_MEM, schedule=True,
+                              shape_aware=True)
+    sparse = evaluate_workload(p, GEMMS, mem=SMOKE_MEM, schedule=True,
+                               shape_aware=True, sparsity=sp)
+    assert float(sparse.latency_s) <= float(dense.latency_s)
+    if normalize(sp) is None:
+        assert _fields(sparse) == _fields(dense)
